@@ -1,0 +1,65 @@
+"""Ablations for the two TPU-adaptation assumptions (DESIGN.md §7.1/7.2).
+
+1. γ-bucket quantization (continuous γ → 8 buckets, rounded UP): how much
+   work is over-pruned, and does the waiting cost stay fully offset?
+2. Pruning granularity (single columns → 128-lane blocks): accuracy cost
+   of block-mean priority selection, measured on the Fig. 3 MLP setup.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, paper_scale_model, save_json
+from benchmarks.imputation import train_mlp
+from repro.core.workload import DEFAULT_BUCKETS, bucket_for_gamma
+
+
+def bucket_waste(n_buckets: int, samples: int = 2000) -> tuple:
+    """Mean over-pruning (bucketγ − exactγ) and max residual wait for a
+    uniform γ* distribution, under round-up bucketing."""
+    buckets = tuple(i / n_buckets for i in range(n_buckets))
+    rng = np.random.default_rng(0)
+    gammas = rng.uniform(0, buckets[-1], samples)
+    over = []
+    residual_wait = []
+    for g in gammas:
+        b = buckets[bucket_for_gamma(g, buckets)]
+        over.append(b - g)
+        residual_wait.append(max(0.0, g - b))   # >0 would mean waiting remains
+    return float(np.mean(over)), float(np.max(residual_wait))
+
+
+def main() -> list:
+    rows = []
+    m = paper_scale_model()
+    waste = {}
+    for n in (2, 4, 8, 16):
+        over, resid = bucket_waste(n)
+        # over-pruned work costs accuracy, not time; residual wait must be 0
+        waste[n] = {"mean_overprune": over, "max_residual_wait": resid}
+        rows.append(csv_row(
+            f"ablate_buckets_n{n}", 0.0,
+            f"mean_overpruned_gamma={over:.4f},max_residual_wait={resid:.4f}"))
+    rows.append(csv_row(
+        "ablate_buckets_roundup_offsets_all_wait", 0.0,
+        f"holds={all(v['max_residual_wait'] == 0.0 for v in waste.values())}"))
+
+    # granularity: per-column (block=1 equivalent via block=2 lanes... we
+    # compare 2 vs 16 vs 64-lane blocks at fixed gamma on the MLP task)
+    acc = {}
+    for block in (2, 16, 64):
+        acc[block] = float(np.mean(
+            [train_mlp("zero", gamma=0.5, steps=40, block=block, seed=s)
+             for s in (0, 1)]))
+        rows.append(csv_row(f"ablate_granularity_block{block}", 0.0,
+                            f"acc={acc[block]:.3f}"))
+    spread = max(acc.values()) - min(acc.values())
+    rows.append(csv_row("ablate_granularity_cost", 0.0,
+                        f"acc_spread={spread:.3f},"
+                        f"block_pruning_cheap={spread < 0.05}"))
+    save_json("ablations", {"bucket_waste": waste, "granularity_acc": acc})
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

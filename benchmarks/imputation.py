@@ -1,0 +1,102 @@
+"""Fig. 3 reproduction: imputation policy (Same / Average / Zero) vs ACC.
+
+A controlled classifier is trained with γ=0.5 resizing on every step; the
+pruned gradient rows are imputed by each policy via
+``repro.core.resizing.impute_gradients``. The paper's finding to validate:
+Same best, Zero beats Average, all below the unpruned baseline.
+
+The model is a 2-layer MLP classifier on the pattern-image task (the
+controlled matmul is exactly the paper's Fig. 2 dataflow, explicit and
+imperative so each policy is applied literally).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, save_json
+from repro.core import resizing
+from repro.data.pipeline import PatternImageStream, patchify
+
+
+def train_mlp(imputation: str, *, gamma: float = 0.5, steps: int = 150,
+              hidden: int = 256, block: int = 16, lr: float = 5e-2,
+              seed: int = 0, rotate_every: int = 10) -> float:
+    rng = np.random.default_rng(seed)
+    d_in, n_cls = 64 * 48, 10
+    w1 = jnp.asarray(rng.standard_normal((d_in, hidden)) * (d_in ** -0.5),
+                     jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((hidden, n_cls)) * (hidden ** -0.5),
+                     jnp.float32)
+    nb = hidden // block
+    kc = max(1, nb - int(round(gamma * nb)))
+    stream = iter(PatternImageStream(batch_size=64, seed=seed))
+    test = iter(PatternImageStream(batch_size=64, seed=seed + 999))
+    prev_g2 = jnp.zeros_like(w2)
+
+    @jax.jit
+    def step(w1, w2, keep, x, y, prev_g2):
+        def loss_fn(w1, w2):
+            h = jax.nn.relu(x @ w1)
+            # the paper's pruned second matmul: prune hidden (contraction)
+            logits = resizing.resized_matmul(h, w2, keep, block=block)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
+        loss, (g1, g2) = jax.value_and_grad(loss_fn, (0, 1))(w1, w2)
+        kept = resizing.keep_mask(keep, nb, block)
+        g2_imp = resizing.impute_rows(g2, kept, imputation, prev_g2)
+        # "Same" keeps each row's most recent REAL gradient (paper Fig. 3)
+        new_prev = jnp.where(kept[:, None], g2, prev_g2)
+        return w1 - lr * g1, w2 - lr * g2_imp, loss, new_prev
+
+    keep = jnp.arange(nb, dtype=jnp.int32)[:kc]
+    for i in range(steps):
+        b = next(stream)
+        x = jnp.asarray(patchify(b["images"]).reshape(64, -1))
+        y = jnp.asarray(b["labels"])
+        # keep set rotates every few steps (priority-style slow rotation,
+        # so a pruned row's "previous" gradient is recent — Sec. III-B)
+        if gamma > 0.0 and i % rotate_every == 0:
+            keep = jnp.asarray(np.sort(rng.choice(nb, kc, replace=False)),
+                               jnp.int32)
+        elif gamma == 0.0:
+            keep = jnp.arange(nb, dtype=jnp.int32)
+        w1, w2, loss, prev_g2 = step(w1, w2, keep, x, y, prev_g2)
+
+    # eval
+    correct = total = 0
+    for _ in range(8):
+        b = next(test)
+        x = jnp.asarray(patchify(b["images"]).reshape(64, -1))
+        logits = jax.nn.relu(x @ w1) @ w2
+        correct += int((np.asarray(logits.argmax(-1)) == b["labels"]).sum())
+        total += 64
+    return correct / total
+
+
+def main(steps: int = 40) -> list:
+    rows = []
+    accs = {}
+    for policy in ("baseline", "same", "zero", "average"):
+        if policy == "baseline":
+            acc = np.mean([train_mlp("zero", gamma=0.0, steps=steps, seed=s)
+                           for s in (0, 1)])
+        else:
+            acc = np.mean([train_mlp(policy, gamma=0.75, steps=steps, seed=s)
+                           for s in (0, 1)])
+        accs[policy] = float(acc)
+        rows.append(csv_row(f"fig3_imputation_{policy}", 0.0,
+                            f"acc={acc:.3f}"))
+    # The decision-relevant claim (Zero beats Average; Zero is the paper's
+    # final choice). Note: the paper found Same best at full ViT scale; at
+    # our reduced scale stale gradients hurt more than zeros — recorded as
+    # a refuted sub-hypothesis in EXPERIMENTS.md §Paper-validation.
+    ok = accs["zero"] >= accs["average"] and accs["baseline"] >= accs["zero"]
+    rows.append(csv_row("fig3_ordering_zero>=average", 0.0, f"holds={ok}"))
+    save_json("fig3_imputation", accs)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

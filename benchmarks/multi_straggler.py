@@ -1,0 +1,117 @@
+"""Fig. 11 reproduction: multi-straggler λ sweep.
+
+4 of 8 ranks straggle with χ = {8, 6, 4, 2}. λ = how many of them (from
+the slowest down) run MIGRATION; the rest run resizing to T_min (Alg. 2).
+RT modeled at paper scale with Φ1 comm costs; ACC modeled from the real
+per-γ accuracy curve measured in the Fig. 5 benchmark (resizing is the
+only lossy component; migration is exact). The controller's own Eq. (3)
+prediction of the sweet spot is reported against the sweep's argmin.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import (OUT_DIR, PAPER_E, csv_row, paper_scale_model,
+                               save_json)
+from repro.config import WorkloadControlConfig
+from repro.core.controller import (SemiController, eq3_migration_prefix,
+                                   pretest_cost_functions)
+
+NUM_BLOCKS = 64
+STRAGGLER_CHIS = (8.0, 6.0, 4.0, 2.0)
+
+
+def sweep_lambda(lam: int):
+    """Returns (modeled step time, mean resize γ over the resizing group)."""
+    m = paper_scale_model()
+    costs = pretest_cost_functions(m, NUM_BLOCKS, e=PAPER_E)
+    chi = np.ones(PAPER_E)
+    chi[: len(STRAGGLER_CHIS)] = STRAGGLER_CHIS
+    t_min = m.matmul_time + m.other_time
+    work = np.ones(PAPER_E)
+    mig_volume = 0.0
+    gammas = []
+    for i, c in enumerate(chi):
+        if c <= 1.0:
+            continue
+        excess = 1.0 - 1.0 / c          # work fraction to shed to hit t_min
+        if i < lam:                      # migration group (lossless)
+            work[i] = 1.0 - excess
+            mig_volume += excess * NUM_BLOCKS
+        else:                            # resizing group (lossy)
+            work[i] = 1.0 - excess
+            gammas.append(excess)
+    # helpers absorb migrated work
+    helpers = [i for i in range(PAPER_E) if chi[i] <= 1.0]
+    for i in helpers:
+        work[i] += (mig_volume / NUM_BLOCKS) / max(len(helpers), 1)
+    t = m.step_time(chi, work) + (costs.phi1(mig_volume) if mig_volume else 0)
+    return t, (float(np.mean(gammas)) if gammas else 0.0)
+
+
+def acc_model(mean_gamma: float) -> float:
+    """Interpolate the REAL γ→ACC curve measured by benchmarks/homo_resizing
+    (falls back to a linear model if that benchmark hasn't run yet)."""
+    path = os.path.join(OUT_DIR, "fig56_homo_resizing.json")
+    pts = {0.0: None}
+    if os.path.exists(path):
+        data = json.load(open(path))
+        base = data["acc"].get("0.0/baseline")
+        if base:
+            pts = {0.0: base}
+            for k, v in data["acc"].items():
+                if v is None or "priority" not in k:
+                    continue
+                g = float(k.split("/")[0])
+                pts[g] = v
+    if len(pts) > 1 and None not in pts.values():
+        gs = np.array(sorted(pts))
+        accs = np.array([pts[g] for g in gs])
+        return float(np.interp(mean_gamma, gs, accs))
+    return 1.0 - 0.25 * mean_gamma       # fallback linear loss model
+
+
+def main() -> list:
+    rows = []
+    table = {}
+    best_lam, best_t = None, np.inf
+    for lam in range(0, 5):
+        t, g = sweep_lambda(lam)
+        # Fig. 7 observation: pruning on a straggler SUBSET dilutes the
+        # homogeneous-γ accuracy loss by the resizing-rank fraction
+        n_resize = 4 - lam
+        a = acc_model(g * n_resize / PAPER_E)
+        table[lam] = {"rt": t, "mean_gamma": g, "acc": a}
+        rows.append(csv_row(f"fig11_lambda{lam}", t * 1e6,
+                            f"step_s={t:.3f},mean_resize_gamma={g:.2f},"
+                            f"acc={a:.3f}"))
+        # "sweet spot": fastest λ whose modeled loss vs the lossless
+        # λ=4 stays under 2% (the paper's "small accuracy penalty")
+        pass
+    lossless = table[4]["acc"]
+    for lam in range(0, 5):
+        if lossless - table[lam]["acc"] < 0.02 + 1e-9 \
+                and table[lam]["rt"] < best_t:
+            best_lam, best_t = lam, table[lam]["rt"]
+
+    # what does the controller's Eq.(3) pick?
+    m = paper_scale_model()
+    costs = pretest_cost_functions(m, NUM_BLOCKS, e=PAPER_E)
+    chi = np.ones(PAPER_E)
+    chi[:4] = STRAGGLER_CHIS
+    times = m.times(chi, np.ones(PAPER_E))
+    x = eq3_migration_prefix(np.sort(times)[::-1], np.full(PAPER_E, NUM_BLOCKS),
+                             costs, PAPER_E)
+    rows.append(csv_row("fig11_sweet_spot", 0.0,
+                        f"sweep_best_lambda={best_lam},eq3_pick={x},"
+                        f"paper_spot=3"))
+    save_json("fig11_multi_straggler",
+              {"sweep": table, "eq3_pick": x, "best": best_lam})
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,130 @@
+"""§Roofline report generator: reads the dry-run JSONs and emits the
+per-(arch × shape) three-term roofline table (also consumed by
+EXPERIMENTS.md).
+
+Correction applied here (validated empirically, see EXPERIMENTS.md
+§Dry-run): XLA's ``cost_analysis()`` and our HLO parse count a ``while``
+body ONCE, not × trip count, so scan-over-layers programs under-report all
+three terms by up to L×. Each term therefore uses
+max(HLO-derived, analytic floor); both values are retained in the JSON.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ROOT, csv_row
+from repro.config import INPUT_SHAPES, get_config
+from repro.launch import hlo_analysis as H
+
+DRYRUN_DIR = os.path.join(ROOT, "experiments", "dryrun")
+
+MESH_SHAPES = {"pod16x16": {"data": 16, "model": 16},
+               "pod2x16x16": {"pod": 2, "data": 16, "model": 16}}
+
+
+def corrected_terms(r: dict, mesh: str) -> dict:
+    from repro.launch.specs import effective_model_cfg
+    cfg = effective_model_cfg(get_config(r["arch"]), INPUT_SHAPES[r["shape"]])
+    shape = INPUT_SHAPES[r["shape"]]
+    chips = r["chips"]
+    roof = r["roofline"]
+    hlo_flops = roof["flops_per_device"] * chips
+    hlo_bytes = roof["bytes_per_device"] * chips
+    hlo_coll = roof["coll_bytes_per_device"] * chips
+    an_flops = H.analytic_step_flops(cfg, shape)
+    an_bytes = H.analytic_step_bytes(cfg, shape)
+    an_coll = H.analytic_step_collective_bytes(cfg, shape, MESH_SHAPES[mesh])
+    flops = max(hlo_flops, an_flops)
+    nbytes = max(hlo_bytes, an_bytes)
+    coll = max(hlo_coll, an_coll)
+    terms = {
+        "compute_s": flops / (chips * H.PEAK_FLOPS),
+        "memory_s": nbytes / (chips * H.HBM_BW),
+        "collective_s": coll / (chips * H.LINK_BW),
+        "hlo": {"flops": hlo_flops, "bytes": hlo_bytes, "coll": hlo_coll},
+        "analytic": {"flops": an_flops, "bytes": an_bytes, "coll": an_coll},
+        "model_flops": H.model_flops(cfg, shape),
+    }
+    terms["useful_flops_ratio"] = terms["model_flops"] / max(flops, 1.0)
+    terms["dominant"] = max(
+        ("compute", "memory", "collective"),
+        key=lambda k: terms[f"{k}_s"])
+    terms["bound_s"] = terms[f"{terms['dominant']}_s"]
+    return terms
+
+
+def load_all(mesh: str = "pod16x16"):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        r = json.load(open(path))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def improvement_hint(arch: str, shape: str, dom: str) -> str:
+    """One sentence on what would move the dominant term down."""
+    if dom == "collective":
+        return ("reduce TP all-reduce volume: overlap with compute, "
+                "reduce-scatter+all-gather decomposition, or shrink the "
+                "dispatched token buffers (MoE)")
+    if dom == "memory":
+        if shape.startswith("decode") or shape == "long_500k":
+            return "shrink KV reads: GQA head dedup, bf16->int8 cache, window"
+        return ("cut activation traffic: remat policy, fused xent (skip "
+                "materialized logits), bf16 activations")
+    return "raise MXU utilization: larger per-core tiles, fused matmuls"
+
+
+def table_markdown(mesh: str = "pod16x16") -> str:
+    rows = [
+        "| arch | shape | kind | compute s | memory s | collective s | "
+        "dominant | MODEL/HLO | HBM GiB/dev | what would move it |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(load_all(mesh).items()):
+        t = corrected_terms(r, mesh)
+        mem = r.get("memory_analysis", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)) / 2 ** 30
+        rows.append(
+            f"| {arch} | {shape} | {r['kind']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"**{t['dominant']}** | {t['useful_flops_ratio']:.2f} | "
+            f"{hbm:.1f} | {improvement_hint(arch, shape, t['dominant'])} |")
+    return "\n".join(rows)
+
+
+def main() -> list:
+    rows = []
+    data = load_all()
+    if not data:
+        rows.append(csv_row("roofline_missing", 0.0, "run dryrun first"))
+        return rows
+    dominant_counts = {}
+    worst = (None, 0.0)
+    for (arch, shape), r in sorted(data.items()):
+        t = corrected_terms(r, "pod16x16")
+        rows.append(csv_row(
+            f"roofline_{arch}__{shape}", t["bound_s"] * 1e6,
+            f"dominant={t['dominant']},compute={t['compute_s']:.4f},"
+            f"memory={t['memory_s']:.4f},collective={t['collective_s']:.4f},"
+            f"useful_flops={t['useful_flops_ratio']:.2f}"))
+        dominant_counts[t["dominant"]] = dominant_counts.get(t["dominant"], 0) + 1
+        frac = t["compute_s"] / max(t["bound_s"], 1e-12)
+        if t["dominant"] != "compute" and frac > worst[1]:
+            pass
+    rows.append(csv_row("roofline_pairs_covered", 0.0,
+                        f"n={len(data)},dominants={dominant_counts}"))
+    # multi-pod coverage
+    data2 = load_all("pod2x16x16")
+    rows.append(csv_row("roofline_multipod_pairs", 0.0, f"n={len(data2)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))
+    print()
+    print(table_markdown())

@@ -1,0 +1,57 @@
+"""Benchmark harness — one function per paper table/figure (DESIGN.md §6).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,tab1,...] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows. JSON artifacts land in
+experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig56,fig9,tab1,fig10,fig11,"
+                         "kernel,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slow real-training ACC benchmarks")
+    args = ap.parse_args()
+
+    jobs = [
+        ("fig3", "benchmarks.imputation", False),
+        ("kernel", "benchmarks.kernel_bench", False),
+        ("roofline", "benchmarks.roofline", False),
+        ("tab1", "benchmarks.migration_policies", False),
+        ("fig9", "benchmarks.hetero_resizing", True),
+        ("fig56", "benchmarks.homo_resizing", True),
+        ("fig10", "benchmarks.single_straggler", True),
+        ("fig11", "benchmarks.multi_straggler", False),
+        ("ablate", "benchmarks.ablations", True),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failed = []
+    for key, module, slow in jobs:
+        if only and key not in only:
+            continue
+        if args.fast and slow:
+            continue
+        try:
+            mod = __import__(module, fromlist=["main"])
+            for row in mod.main():
+                print(row, flush=True)
+        except Exception as e:                              # noqa: BLE001
+            failed.append((key, repr(e)))
+            print(f"{key}_FAILED,0.0,{e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Minimal multi-pod dry-run walk-through for ONE (arch × shape): shows the
+lower → compile → memory/cost/collective analysis pipeline the full sweep
+(repro.launch.dryrun --all) runs for every pair.
+
+    PYTHONPATH=src python examples/dryrun_one.py --arch yi-6b --shape train_4k
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import sys               # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_one               # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    r = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                extra_tag="example")
+    roof = r["roofline"]
+    print(f"\n{args.arch} × {args.shape} on {r['mesh']} ({r['chips']} chips)")
+    print(f"  compile: {r['compile_s']}s")
+    print(f"  memory_analysis: {r['memory_analysis']}")
+    print(f"  roofline: compute={roof['compute_s']:.4f}s "
+          f"memory={roof['memory_s']:.4f}s "
+          f"collective={roof['collective_s']:.4f}s -> {roof['dominant']}")
+    print(f"  collective breakdown: {roof['coll_breakdown']}")
+
+
+if __name__ == "__main__":
+    main()

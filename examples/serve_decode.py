@@ -1,0 +1,57 @@
+"""Serving example: batched greedy decoding with a KV cache on the reduced
+Yi-6B and Falcon-Mamba (SSM state cache) variants — exercises the same
+serve_step the decode_32k / long_500k dry-runs lower.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np                                    # noqa: E402
+import jax                                            # noqa: E402
+import jax.numpy as jnp                               # noqa: E402
+
+from repro.config import get_config, smoke_variant    # noqa: E402
+from repro.models import get_api                      # noqa: E402
+
+
+def greedy_decode(arch: str, prompt_len=8, gen_len=24, batch=4):
+    cfg = smoke_variant(get_config(arch))
+    api = get_api(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    max_len = prompt_len + gen_len
+    # periodic prompt so the (untrained) model at least sees structure
+    pat = rng.integers(0, cfg.vocab_size, (batch, 4))
+    prompt = np.tile(pat, (1, prompt_len // 4 + 1))[:, :prompt_len]
+
+    cache = api.init_cache(cfg, batch, max_len)
+    step = jax.jit(lambda p, c, t, pos: api.decode_step(p, cfg, c, t, pos))
+
+    toks = jnp.asarray(prompt[:, 0])
+    out = [np.asarray(toks)]
+    logits = None
+    for t in range(max_len - 1):
+        logits, cache = step(params, cache,
+                             jnp.asarray(out[-1]).astype(jnp.int32),
+                             jnp.full((batch,), t, jnp.int32))
+        if t + 1 < prompt_len:
+            nxt = prompt[:, t + 1]                    # teacher-forced prompt
+        else:
+            nxt = np.asarray(logits.argmax(-1))       # greedy
+        out.append(nxt)
+    seq = np.stack(out, axis=1)
+    print(f"{arch}: decoded {seq.shape} tokens; sample row: {seq[0][:16]}...")
+    return seq
+
+
+def main():
+    for arch in ("yi-6b", "falcon-mamba-7b", "mixtral-8x7b"):
+        greedy_decode(arch)
+    print("serving paths OK (attention KV cache, SSM state, MoE decode)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""End-to-end driver (deliverable b): train a ~100M-class reduced LM for a
+few hundred steps under dynamic (round-robin) heterogeneity, comparing
+ZERO-resizing / SEMI against the uncontrolled baseline, with
+checkpoint/resume.
+
+    PYTHONPATH=src python examples/train_lm_hetero.py [--steps 200]
+"""
+import argparse
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np                                    # noqa: E402
+
+from repro.launch.train import run_training           # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--chi", type=float, default=4.0)
+    args = ap.parse_args()
+
+    results = {}
+    for mode in ("off", "zero", "semi"):
+        ckpt = f"/tmp/repro_ckpt_{mode}"
+        hist = run_training(
+            args.arch, steps=args.steps, tp=4, batch=8, seq=64, lr=1e-3,
+            control_mode=mode, hetero_kind="round_robin", chi=args.chi,
+            hetero_period=25, mig_blocks=2 if mode == "semi" else 0,
+            ckpt_dir=ckpt, log_every=50, quiet=False)
+        results[mode] = hist
+        print(f"[{mode}] final loss {hist['final_loss']:.4f}, "
+              f"mean modeled step {hist['mean_modeled_step_s']*1e3:.1f} ms")
+
+    t_off = results["off"]["mean_modeled_step_s"]
+    for mode in ("zero", "semi"):
+        t = results[mode]["mean_modeled_step_s"]
+        dl = results[mode]["final_loss"] - results["off"]["final_loss"]
+        print(f"{mode}: speedup {t_off/t:.2f}x, loss delta {dl:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

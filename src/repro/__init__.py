@@ -1,0 +1,7 @@
+"""repro: heterogeneous tensor parallelism with flexible workload control.
+
+Implements Wang et al. (CS.DC 2024): ZERO-resizing, lightweight
+broadcast-reduce migration with reduce-merging, and the SEMI-migration
+hybrid controller — inside a multi-pod JAX training/serving framework.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,77 @@
+"""Checkpointing: pytree <-> npz with structure manifest.
+
+Single-file npz per step plus a JSON manifest describing the pytree
+structure and logical shardings, so a checkpoint written under one mesh
+restores under another (values are saved unsharded; the launcher re-shards
+on restore via device_put with the target NamedShardings).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat.keys()),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(directory)
+             if f.startswith("ckpt_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of `like` (a pytree of arrays/ShapeDtype)."""
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat_like[0]:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs model {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(flat_like[1], leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree

@@ -1,0 +1,12 @@
+"""Core: the paper's contribution (ZERO-resizing / migration / SEMI)."""
+from repro.core.workload import (  # noqa: F401
+    DEFAULT_BUCKETS, PlanDynamic, PlanStatic, WorkloadPlan,
+    adapt_block_size, bucket_for_gamma, keep_blocks_for_bucket)
+from repro.core.resizing import (  # noqa: F401
+    gather_cols, gather_rows, impute_gradients, keep_mask, resized_matmul,
+    scatter_cols, switched_matmul)
+from repro.core.controller import (  # noqa: F401
+    ControllerReport, CostFunctions, SemiController, eq1_gamma, eq2_beta,
+    eq3_migration_prefix, pretest_cost_functions, work_fraction)
+from repro.core.hetero import (  # noqa: F401
+    HeteroSchedule, IterationModel, iteration_model, matmul_flops_per_rank)

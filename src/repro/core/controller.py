@@ -1,0 +1,295 @@
+"""Straggler detection and the SEMI-migration controller (Sec. III-A, IV-B).
+
+Host-side logic that runs between training steps (the paper operates at
+iteration/epoch granularity too). Consumes per-rank iteration times —
+measured or produced by the heterogeneity model — and emits a
+:class:`WorkloadPlan`.
+
+Equations implemented:
+  Eq.(1)  γ_i = (T_i − T_ref) / M_i            (T_ref = T_avg or T_min)
+  Eq.(2)  Ω1 + Ω2(Lγ(1−β)) = Φ1(Lγβ) + Φ2(Lγβ/(e−1))   → β (closed form
+          with the linear cost fits obtained from the pre-test)
+  Eq.(3)  f(x) = (T_x − T_min) − Φ1(Γ(x)) − max_y (Γ(x)/(e−x) · T_y/L_y)
+          → largest x with f(x) > 0 migrates; the rest resize.
+
+T_avg maintenance: instead of an all-reduce per iteration, each rank
+monitors its own runtime and the controller only refreshes the global
+average when some rank drifted >10% since the last refresh (Sec. III-A).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.config import WorkloadControlConfig
+from repro.core.hetero import IterationModel
+from repro.core.priority import (PriorityState, build_pri_list,
+                                 differentiated_gamma, mark_pruned,
+                                 update_state)
+from repro.core.workload import (PlanDynamic, PlanStatic, WorkloadPlan,
+                                 bucket_for_gamma, keep_blocks_for_bucket)
+
+
+# ---------------------------------------------------------------------------
+# Cost functions (pre-test, Sec. IV-B / Alg. 2 line 1)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostFunctions:
+    """Linear fits of the cost curves sampled in the pre-test.
+
+    Ω1: static allocation overhead of a resized submatrix (seconds).
+    Ω2(n) = omega2_slope·n: dimension-extraction cost for n columns.
+    Φ1(n) = phi1_base + phi1_slope·n: broadcast communication for n columns.
+    Φ2(n) = phi2_slope·n: helper-side compute for n columns.
+    """
+
+    omega1: float
+    omega2_slope: float
+    phi1_base: float
+    phi1_slope: float
+    phi2_slope: float
+
+    def phi1(self, n: float) -> float:
+        return self.phi1_base + self.phi1_slope * max(n, 0.0) if n > 0 else 0.0
+
+
+def pretest_cost_functions(model: IterationModel, L_total: int,
+                           *, e: int,
+                           link_bytes_per_col: float = 0.0,
+                           link_bw: float = 50e9) -> CostFunctions:
+    """Derive the cost fits from the iteration model + ICI constants.
+
+    In the paper this is measured by running a few ratios before training;
+    without real heterogeneous hardware we sample the same analytic model
+    the simulator uses (equivalent epistemics, and unit-consistent).
+    """
+    per_col_compute = model.matmul_time / max(L_total, 1)
+    return CostFunctions(
+        omega1=0.002 * model.matmul_time,          # small static realloc cost
+        omega2_slope=0.05 * per_col_compute,        # gather/extract per column
+        phi1_base=5e-5,                             # collective launch latency
+        phi1_slope=(link_bytes_per_col / link_bw) if link_bytes_per_col
+        else 0.20 * per_col_compute,
+        phi2_slope=per_col_compute,                 # helper computes the column
+    )
+
+
+# ---------------------------------------------------------------------------
+# Equations
+# ---------------------------------------------------------------------------
+
+
+def eq1_gamma(t_i: float, t_ref: float, m_i: float, gamma_max: float = 0.875) -> float:
+    """Pruning ratio that offsets the runtime gap (Eq. 1)."""
+    if m_i <= 0:
+        return 0.0
+    return float(np.clip((t_i - t_ref) / m_i, 0.0, gamma_max))
+
+
+def eq2_beta(L_gamma: float, costs: CostFunctions, e: int) -> float:
+    """Allocation ratio β between migration (β) and resizing (1−β), Eq. (2).
+
+    With linear fits: Ω1 + a·Lγ(1−β) = c0 + c1·Lγβ + c2·Lγβ/(e−1)
+    → β = (Ω1 + a·Lγ − c0) / (Lγ·(a + c1 + c2/(e−1))).
+    """
+    if L_gamma <= 0:
+        return 0.0
+    a = costs.omega2_slope
+    denom = L_gamma * (a + costs.phi1_slope + costs.phi2_slope / max(e - 1, 1))
+    if denom <= 0:
+        return 1.0
+    beta = (costs.omega1 + a * L_gamma - costs.phi1_base) / denom
+    return float(np.clip(beta, 0.0, 1.0))
+
+
+def eq3_migration_prefix(times_desc: np.ndarray, workloads: np.ndarray,
+                         costs: CostFunctions, e: int) -> int:
+    """Largest straggler prefix x for which migration stays cost-effective.
+
+    times_desc: per-rank times sorted descending; workloads: matching L_i
+    (current column workloads). Returns x (0 => nobody migrates).
+    """
+    t_min = float(times_desc.min())
+    x_best = 0
+    for x in range(1, len(times_desc)):
+        # total migrated volume Γ(x)
+        gamma_x = 0.0
+        for k in range(x):
+            if times_desc[k] > 0:
+                gamma_x += workloads[k] * (times_desc[k] - t_min) / times_desc[k]
+        helpers = np.arange(x, len(times_desc))
+        if len(helpers) == 0:
+            break
+        # max additional runtime among receivers
+        recv_cost = max(
+            (gamma_x / max(e - x, 1)) * (times_desc[y] / max(workloads[y], 1e-12))
+            for y in helpers)
+        f_x = (times_desc[x - 1] - t_min) - costs.phi1(gamma_x) - recv_cost
+        if f_x > 0:
+            x_best = x
+        else:
+            break
+    return x_best
+
+
+# ---------------------------------------------------------------------------
+# Controller
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ControllerReport:
+    """What the controller decided this step (for logs/benchmarks)."""
+
+    stragglers: list
+    gammas: Dict[int, float]
+    bucket_by_rank: np.ndarray
+    mig_src: int
+    mig_blocks: int
+    beta: float
+    x_migrating: int
+    t_ref: float
+
+
+class SemiController:
+    """Implements Alg. 2 (SEMI) and its ZERO / MIG degenerate modes."""
+
+    def __init__(self, cfg: WorkloadControlConfig, tp: int,
+                 iter_model: IterationModel, num_blocks: int,
+                 costs: Optional[CostFunctions] = None, seed: int = 0):
+        self.cfg = cfg
+        self.tp = tp
+        self.model = iter_model
+        self.num_blocks = num_blocks            # prunable blocks per rank shard
+        self.costs = costs or pretest_cost_functions(
+            iter_model, num_blocks, e=tp)
+        self.priority: Dict[str, PriorityState] = {}
+        self.rng = np.random.default_rng(seed)
+        self._t_avg: Optional[float] = None
+        self._t_at_refresh: Optional[np.ndarray] = None
+
+    # -- priority bookkeeping -------------------------------------------
+    def observe_weights(self, named_weights: Dict[str, np.ndarray], block: int):
+        """Epoch-granularity statistics refresh (Alg. 1)."""
+        for name, w in named_weights.items():
+            nb = w.shape[0] // block
+            st = self.priority.get(name) or PriorityState.create(nb)
+            self.priority[name] = update_state(st, np.asarray(w), block)
+
+    def pri_lists(self) -> Dict[str, np.ndarray]:
+        return {name: build_pri_list(st, self.rng, self.cfg.selection
+                                     if self.cfg.selection != "priority_diff"
+                                     else "priority")
+                for name, st in self.priority.items()}
+
+    # -- T_avg maintenance (Sec. III-A) ----------------------------------
+    def _t_ref(self, times: np.ndarray) -> float:
+        if self.cfg.mode in ("semi", "mig"):
+            return float(times.min())           # strictest criterion (Sec. IV-B)
+        if (self._t_avg is None or self._t_at_refresh is None
+                or np.any(np.abs(times - self._t_at_refresh)
+                          > self.cfg.tavg_refresh_threshold * self._t_at_refresh)):
+            self._t_avg = float(times.mean())   # "passive refresh on demand"
+            self._t_at_refresh = times.copy()
+        return self._t_avg
+
+    # -- main entry -------------------------------------------------------
+    def plan(self, times: np.ndarray) -> "tuple[WorkloadPlan, ControllerReport]":
+        times = np.asarray(times, np.float64)
+        e = self.tp
+        cfg = self.cfg
+        t_ref = self._t_ref(times)
+        m_i = self.model.matmul_time
+        stragglers = [i for i in range(e) if times[i] > t_ref * (1 + 1e-9)]
+
+        # M_i^j: the straggler's own matmul time this iteration scales with
+        # its slowdown — a rank running χ× slow also prunes χ×-cheaper work,
+        # so Eq.(1) uses the rank-local matmul cost.
+        gammas = {i: eq1_gamma(times[i], t_ref,
+                               m_i * times[i] / max(t_ref, 1e-12))
+                  for i in stragglers}
+        bucket_by_rank = np.zeros((e,), np.int32)
+        mig_src, mig_blocks, beta, x_mig = -1, 0, 0.0, 0
+
+        if cfg.mode == "zero" or not stragglers:
+            for i, g in gammas.items():
+                bucket_by_rank[i] = bucket_for_gamma(g, cfg.gamma_buckets)
+
+        elif cfg.mode == "mig":
+            # migrate everything for the slowest straggler
+            i = int(np.argmax(times))
+            g = gammas.get(i, 0.0)
+            mig_src, mig_blocks = i, int(round(g * self.num_blocks))
+
+        else:  # semi (Alg. 2)
+            order = np.argsort(-times)
+            if len(stragglers) == 1:
+                i = stragglers[0]
+                g = gammas[i]
+                L_gamma = g * self.num_blocks
+                beta = eq2_beta(L_gamma, self.costs, e)
+                mig_blocks = int(round(L_gamma * beta))
+                mig_src = i if mig_blocks > 0 else -1
+                resid_gamma = g * (1 - beta)
+                bucket_by_rank[i] = bucket_for_gamma(resid_gamma, cfg.gamma_buckets)
+                x_mig = 1 if mig_blocks > 0 else 0
+            else:
+                times_desc = times[order]
+                workloads = np.full((e,), float(self.num_blocks))
+                x_mig = eq3_migration_prefix(times_desc, workloads, self.costs, e)
+                # jitted path supports one migration source: the slowest
+                # rank migrates; ranks 2..x and the rest resize to T_min.
+                if x_mig >= 1:
+                    i = int(order[0])
+                    g = gammas.get(i, 0.0)
+                    mig_src, mig_blocks = i, int(round(g * self.num_blocks))
+                for j, i in enumerate(order):
+                    if i not in stragglers or i == mig_src:
+                        continue
+                    bucket_by_rank[i] = bucket_for_gamma(
+                        gammas[i], cfg.gamma_buckets)
+
+        report = ControllerReport(
+            stragglers=stragglers, gammas=gammas,
+            bucket_by_rank=bucket_by_rank.copy(), mig_src=mig_src,
+            mig_blocks=mig_blocks, beta=beta, x_migrating=x_mig, t_ref=t_ref)
+
+        static = PlanStatic(
+            buckets=tuple(cfg.gamma_buckets), block_size=cfg.block_size,
+            mig_blocks=mig_blocks, tp_size=e, imputation=cfg.imputation)
+        dynamic = PlanDynamic(
+            bucket_by_rank=bucket_by_rank,
+            mig_src=np.array(mig_src, np.int32),
+            pri_lists=self.pri_lists())
+        # mark pruned blocks for the incremental-update rule
+        for name, st in list(self.priority.items()):
+            pri = dynamic.pri_lists.get(name)
+            if pri is None:
+                continue
+            worst_bucket = int(bucket_by_rank.max())
+            kc = keep_blocks_for_bucket(cfg.gamma_buckets[worst_bucket], st.num_blocks)
+            self.priority[name] = mark_pruned(st, pri, kc)
+
+        return WorkloadPlan(static, dynamic), report
+
+
+def work_fraction(plan: WorkloadPlan, num_blocks: int) -> np.ndarray:
+    """Retained matmul-work fraction per rank implied by a plan (for the
+    iteration model / benchmarks)."""
+    e = plan.static.tp_size
+    frac = np.ones((e,), np.float64)
+    for r in range(e):
+        g = plan.static.buckets[int(plan.dynamic.bucket_by_rank[r])]
+        frac[r] *= (keep_blocks_for_bucket(g, num_blocks) / num_blocks)
+    src = int(plan.dynamic.mig_src)
+    if plan.static.migration_enabled and src >= 0:
+        mig_frac = plan.static.mig_blocks / num_blocks
+        frac[src] *= max(0.0, 1.0 - mig_frac)
+        for r in range(e):
+            if r != src:
+                frac[r] += mig_frac / max(e - 1, 1)
+    return frac

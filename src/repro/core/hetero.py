@@ -1,0 +1,114 @@
+"""Heterogeneity model & straggler simulation (paper Sec. V-A).
+
+The paper simulates heterogeneity on homogeneous V100s by injecting sleeps
+into the matmul path of chosen ranks, quantified by the straggling
+skewness χ (matmul is χ× slower). We do the analogous thing for a TPU/CPU
+SPMD runtime: a ``HeteroSchedule`` yields per-rank speed multipliers
+χ_i(t) ≥ 1, and an ``IterationModel`` converts a workload plan + χ into
+per-rank iteration times
+
+    T_i = M·(workload share_i)·χ_i + C        (matmul time + comm/other)
+
+which is what the controller consumes (the controller never sees χ
+directly — only measured-style times, as in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HeteroSchedule:
+    """χ_i(step) generator."""
+
+    num_ranks: int
+    kind: str = "none"                 # none | static | round_robin | contention
+    chis: Sequence[float] = ()         # static per-rank χ, or χ values to rotate
+    period: int = 100                  # steps between round-robin moves
+    contention_p: float = 0.15         # P(rank is contended at a step)
+    contention_chi: float = 4.0
+    seed: int = 0
+
+    def chi(self, step: int) -> np.ndarray:
+        x = np.ones((self.num_ranks,), np.float64)
+        if self.kind == "none":
+            return x
+        if self.kind == "static":
+            c = np.asarray(self.chis, np.float64)
+            x[: len(c)] = c
+            return x
+        if self.kind == "round_robin":
+            # one straggler at a time, rotating across ranks (paper Sec. V-B)
+            chi = self.chis[0] if self.chis else 2.0
+            x[(step // self.period) % self.num_ranks] = chi
+            return x
+        if self.kind == "contention":
+            rng = np.random.default_rng(self.seed + step)
+            hit = rng.random(self.num_ranks) < self.contention_p
+            x[hit] = self.contention_chi
+            return x
+        raise ValueError(f"unknown hetero kind {self.kind!r}")
+
+
+@dataclasses.dataclass
+class IterationModel:
+    """Per-rank iteration-time model for one training step.
+
+    matmul_time: seconds of TP matmul work at χ=1 with the FULL workload
+      (the paper's M_i^j); scaled by each rank's retained workload fraction.
+    other_time: everything not tunable by the technique (comm, layernorm,
+      optimizer, ...), assumed χ-insensitive (collectives are ICI-bound).
+    """
+
+    matmul_time: float
+    other_time: float
+
+    def times(self, chi: np.ndarray, work_frac: np.ndarray) -> np.ndarray:
+        """T_i for each rank given χ_i and retained-work fraction_i."""
+        return self.matmul_time * work_frac * chi + self.other_time
+
+    def step_time(self, chi: np.ndarray, work_frac: np.ndarray) -> float:
+        """Bulk-synchronous: the step takes as long as the slowest rank."""
+        return float(self.times(chi, work_frac).max())
+
+
+def matmul_flops_per_rank(model_cfg, shape_cfg, tp: int) -> float:
+    """FLOPs of TP-matmul work per rank per iteration (fwd+bwd ≈ 3× fwd).
+
+    Counts the linear projections/transformations (the paper's target
+    workload): attention QKV/out + FFN, per token. MoE counts active
+    experts. The recurrence/softmax parts are excluded (not prunable).
+    """
+    c = model_cfg
+    d = c.d_model
+    tokens = shape_cfg.global_batch * shape_cfg.seq_len
+    hd = c.resolved_head_dim
+    if c.family == "ssm":
+        s = c.ssm
+        d_in = s.expand * d
+        per_tok = 2 * d * 2 * d_in + 2 * d_in * d     # in/out projections
+    else:
+        attn = 2 * d * (c.num_heads * hd) + 2 * 2 * d * (c.num_kv_heads * hd) \
+            + 2 * (c.num_heads * hd) * d
+        if c.moe is not None:
+            ff_mult = 3 if c.act == "silu" else 2
+            ff = ff_mult * 2 * d * c.moe.d_expert * (c.moe.top_k + c.moe.num_shared_experts)
+        else:
+            ff_mult = 3 if c.act in ("silu", "gelu_glu") else 2
+            ff = ff_mult * 2 * d * c.d_ff
+        per_tok = attn + ff
+    fwd = tokens * per_tok * c.num_layers
+    return 3.0 * fwd / tp           # fwd + 2x bwd, split over TP ranks
+
+
+def iteration_model(model_cfg, shape_cfg, tp: int,
+                    peak_flops: float = 197e12,
+                    mfu: float = 0.4,
+                    comm_frac: float = 0.15) -> IterationModel:
+    """Build an IterationModel from the analytic workload (paper Sec. II-B)."""
+    f = matmul_flops_per_rank(model_cfg, shape_cfg, tp)
+    t_mm = f / (peak_flops * mfu)
+    return IterationModel(matmul_time=t_mm, other_time=comm_frac * t_mm)

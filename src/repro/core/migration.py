@@ -1,0 +1,240 @@
+"""Lightweight workload migration (paper Sec. IV-A), as shard_map dataflow.
+
+Unit of migration: *intermediate-dimension blocks of a TP-split linear
+pair* (e.g. the FFN's d_ff). The straggler sheds `m` blocks of its local
+shard; every normal rank receives the straggler's weight slices for those
+blocks ("broadcast"), computes a deterministic sub-range (the paper's rank
+renumbering r' = (r + e - r_s) mod e), and **accumulates the result into
+its own partial output before the layer's all-reduce** — the migration
+`reduce` is merged into the already-required collective (reduce-merging).
+
+Collective mapping (DESIGN.md §2):
+* paper `broadcast` → masked ``psum`` of per-rank export buffers (each rank
+  contributes zeros except the straggler). XLA lowers this to the ICI-
+  optimal tree/ring — the paper's tree-broadcast insight for free.
+* paper `reduce` → *eliminated*: helpers add their migrated partial product
+  into their local partial sum; the single pre-existing ``psum`` collects.
+* backward: JAX autodiff transposes the same dataflow — gradients of the
+  broadcast slices flow back to the straggler's weight shards through the
+  transposed psum, so migration is **lossless** (property-tested).
+
+The forward on the straggler uses :func:`resized_matmul` with the
+complement of the migrated blocks, so the straggler's FLOPs genuinely drop
+(static shapes; the migrated blocks are computed nowhere locally).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import resizing
+
+
+def _bcast_from(src: jax.Array, value: jax.Array, axis: str) -> jax.Array:
+    """Broadcast `value` from rank `src` to all ranks of `axis`.
+
+    Masked psum: every rank contributes zeros except `src`. (A true
+    one-to-all broadcast primitive is not exposed by jax.lax; the masked
+    all-reduce has the same tree/ring schedule on TPU.)
+    """
+    rank = lax.axis_index(axis)
+    contrib = jnp.where(rank == src, value, jnp.zeros_like(value))
+    return lax.psum(contrib, axis)
+
+
+def migration_assignment(rank, src, e: int, m_pad: int):
+    """Blocks [lo, lo+m_per) of the padded export this rank must compute.
+
+    Renumbering r' = (rank + e - src) mod e; r'=0 is the straggler itself
+    (computes none — handled by a zero mask), helpers r'=1..e-1 take
+    consecutive m_per-block slices.
+    """
+    m_per = m_pad // (e - 1)
+    rprime = (rank + e - src) % e
+    is_helper = rprime > 0
+    lo = (jnp.maximum(rprime, 1) - 1) * m_per
+    return lo, m_per, is_helper
+
+
+def migrated_pair_matmul(
+    x: jax.Array,                 # [T, d] replicated activations
+    w_in_loc: jax.Array,          # [d, Hloc]   column-split (up/gate fused ok)
+    w_out_loc: jax.Array,         # [Hloc, d_out] row-split
+    *,
+    axis: str,
+    mig_src: jax.Array,           # scalar int32; -1 disables
+    mig_block_ids: jax.Array,     # [m] int32 block ids within the straggler's shard
+    block: int,
+    act_fn: Callable[[jax.Array], jax.Array],
+    w_gate_loc: Optional[jax.Array] = None,   # optional gate for GLU acts
+    psum_result: bool = True,
+) -> jax.Array:
+    """Forward of a TP linear pair with single-source migration.
+
+    Returns the (optionally psum'd) output [T, d_out]. With mig_src = -1
+    the result equals the plain TP pair (all ranks dense).
+    """
+    e = lax.axis_size(axis)
+    rank = lax.axis_index(axis)
+    Hloc = w_in_loc.shape[1]
+    nb = Hloc // block
+    m = mig_block_ids.shape[0]
+    enabled = mig_src >= 0
+    src = jnp.where(enabled, mig_src, 0)
+
+    # ----- local compute: straggler drops the migrated blocks (resized) ---
+    # keep-list: complement of mig_block_ids for the straggler, first
+    # (nb - m) blocks otherwise (helpers run dense separately below).
+    all_ids = jnp.arange(nb, dtype=mig_block_ids.dtype)
+    in_mig = jnp.zeros((nb,), bool).at[jnp.clip(mig_block_ids, 0, nb - 1)].set(True)
+    complement = jnp.argsort(in_mig.astype(jnp.int32), stable=True)[: nb - m]
+    complement = jnp.sort(complement)
+
+    def straggler_branch(ops_):
+        x_, w_in, w_gate, w_out = ops_
+        # prune migrated intermediate blocks out of BOTH matmuls
+        w_in_k = _gather_cols_mat(w_in, complement, block)        # [d, (nb-m)B]
+        h = x_ @ w_in_k
+        if w_gate is not None:
+            w_g_k = _gather_cols_mat(w_gate, complement, block)
+            h = act_fn(x_ @ w_g_k) * h
+        else:
+            h = act_fn(h)
+        w_out_k = resizing.gather_rows(w_out, complement, block)  # [(nb-m)B, d_out]
+        return h @ w_out_k
+
+    def dense_branch(ops_):
+        x_, w_in, w_gate, w_out = ops_
+        h = x_ @ w_in
+        if w_gate is not None:
+            h = act_fn(x_ @ w_gate) * h
+        else:
+            h = act_fn(h)
+        return h @ w_out
+
+    is_straggler = jnp.logical_and(enabled, rank == src)
+    partial = lax.cond(
+        is_straggler, straggler_branch, dense_branch,
+        (x, w_in_loc, w_gate_loc, w_out_loc))
+
+    if m > 0:
+        # ----- broadcast migrated slices (weight-only; x is replicated) ---
+        m_per = -(-m // max(e - 1, 1))
+        m_pad = m_per * max(e - 1, 1)
+        pad_ids = jnp.concatenate(
+            [mig_block_ids, jnp.zeros((m_pad - m,), mig_block_ids.dtype)])
+        valid = jnp.concatenate(
+            [jnp.ones((m,), bool), jnp.zeros((m_pad - m,), bool)])
+
+        exp_in = _gather_cols_mat(w_in_loc, pad_ids, block)       # [d, m_pad*B]
+        exp_out = resizing.gather_rows(w_out_loc, pad_ids, block)  # [m_pad*B, d_out]
+        exp_gate = (_gather_cols_mat(w_gate_loc, pad_ids, block)
+                    if w_gate_loc is not None else None)
+
+        b_in = _bcast_from(src, exp_in, axis)
+        b_out = _bcast_from(src, exp_out, axis)
+        b_gate = _bcast_from(src, exp_gate, axis) if exp_gate is not None else None
+
+        lo, m_per_, is_helper = migration_assignment(rank, src, e, m_pad)
+        sl_in = lax.dynamic_slice_in_dim(b_in, lo * block, m_per_ * block, axis=1)
+        sl_out = lax.dynamic_slice_in_dim(b_out, lo * block, m_per_ * block, axis=0)
+        sl_valid = lax.dynamic_slice_in_dim(valid.astype(x.dtype), lo, m_per_)
+        sl_valid = jnp.repeat(sl_valid, block)
+
+        h_mig = x @ sl_in
+        if b_gate is not None:
+            sl_gate = lax.dynamic_slice_in_dim(
+                b_gate, lo * block, m_per_ * block, axis=1)
+            h_mig = act_fn(x @ sl_gate) * h_mig
+        else:
+            h_mig = act_fn(h_mig)
+        # zero the padded / non-helper / disabled lanes, then REDUCE-MERGE:
+        gate_mask = (sl_valid * is_helper.astype(x.dtype)
+                     * enabled.astype(x.dtype))
+        delta = (h_mig * gate_mask[None, :]) @ sl_out
+        partial = partial + delta
+
+    return lax.psum(partial, axis) if psum_result else partial
+
+
+def _gather_cols_mat(w: jax.Array, ids: jax.Array, block: int) -> jax.Array:
+    """Keep given blocks of the LAST dim of a [d, H] matrix."""
+    d, H = w.shape
+    wb = w.reshape(d, H // block, block)
+    return jnp.take(wb, ids, axis=1).reshape(d, ids.shape[0] * block)
+
+
+def scatter_gather_pair_matmul(x, w_in_loc, w_out_loc, *, axis, mig_src,
+                               mig_block_ids, block, act_fn,
+                               w_gate_loc=None):
+    """The paper's *baseline* comm pattern (scatter-gather) for Table I.
+
+    Straggler point-to-point scatters a distinct slice to each helper
+    (emulated with ppermute rounds), helpers compute, results are gathered
+    back to the straggler and it injects them into its partial output —
+    i.e. NO reduce-merging: the collected result transits twice. Used only
+    for the migration-policy benchmark; semantics match migrated_pair_matmul.
+    """
+    e = lax.axis_size(axis)
+    rank = lax.axis_index(axis)
+    m = mig_block_ids.shape[0]
+    m_per = -(-m // max(e - 1, 1))
+    m_pad = m_per * max(e - 1, 1)
+    src = jnp.where(mig_src >= 0, mig_src, 0)
+
+    # Emulated scatter: each helper receives ONLY its slice, via one
+    # ppermute per helper round (e-1 rounds of [d, m_per*B] + [m_per*B, d]).
+    pad_ids = jnp.concatenate(
+        [mig_block_ids, jnp.zeros((m_pad - m,), mig_block_ids.dtype)])
+    valid = jnp.concatenate([jnp.ones((m,), bool), jnp.zeros((m_pad - m,), bool)])
+
+    partial = None
+    deltas = jnp.zeros((x.shape[0], w_out_loc.shape[1]), x.dtype)
+    for h in range(1, e):  # helper with renumber r' = h
+        ids_h = lax.dynamic_slice_in_dim(pad_ids, (h - 1) * m_per, m_per)
+        val_h = lax.dynamic_slice_in_dim(valid.astype(x.dtype), (h - 1) * m_per, m_per)
+        sl_in = _gather_cols_mat(w_in_loc, ids_h, block)
+        sl_out = resizing.gather_rows(w_out_loc, ids_h, block)
+        perm = [(int(s), int((s + h) % e)) for s in range(e)]
+        r_in = lax.ppermute(sl_in, axis, perm)     # slice travels src -> src+h
+        r_out = lax.ppermute(sl_out, axis, perm)
+        hm = act_fn(x @ r_in)
+        if w_gate_loc is not None:
+            sl_g = _gather_cols_mat(w_gate_loc, ids_h, block)
+            r_g = lax.ppermute(sl_g, axis, perm)
+            hm = act_fn(x @ r_g) * (x @ r_in)
+        is_h = (rank == (src + h) % e)
+        mask = jnp.repeat(val_h, block) * is_h.astype(x.dtype)
+        d_h = (hm * mask[None, :]) @ r_out
+        # GATHER back to straggler (reverse permute) — the redundant hop
+        d_back = lax.ppermute(d_h, axis, [(int((s + h) % e), int(s)) for s in range(e)])
+        deltas = deltas + d_back
+
+    # straggler-local resized compute
+    nb = w_in_loc.shape[1] // block
+    in_mig = jnp.zeros((nb,), bool).at[jnp.clip(mig_block_ids, 0, nb - 1)].set(True)
+    complement = jnp.sort(jnp.argsort(in_mig.astype(jnp.int32), stable=True)[: nb - m])
+
+    w_in_k = _gather_cols_mat(w_in_loc, complement, block)
+    hloc = x @ w_in_k
+    if w_gate_loc is not None:
+        w_g_k = _gather_cols_mat(w_gate_loc, complement, block)
+        hloc = act_fn(x @ w_g_k) * hloc
+    else:
+        hloc = act_fn(hloc)
+    part_straggler = hloc @ resizing.gather_rows(w_out_loc, complement, block)
+
+    def dense(_):
+        hh = x @ w_in_loc
+        if w_gate_loc is not None:
+            hh = act_fn(x @ w_gate_loc) * hh
+        else:
+            hh = act_fn(hh)
+        return hh @ w_out_loc
+
+    partial = lax.cond(jnp.logical_and(mig_src >= 0, rank == src),
+                       lambda _: part_straggler + deltas, dense, None)
+    return lax.psum(partial, axis)

@@ -1,0 +1,160 @@
+"""ZERO-resizing (paper Sec. III): temporarily resize the matrices of a TP
+linear's matmuls by pruning contraction-dimension blocks, with lineage-
+correct zero imputation of the missing gradient rows/columns.
+
+TPU adaptation (DESIGN.md §2): pruning is 128-column-block granular and the
+continuous γ is quantized into buckets selected per-rank via ``lax.switch``.
+
+A key observation vs. the paper's imperative implementation: in JAX the
+paper's *lineage table + imputation* machinery falls out of autodiff.
+``resized_matmul`` is gather(keep blocks) → matmul; the VJP of the gather
+is a scatter that places gradients at exactly the kept positions and
+**zeros at the pruned positions** — i.e. the paper's Zero-imputation with
+a correctly matched lineage, by construction. The `Average`/`Same`
+imputation policies of Fig. 3 are provided as explicit gradient
+transforms (:func:`impute_gradients`).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.workload import keep_blocks_for_bucket
+
+
+# ---------------------------------------------------------------------------
+# Block gather/scatter primitives
+# ---------------------------------------------------------------------------
+
+
+def gather_cols(x: jax.Array, keep_idx: jax.Array, block: int) -> jax.Array:
+    """Keep the given blocks of the last dim: [..., K] -> [..., kb*block]."""
+    *lead, K = x.shape
+    nb = K // block
+    xb = x.reshape(*lead, nb, block)
+    xk = jnp.take(xb, keep_idx, axis=-2)
+    return xk.reshape(*lead, keep_idx.shape[0] * block)
+
+
+def gather_rows(w: jax.Array, keep_idx: jax.Array, block: int) -> jax.Array:
+    """Keep the given blocks of the first dim: [K, N] -> [kb*block, N]."""
+    K, N = w.shape
+    wb = w.reshape(K // block, block, N)
+    wk = jnp.take(wb, keep_idx, axis=0)
+    return wk.reshape(keep_idx.shape[0] * block, N)
+
+
+def scatter_cols(xk: jax.Array, keep_idx: jax.Array, block: int, K: int) -> jax.Array:
+    """Inverse of gather_cols with zeros at pruned blocks (Zero imputation)."""
+    *lead, Kk = xk.shape
+    nb = K // block
+    xb = xk.reshape(*lead, Kk // block, block)
+    out = jnp.zeros((*lead, nb, block), xk.dtype)
+    return out.at[..., keep_idx, :].set(xb).reshape(*lead, K)
+
+
+def keep_mask(keep_idx: jax.Array, num_blocks: int, block: int) -> jax.Array:
+    """Boolean [num_blocks*block] mask, True where the dimension was kept."""
+    m = jnp.zeros((num_blocks,), bool).at[keep_idx].set(True)
+    return jnp.repeat(m, block)
+
+
+# ---------------------------------------------------------------------------
+# Resized matmul (the paper's pruned computation, Fig. 2)
+# ---------------------------------------------------------------------------
+
+
+def resized_matmul(x: jax.Array, w: jax.Array, keep_idx: jax.Array,
+                   *, block: int, use_kernel: bool = False) -> jax.Array:
+    """y = x[:, keep] @ w[keep, :] with zero-imputing lineage-correct VJP.
+
+    x: [..., K]; w: [K, N]; keep_idx: [kb] int32 *block* indices (sorted).
+    Output: [..., N] — same shape as the unpruned matmul (consistency
+    constraint, Sec. III-A).
+    """
+    if use_kernel:
+        from repro.kernels import ops  # local import: kernels are optional
+        return ops.block_pruned_matmul(x, w, keep_idx, block=block)
+    xk = gather_cols(x, keep_idx, block)
+    wk = gather_rows(w, keep_idx, block)
+    return xk @ wk
+
+
+def switched_matmul(x: jax.Array, w: jax.Array, pri_list: jax.Array,
+                    bucket_idx: jax.Array, *, buckets: Sequence[float],
+                    block: int, use_kernel: bool = False) -> jax.Array:
+    """Per-rank γ-bucket dispatch: ``lax.switch`` over statically-shaped
+    pruned matmuls. ``bucket_idx`` is the rank's runtime bucket; on real
+    TPUs each core executes only its branch (true FLOP reduction).
+
+    pri_list: [nb] int32 permutation of block ids, keep-first order.
+    """
+    K = w.shape[0]
+    nb = K // block
+
+    def make_branch(kc: int):
+        if kc >= nb:
+            def dense(ops_):
+                x_, w_, _ = ops_
+                return x_ @ w_
+            return dense
+
+        def pruned(ops_):
+            x_, w_, pri = ops_
+            keep = jnp.sort(pri[:kc])  # "concatenated in lexicographical order"
+            return resized_matmul(x_, w_, keep, block=block,
+                                  use_kernel=use_kernel)
+        return pruned
+
+    branches = [make_branch(keep_blocks_for_bucket(g, nb)) for g in buckets]
+    return jax.lax.switch(bucket_idx, branches, (x, w, pri_list))
+
+
+# ---------------------------------------------------------------------------
+# Imputation policies (Fig. 3: Zero / Average / Same)
+# ---------------------------------------------------------------------------
+
+
+def impute_rows(grad: jax.Array, kept: jax.Array, mode: str,
+                prev: Optional[jax.Array] = None) -> jax.Array:
+    """Fill pruned (not-kept) rows of a [K, N] gradient.
+
+    zero    — leave zeros (the paper's final choice; free).
+    average — mean over kept rows of the current iteration.
+    same    — value from the previous iteration's gradient (`prev`).
+    """
+    if mode == "zero":
+        return grad
+    kept_f = kept.astype(grad.dtype)[:, None]
+    if mode == "average":
+        denom = jnp.maximum(kept_f.sum(), 1.0)
+        avg = (grad * kept_f).sum(axis=0, keepdims=True) / denom
+        return grad * kept_f + avg * (1.0 - kept_f)
+    if mode == "same":
+        if prev is None:
+            return grad
+        return grad * kept_f + prev * (1.0 - kept_f)
+    raise ValueError(f"unknown imputation mode {mode!r}")
+
+
+def impute_gradients(grads, keep_masks, mode: str, prev_grads=None):
+    """Apply :func:`impute_rows` across a pytree of weight gradients.
+
+    keep_masks: pytree matching `grads`, entries either None (untouched
+    weight) or a bool [K] mask of kept contraction rows.
+    """
+    if mode == "zero":
+        return grads
+    prev_leaves = (jax.tree.leaves(prev_grads) if prev_grads is not None
+                   else [None] * len(jax.tree.leaves(grads)))
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(keep_masks)
+    out = []
+    for g, m, p in zip(flat_g, flat_m, prev_leaves):
+        if m is None or g.ndim != 2:
+            out.append(g)
+        else:
+            out.append(impute_rows(g, m, mode, p))
+    return treedef.unflatten(out)

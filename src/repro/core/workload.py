@@ -1,0 +1,104 @@
+"""Workload-plan datatypes shared by the controller and the TP layers.
+
+The paper's controller runs per-iteration on the host (Alg. 1/2) and emits
+a plan. To stay SPMD-compilable on TPU we split the plan into:
+
+* **static** parts (hashable; changing them recompiles): the γ-bucket set,
+  pruning block size, migration block count. Buckets quantize the paper's
+  continuous γ (DESIGN.md §7.2) — Eq.(1)'s γ is rounded *up* so waiting
+  cost stays fully offset.
+* **dynamic** parts (device arrays; changing them does NOT recompile):
+  per-rank bucket assignment, per-layer priority permutations, the
+  straggler's rank id for migration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+DEFAULT_BUCKETS: Tuple[float, ...] = (0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875)
+
+
+def keep_blocks_for_bucket(gamma: float, num_blocks: int) -> int:
+    """Blocks KEPT for a pruning ratio γ; never below 1 block."""
+    return max(1, num_blocks - int(round(gamma * num_blocks)))
+
+
+def bucket_for_gamma(gamma: float, buckets=DEFAULT_BUCKETS) -> int:
+    """Smallest bucket with γ_bucket >= γ (round UP: offset the full gap)."""
+    for i, b in enumerate(buckets):
+        if b >= gamma - 1e-9:
+            return i
+    return len(buckets) - 1
+
+
+def adapt_block_size(contraction_dim: int, preferred: int = 128) -> int:
+    """Largest TPU-friendly block size dividing the contraction dim.
+
+    128 aligns with the MXU; fall back through 64/32. Returns 0 if even 32
+    does not divide (that linear is exempt from resizing — recorded)."""
+    for b in (preferred, 128, 64, 32):
+        if b <= contraction_dim and contraction_dim % b == 0:
+            return b
+    return 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStatic:
+    """Hashable plan skeleton; part of the jit static args."""
+
+    buckets: Tuple[float, ...] = DEFAULT_BUCKETS
+    block_size: int = 128
+    mig_blocks: int = 0          # total migrated contraction blocks (0 = off)
+    tp_size: int = 1
+    imputation: str = "zero"
+    per_layer: bool = False      # per-layer γ (PriDiff, Sec. III-B)
+    num_layers: int = 0          # required when per_layer
+    # per-scope block-size overrides ("qkv"/"attn_out"/"ffn"), hashable
+    scope_blocks: Tuple[Tuple[str, int], ...] = ()
+
+    @property
+    def migration_enabled(self) -> bool:
+        return self.mig_blocks > 0 and self.tp_size > 1
+
+    def block_for(self, scope: str) -> int:
+        for name, b in self.scope_blocks:
+            if name == scope:
+                return b
+        return self.block_size
+
+
+@dataclasses.dataclass
+class PlanDynamic:
+    """Device-array plan inputs (donated into the jitted step)."""
+
+    bucket_by_rank: np.ndarray            # [tp] int32 index into buckets
+    mig_src: np.ndarray                   # scalar int32 straggler rank (or -1)
+    # per-layer-scope priority permutations keyed by scope name;
+    # each is int32 [num_blocks] in KEEP-FIRST order (head = most important)
+    pri_lists: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def neutral(tp: int) -> "PlanDynamic":
+        return PlanDynamic(
+            bucket_by_rank=np.zeros((tp,), np.int32),
+            mig_src=np.array(-1, np.int32),
+            pri_lists={},
+        )
+
+
+@dataclasses.dataclass
+class WorkloadPlan:
+    static: PlanStatic
+    dynamic: PlanDynamic
+
+    @staticmethod
+    def neutral(tp: int = 1, **kw) -> "WorkloadPlan":
+        return WorkloadPlan(PlanStatic(tp_size=tp, **kw), PlanDynamic.neutral(tp))
+
+    def is_neutral(self) -> bool:
+        return (not self.static.migration_enabled
+                and int(np.max(self.dynamic.bucket_by_rank)) == 0)

@@ -1,0 +1,83 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`block_pruned_matmul` handles arbitrary leading batch dims, pads M/N up to
+tile multiples, and provides a custom VJP: the forward runs the Pallas
+kernel; the backward is the gather/scatter XLA path (zero-imputing, same
+lineage) — dW/dX of the pruned matmul are themselves gather-matmuls and
+reuse the same kernel when shapes allow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import pruned_matmul as _pk
+from repro.kernels import ref as _ref
+
+# This container is CPU-only; flip to False on real TPUs.
+INTERPRET = True
+
+
+def _pad_to(a: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _run_kernel(x2d, w, keep_idx, block, tm, tn):
+    M, N = x2d.shape[0], w.shape[1]
+    xp = _pad_to(x2d, tm, 0)
+    wp = _pad_to(w, tn, 1)
+    y = _pk.block_pruned_matmul_2d(
+        xp, wp, keep_idx, block=block, tm=tm, tn=tn, interpret=INTERPRET)
+    return y[:M, :N]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def block_pruned_matmul(x, w, keep_idx, block: int = 128,
+                        tm: int = 256, tn: int = 256):
+    """y = x[..., keep] @ w[keep, :] via the Pallas kernel.
+
+    x: [..., K]; w: [K, N]; keep_idx: [kb] int32 sorted block ids.
+    """
+    *lead, K = x.shape
+    x2d = x.reshape(-1, K)
+    y = _run_kernel(x2d, w, keep_idx, block, tm, tn)
+    return y.reshape(*lead, w.shape[1])
+
+
+def _fwd(x, w, keep_idx, block, tm, tn):
+    y = block_pruned_matmul(x, w, keep_idx, block, tm, tn)
+    return y, (x, w, keep_idx)
+
+
+def _bwd(block, tm, tn, res, dy):
+    x, w, keep_idx = res
+    *lead, K = x.shape
+    nb = K // block
+    x2d = x.reshape(-1, K)
+    dy2d = dy.reshape(-1, w.shape[1])
+    # dX: dy @ wk^T, scattered back to kept column-blocks (zeros elsewhere)
+    wk = jnp.take(w.reshape(nb, block, -1), keep_idx, axis=0).reshape(-1, w.shape[1])
+    dxk = dy2d @ wk.T                                   # [M, kb*block]
+    dx = jnp.zeros((x2d.shape[0], nb, block), x.dtype)
+    dx = dx.at[:, keep_idx, :].set(dxk.reshape(x2d.shape[0], -1, block))
+    dx = dx.reshape(*lead, K)
+    # dW: xk^T @ dy, scattered to kept row-blocks (zero imputation + lineage)
+    xk = jnp.take(x2d.reshape(-1, nb, block), keep_idx, axis=1)
+    dwk = jnp.einsum("mkb,mn->kbn", xk, dy2d)
+    dw = jnp.zeros((nb, block, w.shape[1]), w.dtype)
+    dw = dw.at[keep_idx].set(dwk.astype(w.dtype)).reshape(K, w.shape[1])
+    return dx, dw, None
+
+
+block_pruned_matmul.defvjp(_fwd, _bwd)
+
+# re-export the oracle for convenience
+block_pruned_matmul_ref = _ref.block_pruned_matmul_ref

@@ -1,0 +1,75 @@
+"""Block-pruned matmul Pallas TPU kernel — the compute hot-spot of
+ZERO-resizing (DESIGN.md §2).
+
+y = x[:, keep-blocks] @ w[keep-blocks, :]
+
+The K (contraction) grid iterates ONLY the kept blocks; the pruning index
+vector is scalar-prefetched (SMEM) and consumed by the BlockSpec index
+maps, so the gather of pruned X columns / W rows happens during the
+HBM→VMEM tile streaming — the pruned copies are never materialized (the
+paper's "temporarily resize" without the temporary).
+
+Tiling: (tm × block) X-tiles and (block × tn) W-tiles with a float32
+VMEM accumulator; `block` is the pruning granularity (128 = MXU lane
+width). Default tm=256, tn=256: VMEM footprint per step is
+tm·block + block·tn + tm·tn floats ≈ 0.5 MiB, well under the ~16 MiB
+v5e VMEM budget, and every matmul dim is a multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, n_keep: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_keep - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tm", "tn", "interpret"))
+def block_pruned_matmul_2d(x: jax.Array, w: jax.Array, keep_idx: jax.Array,
+                           *, block: int = 128, tm: int = 256, tn: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    """2-D core: x [M, K] @ w[K, N] over kept K-blocks. M % tm == 0,
+    N % tn == 0, K % block == 0 are required (the ops.py wrapper pads).
+
+    interpret=True executes the kernel body in Python on CPU (this
+    container has no TPU); on TPU pass interpret=False.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and M % tm == 0 and N % tn == 0 and K % block == 0
+    kb = keep_idx.shape[0]
+
+    grid = (M // tm, N // tn, kb)
+    kernel = functools.partial(_kernel, n_keep=kb)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tm, block), lambda i, j, k, idx: (i, idx[k])),
+                pl.BlockSpec((block, tn), lambda i, j, k, idx: (idx[k], j)),
+            ],
+            out_specs=pl.BlockSpec((tm, tn), lambda i, j, k, idx: (i, j)),
+            scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(keep_idx, x, w)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_pruned_matmul_ref(x: jax.Array, w: jax.Array, keep_idx: jax.Array,
+                            *, block: int) -> jax.Array:
+    """y = x[:, keep-blocks] @ w[keep-blocks, :], float32 accumulation.
+
+    x: [M, K]; w: [K, N]; keep_idx: [kb] int32 block indices. The output is
+    identical to masking the pruned K blocks to zero in a dense matmul.
+    """
+    M, K = x.shape
+    nb = K // block
+    xb = x.reshape(M, nb, block)
+    wb = w.reshape(nb, block, w.shape[1])
+    xk = jnp.take(xb, keep_idx, axis=1).reshape(M, -1)
+    wk = jnp.take(wb, keep_idx, axis=0).reshape(-1, w.shape[1])
+    return jnp.dot(xk.astype(jnp.float32), wk.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,167 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any other import: jax locks the device count on first
+#   init. The dry-run (and ONLY the dry-run) needs 512 placeholder devices.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production mesh, record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.config import INPUT_SHAPES, TrainConfig, get_config, list_configs
+from repro.launch import hlo_analysis, steps
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import use_mesh
+
+ASSIGNED = [
+    "qwen2-vl-7b", "recurrentgemma-2b", "deepseek-7b", "deepseek-v2-lite-16b",
+    "mixtral-8x7b", "falcon-mamba-7b", "yi-6b", "granite-3-8b",
+    "whisper-small", "qwen2.5-32b",
+]
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def out_path(arch: str, shape: str, mesh_name: str) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            remat: str = "none", control: bool = False,
+            extra_tag: str = "", dtype: str = "float32",
+            microbatch: int = 0, fsdp: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    control_static = None
+    if control:
+        from repro.core.workload import PlanStatic
+        tp = int(mesh.shape["model"])
+        control_static = PlanStatic(tp_size=tp, block_size=128, mig_blocks=2)
+        b = steps.control_block_size(cfg, control_static)
+        if b == 0:
+            raise RuntimeError(
+                f"{arch}: FFN width {cfg.d_ff}/{tp} has no >=32 block — "
+                "exempt from resizing at this TP (DESIGN.md §5)")
+        control_static = PlanStatic(tp_size=tp, block_size=b, mig_blocks=2)
+
+    train = TrainConfig(remat=remat, param_dtype=dtype,
+                        microbatch=microbatch, fsdp_layers=fsdp)
+    with use_mesh(mesh):
+        fn, args, in_sh, out_sh = steps.build_step_for(
+            cfg, shape, mesh, train, control_static)
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception as e:                                    # noqa: BLE001
+        mem["error"] = str(e)
+
+    roof = hlo_analysis.roofline_from_compiled(compiled, chips)
+    mf = hlo_analysis.model_flops(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "chips": chips,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "model_flops_global": mf,
+        "hlo_flops_global": roof.flops_per_device * chips,
+        "useful_flops_ratio": (mf / (roof.flops_per_device * chips)
+                               if roof.flops_per_device else 0.0),
+        "memory_analysis": mem,
+        "roofline": roof.as_dict(),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "remat": remat, "control": control, "dtype": dtype,
+        "microbatch": microbatch,
+    }
+    tag = mesh_name + (("__" + extra_tag) if extra_tag else "")
+    with open(out_path(arch, shape_name, tag), "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--control", action="store_true",
+                    help="enable the workload-control (SEMI) path")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    pairs = []
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    failures = []
+    for a, s in pairs:
+        tag = mesh_name + (("__" + args.tag) if args.tag else "")
+        path = out_path(a, s, tag)
+        if os.path.exists(path) and not args.force:
+            print(f"[skip] {a} × {s} ({mesh_name}) — cached")
+            continue
+        print(f"[dryrun] {a} × {s} on {mesh_name} ...", flush=True)
+        try:
+            r = run_one(a, s, multi_pod=args.multi_pod, remat=args.remat,
+                        control=args.control, extra_tag=args.tag,
+                        dtype=args.dtype, microbatch=args.microbatch,
+                        fsdp=args.fsdp)
+            roof = r["roofline"]
+            print(f"  ok: compile={r['compile_s']}s "
+                  f"compute={roof['compute_s']:.4f}s "
+                  f"memory={roof['memory_s']:.4f}s "
+                  f"collective={roof['collective_s']:.4f}s "
+                  f"dominant={roof['dominant']}", flush=True)
+        except Exception as e:                                # noqa: BLE001
+            failures.append((a, s, repr(e)))
+            print(f"  FAIL: {e}\n{traceback.format_exc()}", flush=True)
+        finally:
+            jax.clear_caches()      # keep the 40-pair sweep's RSS bounded
+
+    print(f"\n{len(pairs) - len(failures)}/{len(pairs)} lowered+compiled")
+    for a, s, e in failures:
+        print(f"  FAILED {a} × {s}: {e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: (data=16, model=16) = 256 chips
+(TPU v5e pod). Multi-pod: (pod=2, data=16, model=16) = 512 chips; the
+`pod` axis extends data parallelism across the inter-pod links.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape} but found {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_small_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Mesh over however many (host) devices a test/trainer asked for."""
+    n = data * model
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, found {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(data, model), ("data", "model"))

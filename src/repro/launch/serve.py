@@ -1,0 +1,100 @@
+"""Batched serving driver: checkpoint -> prefill -> decode loop.
+
+A minimal production-shaped server core: fixed-size request batches,
+greedy decode against the jitted serve_step with a donated KV cache, and
+per-request completion tracking. (Request transport/HTTP is out of scope;
+this is the engine the dry-run's decode shapes lower.)
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --batch 4 \
+        --prompt-len 8 --gen-len 24 [--ckpt-dir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store as ckpt_store
+from repro.config import get_config, smoke_variant
+from repro.models import get_api
+
+
+class DecodeEngine:
+    """Holds params + a jitted single-token step; serves fixed batches."""
+
+    def __init__(self, arch: str, batch: int, max_len: int,
+                 ckpt_dir: Optional[str] = None, seed: int = 0):
+        self.cfg = smoke_variant(get_config(arch))
+        self.api = get_api(self.cfg)
+        self.batch = batch
+        self.max_len = max_len
+        params, _ = self.api.init(jax.random.PRNGKey(seed), self.cfg)
+        if ckpt_dir:
+            last = ckpt_store.latest_step(ckpt_dir)
+            if last is not None:
+                params = ckpt_store.restore(ckpt_dir, last, params)
+        self.params = params
+        self._step = jax.jit(
+            lambda p, c, t, pos: self.api.decode_step(p, self.cfg, c, t, pos),
+            donate_argnums=(1,))
+
+    def generate(self, prompts: np.ndarray, gen_len: int,
+                 eos_id: Optional[int] = None) -> np.ndarray:
+        """prompts [B, P] int32 -> [B, P+gen_len] greedy continuations."""
+        B, P = prompts.shape
+        assert B == self.batch and P + gen_len <= self.max_len
+        cache = self.api.init_cache(self.cfg, B, self.max_len)
+        out = [prompts[:, 0]]
+        done = np.zeros((B,), bool)
+        for t in range(P + gen_len - 1):
+            logits, cache = self._step(
+                self.params, cache, jnp.asarray(out[-1], jnp.int32),
+                jnp.full((B,), t, jnp.int32))
+            if t + 1 < P:
+                nxt = prompts[:, t + 1]
+            else:
+                nxt = np.asarray(logits.argmax(-1))
+                if eos_id is not None:
+                    done |= nxt == eos_id
+                    nxt = np.where(done, eos_id or 0, nxt)
+            out.append(nxt)
+            if eos_id is not None and done.all():
+                break
+        return np.stack(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen-len", type=int, default=24)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    eng = DecodeEngine(args.arch, args.batch,
+                       args.prompt_len + args.gen_len, args.ckpt_dir)
+    rng = np.random.default_rng(0)
+    tput = []
+    for r in range(args.rounds):
+        pat = rng.integers(0, eng.cfg.vocab_size, (args.batch, 4))
+        prompts = np.tile(pat, (1, args.prompt_len // 4 + 1))[:, :args.prompt_len]
+        t0 = time.time()
+        seqs = eng.generate(prompts.astype(np.int32), args.gen_len)
+        dt = time.time() - t0
+        tok = args.batch * args.gen_len
+        tput.append(tok / dt)
+        print(f"round {r}: {seqs.shape[1]} positions, "
+              f"{tok/dt:.1f} tok/s, sample: {seqs[0][:12]}")
+    print(f"mean decode throughput: {np.mean(tput):.1f} tok/s "
+          f"(reduced model, 1 CPU device)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+"""Input/param/state specs for every (architecture × input shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for each model input, plus the matching
+NamedShardings — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import ModelAPI, get_api
+
+SDS = jax.ShapeDtypeStruct
+
+
+def rules_for(shape: ShapeConfig, mesh: Mesh,
+              cfg: Optional[ModelConfig] = None, fsdp: bool = False):
+    """Logical rules, adapted per (arch, shape):
+
+    * a global batch smaller than the data axis cannot shard over it
+      (long_500k B=1 → batch replicated, the KV-cache *sequence* shards
+      over `data` instead — flash-decoding style);
+    * KV-head counts that don't divide the model axis (GQA with 4/8/12 KV
+      heads on 16-way TP) shard the cache's `head_dim` over `model`
+      instead (scores become psum'd partials — GSPMD inserts them).
+    """
+    data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    model = mesh.shape.get("model", 1)
+    overrides = {}
+    if shape.global_batch < data:
+        overrides["batch"] = None
+    else:
+        overrides["decode_seq"] = None
+    if cfg is not None and cfg.num_kv_heads and cfg.num_kv_heads % model != 0:
+        overrides["kv_heads"] = None
+        overrides["head_dim"] = ("model",)
+    if fsdp:
+        # beyond-paper: shard the stacked-layer dim of params/opt states
+        # over data (ZeRO-3-over-layers); GSPMD all-gathers each layer's
+        # slice at its scan step and reduce-scatters its grads.
+        overrides["layers"] = ("data",)
+    return sh.make_rules(**overrides)
+
+
+def _ns(mesh, rules, *axes, shape=None):
+    spec = sh.filter_spec_for_mesh(sh.logical_to_spec(axes, rules), mesh)
+    if shape is not None:
+        spec = sh.fit_spec_to_shape(spec, shape, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def effective_model_cfg(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Shape-dependent model adaptations (DESIGN.md §5): pure full-attention
+    archs get an explicit sliding-window VARIANT for long_500k (window 8192)
+    so sub-quadratic decode lowers; natively windowed/recurrent archs are
+    untouched."""
+    if (shape.name == "long_500k" and cfg.sliding_window == 0
+            and cfg.family not in ("ssm", "hybrid")):
+        return dataclasses.replace(cfg, sliding_window=8192)
+    return cfg
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                dtype=jnp.bfloat16) -> Tuple[Dict[str, SDS], Dict[str, Any]]:
+    """(SDS dict, sharding dict) for a TRAIN/PREFILL batch."""
+    rules = rules_for(shape, mesh, cfg)
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, SDS] = {}
+    shards: Dict[str, Any] = {}
+    tok = _ns(mesh, rules, "batch", None)
+
+    if cfg.num_classes:                      # paper ViT: patches + labels
+        P_ = cfg.frontend.num_tokens - 1
+        specs["patches"] = SDS((B, P_, 48), dtype)
+        shards["patches"] = _ns(mesh, rules, "batch", None, None)
+        specs["labels"] = SDS((B,), jnp.int32)
+        shards["labels"] = _ns(mesh, rules, "batch")
+        return specs, shards
+
+    if cfg.frontend is not None and cfg.family == "vlm":
+        Pn = cfg.frontend.num_tokens
+        St = S - Pn
+        specs["patch_embeds"] = SDS((B, Pn, cfg.d_model), dtype)
+        shards["patch_embeds"] = _ns(mesh, rules, "batch", None, "embed")
+        specs["tokens"] = SDS((B, St), jnp.int32)
+        specs["labels"] = SDS((B, St), jnp.int32)
+        shards["tokens"] = shards["labels"] = tok
+        return specs, shards
+
+    if cfg.encdec is not None:
+        specs["frame_embeds"] = SDS((B, cfg.encdec.encoder_seq_len, cfg.d_model), dtype)
+        shards["frame_embeds"] = _ns(mesh, rules, "batch", None, "embed")
+
+    specs["tokens"] = SDS((B, S), jnp.int32)
+    specs["labels"] = SDS((B, S), jnp.int32)
+    shards["tokens"] = shards["labels"] = tok
+    return specs, shards
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 dtype=jnp.bfloat16):
+    """(SDS dict, sharding dict) for one SERVE step: token + cache at
+    seq_len, writing position seq_len-1."""
+    rules = rules_for(shape, mesh, cfg)
+    api = get_api(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    cache_sds = jax.eval_shape(lambda: api.init_cache(cfg, B, S, dtype))
+    cache_ax = api.cache_axes(cfg)
+    # pad missing leading dims (scan-stacked) with None
+    cache_shards = jax.tree.map(
+        lambda sds, ax: _ns(mesh, rules,
+                            *((None,) * (len(sds.shape) - len(ax)) + tuple(ax)),
+                            shape=sds.shape),
+        cache_sds, cache_ax)
+
+    specs = {"cache": cache_sds,
+             "tokens": SDS((B,), jnp.int32),
+             "cur_pos": SDS((B,), jnp.int32)}
+    shards = {"cache": cache_shards,
+              "tokens": _ns(mesh, rules, "batch"),
+              "cur_pos": _ns(mesh, rules, "batch")}
+    if cfg.encdec is not None:
+        specs["encoder_out"] = SDS(
+            (B, cfg.encdec.encoder_seq_len, cfg.d_model), dtype)
+        shards["encoder_out"] = _ns(mesh, rules, "batch", None, "embed")
+    return specs, shards
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, rules=None, dtype=jnp.bfloat16):
+    """(params SDS tree, logical axes tree, NamedSharding tree) without
+    allocating anything (init traced under eval_shape)."""
+    api = get_api(cfg)
+    box = {}
+
+    def f():
+        p, ax = api.init(jax.random.PRNGKey(0), cfg, dtype)
+        box["ax"] = ax
+        return p
+
+    p_sds = jax.eval_shape(f)
+    ax = box["ax"]
+    rules = rules or sh.DEFAULT_RULES
+    is_ax_leaf = lambda t: (isinstance(t, tuple) and all(
+        e is None or isinstance(e, str) for e in t)) or t is None
+
+    def one(sds, a):
+        a = a or ()
+        a = ((None,) * (len(sds.shape) - len(a)) + tuple(a))[: len(sds.shape)]
+        spec = sh.filter_spec_for_mesh(sh.logical_to_spec(a, rules), mesh)
+        return NamedSharding(mesh, sh.fit_spec_to_shape(spec, sds.shape, mesh))
+
+    shards = jax.tree.map(one, p_sds, _align(ax, p_sds, is_ax_leaf))
+    return p_sds, ax, shards
+
+
+def _align(ax_tree, sds_tree, is_leaf):
+    """Return an axes tree with the same treedef as sds_tree (axes leaves
+    may sit one level up when params were vmap-stacked)."""
+    flat_sds, treedef = jax.tree.flatten(sds_tree)
+    try:
+        flat_ax = treedef.flatten_up_to(ax_tree)
+        return ax_tree
+    except Exception:
+        pass
+    # fall back: walk both trees and broadcast tuple-leaves over dict subtrees
+    def walk(ax, sds):
+        if is_leaf(ax) or ax is None:
+            if isinstance(sds, dict):
+                return {k: walk(ax, v) for k, v in sds.items()}
+            if isinstance(sds, (list, tuple)):
+                return type(sds)(walk(ax, v) for v in sds)
+            return ax
+        if isinstance(sds, dict):
+            return {k: walk(ax[k] if isinstance(ax, dict) else ax, v)
+                    for k, v in sds.items()}
+        if isinstance(sds, (list, tuple)):
+            if isinstance(ax, (list, tuple)) and len(ax) == len(sds) \
+                    and not is_leaf(ax):
+                return type(sds)(walk(a, v) for a, v in zip(ax, sds))
+            return type(sds)(walk(ax, v) for v in sds)
+        return ax
+    return walk(ax_tree, sds_tree)

@@ -1,0 +1,319 @@
+"""jit-able train / serve steps with explicit in/out shardings.
+
+``build_train_step`` / ``build_serve_step`` return (fn, arg-SDS tuple,
+in_shardings, out_shardings) ready for ``jax.jit(...).lower(...)`` (the
+dry-run) or real execution (the trainer).
+
+Workload control: when a WorkloadPlan is supplied, the step takes an extra
+``plan`` dict of device arrays (bucket_by_rank, mig_src, pri lists) and
+threads a ControlContext into the model — so the controller can retarget
+stragglers every iteration without recompiling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.config import ModelConfig, RunConfig, ShapeConfig, TrainConfig
+from repro.core.workload import PlanStatic
+from repro.layers.tp_linear import ControlContext
+from repro.models import get_api
+from repro.optim import adamw
+from repro.launch import specs as specs_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def make_ctx(mesh: Mesh, static: PlanStatic, plan: Dict[str, Any],
+             use_kernel: bool = False) -> ControlContext:
+    return ControlContext(
+        mesh=mesh, axis="model", static=static,
+        bucket_by_rank=plan["bucket_by_rank"], mig_src=plan["mig_src"],
+        pri=plan.get("pri", {}), use_kernel=use_kernel,
+        per_layer=static.per_layer)
+
+
+# scope -> layout of its priority list:
+#   "col": contraction replicated across TP -> global pri [nb]
+#   "row": contraction TP-sharded          -> per-rank pri [tp, nb]
+SCOPE_LAYOUT = {"qkv": "col", "attn_out": "row", "ffn": "row"}
+
+
+def plan_specs(static: PlanStatic, cfg: ModelConfig, mesh: Mesh,
+               scopes: Dict[str, int]):
+    """SDS + shardings for the dynamic plan arrays. scopes: name ->
+    num_blocks (layout per SCOPE_LAYOUT; per-layer plans get a leading
+    num_layers dim — the PriDiff variant)."""
+    e = static.tp_size
+    lead = (static.num_layers,) if static.per_layer else ()
+
+    def pri_shape(name, nb):
+        core = (nb,) if SCOPE_LAYOUT.get(name) == "col" else (e, nb)
+        return SDS(lead + core, jnp.int32)
+
+    specs = {"bucket_by_rank": SDS(lead + (e,), jnp.int32),
+             "mig_src": SDS((), jnp.int32),
+             "pri": {k: pri_shape(k, nb) for k, nb in scopes.items()}}
+    shards = {"bucket_by_rank": _replicated(mesh),
+              "mig_src": _replicated(mesh),
+              "pri": {k: _replicated(mesh) for k in scopes}}
+    return specs, shards
+
+
+def control_scopes(cfg: ModelConfig, static: PlanStatic) -> Dict[str, int]:
+    """Prunable scopes and their block counts for this arch at this TP.
+
+    ffn      — intermediate (d_ff/e) blocks, resizing + migration.
+    qkv      — d_model contraction blocks of the col-split projections
+               (replicated across TP, so divisibility is vs d_model).
+    attn_out — per-rank (H·hd/e) contraction blocks of the out projection.
+    A scope with no >=32-lane divisor is exempt (DESIGN.md §5/§11)."""
+    from repro.core.workload import adapt_block_size
+    e = static.tp_size
+    scopes: Dict[str, int] = {}
+    b_ffn = control_block_size(cfg, static)
+    if b_ffn:
+        scopes["ffn"] = (_controlled_dff(cfg) // e) // b_ffn
+    if cfg.num_heads and cfg.mla is None:
+        b_qkv = adapt_block_size(cfg.d_model, static.block_size)
+        if b_qkv and cfg.d_model // b_qkv >= 2:
+            scopes["qkv"] = cfg.d_model // b_qkv
+        attn_loc = (cfg.num_heads * cfg.resolved_head_dim) // e
+        b_out = adapt_block_size(attn_loc, static.block_size)
+        if b_out and attn_loc // b_out >= 2:
+            scopes["attn_out"] = attn_loc // b_out
+    return scopes
+
+
+def scope_block_table(cfg: ModelConfig, static: PlanStatic):
+    """Hashable (scope, block) pairs for PlanStatic.scope_blocks."""
+    from repro.core.workload import adapt_block_size
+    e = static.tp_size
+    out = []
+    b_ffn = control_block_size(cfg, static)
+    if b_ffn:
+        out.append(("ffn", b_ffn))
+    if cfg.num_heads and cfg.mla is None:
+        b_qkv = adapt_block_size(cfg.d_model, static.block_size)
+        if b_qkv:
+            out.append(("qkv", b_qkv))
+        b_out = adapt_block_size((cfg.num_heads * cfg.resolved_head_dim) // e,
+                                 static.block_size)
+        if b_out:
+            out.append(("attn_out", b_out))
+    return tuple(out)
+
+
+def _controlled_dff(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.moe is not None:
+        return cfg.moe.num_shared_experts * (cfg.moe.d_shared or cfg.moe.d_expert)
+    return cfg.d_ff
+
+
+def control_block_size(cfg: ModelConfig, static: PlanStatic) -> int:
+    """Largest MXU-friendly block dividing the per-rank FFN width, capped
+    by the configured preference; 0 => this arch's FFN is exempt at this
+    TP degree (recorded per DESIGN.md §5 — e.g. yi-6b's 11008/16 = 688 is
+    16·43, below the 32-lane floor)."""
+    from repro.core.workload import adapt_block_size
+    dff = _controlled_dff(cfg)
+    if dff == 0:
+        return 0
+    loc = dff // static.tp_size
+    b = adapt_block_size(loc, static.block_size)
+    if b and loc // b >= 2:
+        return b
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     train: TrainConfig = TrainConfig(),
+                     control_static: Optional[PlanStatic] = None,
+                     total_steps: int = 0):
+    """Returns (train_step, arg_sds, in_shardings, out_shardings)."""
+    cfg = specs_lib.effective_model_cfg(cfg, shape)
+    api = get_api(cfg)
+    dtype = jnp.dtype(train.param_dtype)
+    rules = specs_lib.rules_for(shape, mesh, cfg, fsdp=train.fsdp_layers)
+
+    p_sds, _, p_shards = specs_lib.param_specs(cfg, mesh, rules, dtype)
+    opt_sds = adamw.AdamWState(
+        step=SDS((), jnp.int32),
+        mu=jax.tree.map(lambda s: SDS(s.shape, jnp.float32), p_sds),
+        nu=jax.tree.map(lambda s: SDS(s.shape, jnp.float32), p_sds))
+    opt_shards = adamw.AdamWState(
+        step=_replicated(mesh),
+        mu=jax.tree.map(lambda s: s, p_shards),
+        nu=jax.tree.map(lambda s: s, p_shards))
+    b_sds, b_shards = specs_lib.batch_specs(cfg, shape, mesh, dtype)
+
+    scopes = control_scopes(cfg, control_static) if control_static else {}
+    if control_static and scopes:
+        import dataclasses as _dc
+        control_static = _dc.replace(
+            control_static,
+            scope_blocks=scope_block_table(cfg, control_static))
+        pl_sds, pl_shards = plan_specs(control_static, cfg, mesh, scopes)
+    else:
+        control_static = None
+        pl_sds = pl_shards = None
+
+    metric_shards = {"loss": _replicated(mesh),
+                     "grad_norm": _replicated(mesh), "lr": _replicated(mesh)}
+
+    def train_step(params, opt_state, batch, plan=None):
+        with sh.use_rules(rules):
+            ctx = (make_ctx(mesh, control_static, plan)
+                   if control_static is not None else None)
+
+            def lf(p, b):
+                loss, metrics = api.loss_fn(p, cfg, b, ctx=ctx,
+                                            remat=train.remat)
+                return loss, metrics
+
+            n_micro = max(train.microbatch, 1)
+            if n_micro > 1:
+                # gradient accumulation: scan over micro-batches (memory
+                # peak divides by n_micro; grads/loss averaged)
+                def split(v):
+                    return v.reshape((n_micro, v.shape[0] // n_micro)
+                                     + v.shape[1:])
+                micro = jax.tree.map(split, batch)
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def acc_step(carry, mb):
+                    g_acc, l_acc = carry
+                    (l, _), g = jax.value_and_grad(lf, has_aux=True)(params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b_: a + b_.astype(jnp.float32) / n_micro,
+                        g_acc, g)
+                    return (g_acc, l_acc + l / n_micro), None
+
+                (grads, loss), _ = jax.lax.scan(
+                    acc_step, (zeros, jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree.map(lambda g, p: g.astype(p.dtype),
+                                     grads, params)
+            else:
+                (loss, _), grads = jax.value_and_grad(
+                    lf, has_aux=True)(params, batch)
+            new_p, new_opt, om = adamw.apply(params, grads, opt_state, train,
+                                             total_steps)
+            out_metrics = {"loss": loss, "grad_norm": om["grad_norm"],
+                           "lr": om["lr"]}
+            return new_p, new_opt, out_metrics
+
+    args = (p_sds, opt_sds, b_sds) + ((pl_sds,) if pl_sds else ())
+    in_sh = (p_shards, opt_shards, b_shards) + ((pl_shards,) if pl_sds else ())
+    out_sh = (p_shards, opt_shards, metric_shards)
+    return train_step, args, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# prefill / serve steps
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       dtype=jnp.bfloat16):
+    """Forward over the full sequence producing last-token logits (the
+    inference-prefill workload)."""
+    cfg = specs_lib.effective_model_cfg(cfg, shape)
+    api = get_api(cfg)
+    rules = specs_lib.rules_for(shape, mesh, cfg)
+    p_sds, _, p_shards = specs_lib.param_specs(cfg, mesh, rules, dtype)
+    b_sds, b_shards = specs_lib.batch_specs(cfg, shape, mesh, dtype)
+    b_sds.pop("labels", None)
+    b_shards.pop("labels", None)
+
+    logits_spec = sh.filter_spec_for_mesh(
+        sh.logical_to_spec(("batch", "vocab"), rules), mesh)
+    logits_sh = NamedSharding(mesh, sh.fit_spec_to_shape(
+        logits_spec, (shape.global_batch, cfg.vocab_size or 1), mesh))
+
+    if cfg.num_classes:
+        def prefill(params, batch):
+            with sh.use_rules(rules):
+                return api.forward(params, cfg, batch["patches"])
+        out_sh = _replicated(mesh)
+    elif cfg.encdec is not None:
+        def prefill(params, batch):
+            with sh.use_rules(rules):
+                logits = api.forward(params, cfg, batch["tokens"],
+                                     batch["frame_embeds"])
+                return logits[:, -1]
+        out_sh = logits_sh
+    else:
+        def prefill(params, batch):
+            with sh.use_rules(rules):
+                logits, _, _ = api.forward(
+                    params, cfg, batch["tokens"],
+                    patch_embeds=batch.get("patch_embeds"))
+                return logits[:, -1]
+        out_sh = logits_sh
+
+    return prefill, (p_sds, b_sds), (p_shards, b_shards), out_sh
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     dtype=jnp.bfloat16):
+    """One-token decode against a seq_len KV cache."""
+    cfg = specs_lib.effective_model_cfg(cfg, shape)
+    api = get_api(cfg)
+    rules = specs_lib.rules_for(shape, mesh, cfg)
+    p_sds, _, p_shards = specs_lib.param_specs(cfg, mesh, rules, dtype)
+    d_sds, d_shards = specs_lib.decode_specs(cfg, shape, mesh, dtype)
+
+    logits_spec = sh.filter_spec_for_mesh(
+        sh.logical_to_spec(("batch", "vocab"), rules), mesh)
+    logits_sh = NamedSharding(mesh, sh.fit_spec_to_shape(
+        logits_spec, (shape.global_batch, cfg.vocab_size or 1), mesh))
+
+    if cfg.encdec is not None:
+        def serve_step(params, cache, tokens, cur_pos, encoder_out):
+            with sh.use_rules(rules):
+                return api.decode_step(params, cfg, cache, tokens, cur_pos,
+                                       encoder_out)
+        args = (p_sds, d_sds["cache"], d_sds["tokens"], d_sds["cur_pos"],
+                d_sds["encoder_out"])
+        in_sh = (p_shards, d_shards["cache"], d_shards["tokens"],
+                 d_shards["cur_pos"], d_shards["encoder_out"])
+    else:
+        def serve_step(params, cache, tokens, cur_pos):
+            with sh.use_rules(rules):
+                return api.decode_step(params, cfg, cache, tokens, cur_pos)
+        args = (p_sds, d_sds["cache"], d_sds["tokens"], d_sds["cur_pos"])
+        in_sh = (p_shards, d_shards["cache"], d_shards["tokens"],
+                 d_shards["cur_pos"])
+
+    out_sh = (logits_sh, d_shards["cache"])
+    return serve_step, args, in_sh, out_sh
+
+
+def build_step_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   train: TrainConfig = TrainConfig(),
+                   control_static: Optional[PlanStatic] = None):
+    """Dispatch on the shape kind: train_4k -> train_step;
+    prefill_32k -> prefill; decode shapes -> serve_step."""
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, train, control_static)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh,
+                                  jnp.dtype(train.param_dtype))
+    return build_serve_step(cfg, shape, mesh, jnp.dtype(train.param_dtype))

@@ -1,0 +1,340 @@
+"""End-to-end training driver with the SEMI-migration control loop.
+
+Runs a REAL (reduced-size) model on the host devices: data pipeline →
+jitted train step (with the workload-control plan as a runtime input) →
+host-side controller (straggler detection / Eq.1-3) → checkpointing.
+Heterogeneity is simulated per the paper (Sec. V-A): a χ-schedule feeds
+the iteration-time model, whose per-rank times drive the controller; the
+*measured* wall-clock of the bulk-synchronous step is then modeled as the
+max over ranks (the real cluster behavior the technique removes).
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --steps 50 \
+        --tp 4 --control semi --hetero round_robin --chi 4
+"""
+from __future__ import annotations
+
+# CLI nicety: when invoked as a script with --tp/--dp > 1, request that many
+# host devices BEFORE jax initializes (library users set XLA_FLAGS themselves).
+import os as _os
+import sys as _sys
+
+if "jax" not in _sys.modules:
+    def _argv_int(flag, default=1):
+        try:
+            return int(_sys.argv[_sys.argv.index(flag) + 1])
+        except (ValueError, IndexError):
+            return default
+    _n = _argv_int("--tp") * _argv_int("--dp")
+    if _n > 1:
+        _os.environ["XLA_FLAGS"] = (_os.environ.get("XLA_FLAGS", "")
+                                    + f" --xla_force_host_platform_device_count={_n}")
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.checkpoint import store as ckpt_store
+from repro.config import (ShapeConfig, TrainConfig, WorkloadControlConfig,
+                          get_config, smoke_variant)
+from repro.core import hetero as hetero_lib
+from repro.core.controller import SemiController, work_fraction
+from repro.core.workload import PlanStatic, WorkloadPlan
+from repro.data.pipeline import PatternImageStream, TokenTaskStream, patchify
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_small_mesh
+from repro.models import get_api
+from repro.optim import adamw
+from repro.sharding import use_mesh
+
+
+def per_rank_pri(global_pri: np.ndarray, e: int, nb_loc: int) -> np.ndarray:
+    """Split a GLOBAL keep-first block permutation into per-rank local
+    keep-first lists (rank r owns global blocks [r·nb_loc, (r+1)·nb_loc))."""
+    out = np.zeros((e, nb_loc), np.int32)
+    for r in range(e):
+        lo, hi = r * nb_loc, (r + 1) * nb_loc
+        mine = [g - lo for g in global_pri if lo <= g < hi]
+        out[r] = np.asarray(mine, np.int32)
+    return out
+
+
+@dataclasses.dataclass
+class TrainerState:
+    params: object
+    opt: object
+    step: int = 0
+
+
+def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
+                 control_mode: str = "off", hetero_kind: str = "none",
+                 chi: float = 2.0, lr: float = 3e-3, batch: int = 8,
+                 seq: int = 64, seed: int = 0, log_every: int = 10,
+                 ckpt_dir: Optional[str] = None, resume: bool = False,
+                 imputation: str = "zero", selection: str = "priority",
+                 hetero_period: int = 10, mig_blocks: int = 0,
+                 eval_every: int = 0, quiet: bool = False,
+                 force_gamma: Optional[float] = None,
+                 data_noise: float = 0.35) -> Dict:
+    """Returns a summary dict (loss/acc curves, modeled step times)."""
+    cfg = smoke_variant(get_config(arch))
+    api = get_api(cfg)
+    mesh = make_small_mesh(dp, tp)
+    train_cfg = TrainConfig(learning_rate=lr, steps=steps)
+    shape = ShapeConfig("trainer", seq, batch, "train")
+
+    control_cfg = WorkloadControlConfig(
+        enabled=control_mode != "off" or force_gamma is not None,
+        mode=control_mode if control_mode != "off" else "zero",
+        imputation=imputation, selection=selection,
+        block_size=8)
+    control_static = None
+    if control_cfg.enabled:
+        control_static = PlanStatic(
+            buckets=control_cfg.gamma_buckets,
+            block_size=control_cfg.block_size,
+            mig_blocks=mig_blocks, tp_size=tp,
+            imputation=imputation)
+
+    with use_mesh(mesh):
+        fn, args_sds, in_sh, out_sh = steps_lib.build_train_step(
+            cfg, shape, mesh, train_cfg, control_static, total_steps=steps)
+        step_jit = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+
+        # real init
+        box = {}
+        def init_fn():
+            p, ax = api.init(jax.random.PRNGKey(seed), cfg,
+                             jnp.dtype(train_cfg.param_dtype))
+            box["ax"] = ax
+            return p
+        params = jax.jit(init_fn, out_shardings=in_sh[0])()
+        opt = jax.device_put(adamw.init(params), in_sh[1])
+
+        start_step = 0
+        if ckpt_dir and resume:
+            last = ckpt_store.latest_step(ckpt_dir)
+            if last is not None:
+                params = ckpt_store.restore(ckpt_dir, last, params, in_sh[0])
+                start_step = last
+
+        # data
+        if cfg.num_classes:
+            stream = iter(PatternImageStream(batch_size=batch, seed=seed,
+                                             noise=data_noise))
+            eval_stream = iter(PatternImageStream(batch_size=batch,
+                                                  seed=seed + 777,
+                                                  noise=data_noise))
+        else:
+            stream = iter(TokenTaskStream(cfg.vocab_size, seq, batch,
+                                          seed=seed))
+            eval_stream = None
+
+        def make_batch():
+            b = next(stream)
+            if cfg.num_classes:
+                b = {"patches": patchify(b["images"]), "labels": b["labels"]}
+            if cfg.family == "vlm" and cfg.frontend and not cfg.num_classes:
+                b["patch_embeds"] = np.random.default_rng(0).standard_normal(
+                    (batch, cfg.frontend.num_tokens, cfg.d_model)).astype(
+                        np.float32) * 0.02
+            if cfg.encdec is not None:
+                b["frame_embeds"] = np.random.default_rng(0).standard_normal(
+                    (batch, cfg.encdec.encoder_seq_len, cfg.d_model)).astype(
+                        np.float32) * 0.02
+            return b
+
+        # controller machinery
+        scopes = steps_lib.control_scopes(cfg, control_static) \
+            if control_static else {}
+        it_model = hetero_lib.iteration_model(cfg, shape, max(tp, 1),
+                                              peak_flops=5e9, mfu=1.0)
+        schedule = hetero_lib.HeteroSchedule(
+            num_ranks=tp, kind=hetero_kind,
+            chis=(chi,) if hetero_kind in ("static", "round_robin") else (),
+            period=hetero_period, contention_chi=chi, seed=seed)
+        controller = (SemiController(control_cfg, tp, it_model,
+                                     list(scopes.values())[0] * tp
+                                     if scopes else 1, seed=seed)
+                      if control_cfg.enabled and scopes else None)
+
+        nb_loc = list(scopes.values())[0] if scopes else 0
+        work_frac = np.ones((tp,))
+        history = {"loss": [], "acc": [], "modeled_step_s": [],
+                   "gammas": [], "mig": []}
+
+        def scope_stats():
+            """Mean-over-layers weight matrices per controlled scope:
+            ffn -> w_down [d_ff, d]; qkv -> wq [d, H*hd]; attn_out ->
+            wo [H*hd, d] (contraction dim first in every case)."""
+            st = params["stack"] if "stack" in params else params.get("decoder", {})
+            scan = st.get("scan") if isinstance(st, dict) else None
+            if scan is None:
+                return {}
+            out = {}
+            for grp in (scan if isinstance(scan, tuple) else (scan,)):
+                if not isinstance(grp, dict):
+                    continue
+                if "ffn" in grp and "ffn" in scopes and "ffn" not in out:
+                    out["ffn"] = np.asarray(
+                        jax.device_get(grp["ffn"]["w_down"])).mean(axis=0)
+                if "attn" in grp and isinstance(grp["attn"], dict):
+                    if "qkv" in scopes and "wq" in grp["attn"] and "qkv" not in out:
+                        out["qkv"] = np.asarray(
+                            jax.device_get(grp["attn"]["wq"])).mean(axis=0)
+                    if "attn_out" in scopes and "wo" in grp["attn"]                             and "attn_out" not in out:
+                        out["attn_out"] = np.asarray(
+                            jax.device_get(grp["attn"]["wo"])).mean(axis=0)
+            return out
+
+        for it in range(start_step, steps):
+            chis = schedule.chi(it)
+            plan_arrays = None
+            report = None
+            if controller is not None:
+                if force_gamma is not None:
+                    # Figs. 5/6: force a uniform γ on EVERY rank
+                    from repro.core.workload import (PlanDynamic,
+                                                     bucket_for_gamma)
+                    b = bucket_for_gamma(force_gamma, control_cfg.gamma_buckets)
+                    plan = WorkloadPlan(
+                        control_static,
+                        PlanDynamic(
+                            bucket_by_rank=np.full((tp,), b, np.int32),
+                            mig_src=np.array(-1, np.int32),
+                            pri_lists=controller.pri_lists()))
+                    report = None
+                else:
+                    # feed the controller FULL-workload-equivalent times:
+                    # a rank whose last iteration ran pruned would otherwise
+                    # stop looking slow and oscillate prune/unprune (the
+                    # paper's Eq. 1 measures the heterogeneity degree, not
+                    # the already-mitigated runtime)
+                    times = it_model.times(chis, np.ones(tp))
+                    plan, report = controller.plan(times)
+                # per-scope priority lists: global keep-first permutations
+                # from the controller's stats, split per rank for row scopes
+                pri_all = {}
+                for name, nb in scopes.items():
+                    pri = plan.dynamic.pri_lists.get(name)
+                    layout = steps_lib.SCOPE_LAYOUT.get(name, "row")
+                    if layout == "col":
+                        if pri is None or pri.shape[0] != nb:
+                            pri = np.arange(nb, dtype=np.int32)
+                        pri_all[name] = jnp.asarray(pri)
+                    else:
+                        nb_total = nb * tp
+                        if pri is None or pri.shape[0] != nb_total:
+                            pri = np.arange(nb_total, dtype=np.int32)
+                        pri_all[name] = jnp.asarray(per_rank_pri(pri, tp, nb))
+                plan_arrays = {
+                    "bucket_by_rank": jnp.asarray(plan.dynamic.bucket_by_rank),
+                    "mig_src": jnp.asarray(plan.dynamic.mig_src),
+                    "pri": pri_all,
+                }
+                # mig_blocks static: clamp runtime plan to the compiled slot
+                if control_static.mig_blocks == 0:
+                    plan_arrays["mig_src"] = jnp.asarray(
+                        np.int32(-1))
+                work_frac = work_fraction(plan, nb_loc)
+
+            b = make_batch()
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+            t0 = time.time()
+            if plan_arrays is not None:
+                params, opt, metrics = step_jit(params, opt, b, plan_arrays)
+            else:
+                params, opt, metrics = step_jit(params, opt, b)
+            metrics = jax.device_get(metrics)
+            wall = time.time() - t0
+
+            # modeled bulk-synchronous step time (the paper's RT metric)
+            modeled = it_model.step_time(chis, work_frac)
+            history["loss"].append(float(metrics["loss"]))
+            history["modeled_step_s"].append(modeled)
+            if report is not None:
+                history["gammas"].append(
+                    {int(k): float(v) for k, v in report.gammas.items()})
+                history["mig"].append(int(report.mig_src))
+
+            if controller is not None and (it + 1) % 10 == 0:
+                stats = scope_stats()
+                if stats:
+                    controller.observe_weights(stats, control_cfg.block_size)
+
+            if eval_every and (it + 1) % eval_every == 0 and cfg.num_classes:
+                from repro.data.pipeline import eval_accuracy
+                def predict(bb):
+                    return api.forward(params, cfg,
+                                       jnp.asarray(patchify(bb["images"])))
+                acc = eval_accuracy(predict, eval_stream, 4)
+                history["acc"].append(acc)
+                if not quiet:
+                    print(f"  step {it+1}: eval acc {acc:.3f}")
+
+            if not quiet and (it + 1) % log_every == 0:
+                print(f"step {it+1:4d} loss={metrics['loss']:.4f} "
+                      f"wall={wall*1e3:.0f}ms modeled={modeled*1e3:.1f}ms")
+
+            if ckpt_dir and (it + 1) % 50 == 0:
+                ckpt_store.save(ckpt_dir, it + 1, params)
+
+        if ckpt_dir:
+            ckpt_store.save(ckpt_dir, steps, params)
+        history["final_loss"] = history["loss"][-1] if history["loss"] else None
+        history["mean_modeled_step_s"] = float(
+            np.mean(history["modeled_step_s"])) if history["modeled_step_s"] else 0
+        return history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vit-1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--control", default="off",
+                    choices=["off", "zero", "mig", "semi"])
+    ap.add_argument("--hetero", default="none",
+                    choices=["none", "static", "round_robin", "contention"])
+    ap.add_argument("--chi", type=float, default=2.0)
+    ap.add_argument("--mig-blocks", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--imputation", default="zero",
+                    choices=["zero", "average", "same"])
+    ap.add_argument("--selection", default="priority",
+                    choices=["random", "priority", "priority_diff"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write history JSON here")
+    args = ap.parse_args()
+
+    hist = run_training(
+        args.arch, steps=args.steps, tp=args.tp, dp=args.dp,
+        control_mode=args.control, hetero_kind=args.hetero, chi=args.chi,
+        lr=args.lr, batch=args.batch, seq=args.seq, seed=args.seed,
+        ckpt_dir=args.ckpt_dir, resume=args.resume,
+        imputation=args.imputation, selection=args.selection,
+        mig_blocks=args.mig_blocks, eval_every=args.eval_every)
+    print(f"final loss: {hist['final_loss']:.4f}  "
+          f"mean modeled step: {hist['mean_modeled_step_s']*1e3:.2f} ms")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(hist, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

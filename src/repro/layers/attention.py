@@ -1,0 +1,195 @@
+"""Attention layers: GQA with RoPE / M-RoPE / learned positions, sliding
+windows, MLA (DeepSeek-V2), chunked flash-style softmax, and decode paths.
+
+Memory discipline: prefill/train attention never materializes the [S, S]
+score matrix — a two-level ``lax.scan`` over query/KV chunks maintains the
+online-softmax (m, l, acc) state, so 32k-sequence prefill lowers with
+bounded per-device memory. Decode (single query) materializes [*, S]
+scores, which GSPMD shards over the mesh (sequence over `data` for the
+500k cache).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions [...,] -> angles [..., head_dim/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [B, S, H, D]; positions [B, S] (or [S])."""
+    d = x.shape[-1]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = rope_angles(positions, d, theta)              # [B, S, D/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+MROPE_SECTIONS = (16, 24, 24)   # temporal/height/width halves (Qwen2-VL)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, ...] = MROPE_SECTIONS) -> jax.Array:
+    """Multimodal RoPE: x [B, S, H, D]; positions3 [B, S, 3].
+
+    The D/2 frequency lanes are split into (temporal, height, width)
+    sections; each section rotates by its own position stream. For pure
+    text all three streams are equal and M-RoPE reduces to RoPE.
+    """
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    sec = jnp.cumsum(jnp.array((0,) + tuple(sections)))
+    lane = jnp.arange(d // 2)
+    which = jnp.searchsorted(sec[1:], lane, side="right")   # [D/2] in {0,1,2}
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),                      # [B, S, 3]
+        jnp.broadcast_to(which[None, None, :], positions3.shape[:2] + (d // 2,)),
+        axis=-1)                                             # [B, S, D/2]
+    ang = pos * freqs[None, None, :]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    q_positions: jax.Array, kv_positions: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    bias: Optional[jax.Array] = None) -> jax.Array:
+    """Online-softmax attention.
+
+    q [B, Hq, Sq, D]; k, v [B, Hkv, Skv, D]; Hq % Hkv == 0 (GQA groups are
+    kept factored — KV is never repeated to Hq). positions are int32 [Sq] /
+    [Skv] used for causal and sliding-window masks (window=0 => full).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]                                     # may differ (MLA)
+    G = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    pad_q = (-Sq) % qc
+    pad_k = (-Skv) % kc
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    posq = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    posk = jnp.pad(kv_positions, (0, pad_k), constant_values=2 ** 30)
+
+    nq, nk = (Sq + pad_q) // qc, (Skv + pad_k) // kc
+    qp = qp.reshape(B, Hkv, G, nq, qc, D).transpose(3, 0, 1, 2, 4, 5)
+    kp = kp.reshape(B, Hkv, nk, kc, D).transpose(2, 0, 1, 3, 4)
+    vp = vp.reshape(B, Hkv, nk, kc, Dv).transpose(2, 0, 1, 3, 4)
+    posq = posq.reshape(nq, qc)
+    posk = posk.reshape(nk, kc)
+
+    def q_step(_, q_blk):
+        q_i, pq = q_blk                                      # [B,Hkv,G,qc,D], [qc]
+        m0 = jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qc, Dv), jnp.float32)
+
+        def kv_step(carry, kv_blk):
+            m, l, acc = carry
+            k_j, v_j, pk = kv_blk
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= pk[None, :] <= pq[:, None]
+            if window > 0:
+                mask &= pq[:, None] - pk[None, :] < window
+            mask &= (pq[:, None] >= 0) & (pk[None, :] < 2 ** 30)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_j, preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kp, vp, posk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = lax.scan(q_step, None, (qp, posq))
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, Sq + pad_q, Dv)
+    return out[:, :, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token vs. a cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     cur_pos: jax.Array, window: int = 0) -> jax.Array:
+    """q [B, Hq, 1, D]; caches [B, Hkv, S, D]; cur_pos [B] (position of the
+    new token). Attends to cache positions p <= cur_pos (and within the
+    sliding window if set). Scores [B, Hkv, G, S] — GSPMD shards S."""
+    B, Hq, _, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)[None, :]                     # [1, S]
+    ok = pos <= cur_pos[:, None]
+    if window > 0:
+        ok &= pos > cur_pos[:, None] - window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+def mla_decode_attention(q_nope_abs: jax.Array, q_rope: jax.Array,
+                         latent_cache: jax.Array, rope_cache: jax.Array, *,
+                         cur_pos: jax.Array, head_dim_for_scale: int) -> jax.Array:
+    """Absorbed MLA decode (DeepSeek-V2): scores against the compressed
+    latent — K/V are never expanded.
+
+    q_nope_abs [B, H, R]   (W_uk^T q_nope, R = kv_lora_rank)
+    q_rope     [B, H, Dr]
+    latent_cache [B, S, R]; rope_cache [B, S, Dr]. Returns [B, H, R]
+    (attention-weighted latents; caller applies W_uv). The softmax scale
+    uses the ORIGINAL qk head dim (nope+rope), not the latent rank."""
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim_for_scale))
+    s = (jnp.einsum("bhr,bsr->bhs", q_nope_abs, latent_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhd,bsd->bhs", q_rope, rope_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    S = latent_cache.shape[1]
+    ok = jnp.arange(S)[None, :] <= cur_pos[:, None]
+    s = jnp.where(ok[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", p, latent_cache,
+                      preferred_element_type=jnp.float32)

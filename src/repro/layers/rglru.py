@@ -1,0 +1,81 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+a_t = exp(−c · softplus(Λ) ⊙ σ(W_a x_t)),   i_t = σ(W_x x_t)
+
+wrapped in the Griffin recurrent block: linear in (2 branches), depthwise
+conv1d on the recurrent branch, RG-LRU, gated merge, linear out. Solved
+with the same chunked associative scan as the SSM (linear diagonal
+recurrence). Decode carries (h, conv) state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import RGLRUConfig
+from repro.layers.ssm import _ssm_assoc_scan
+
+_C = 8.0  # Griffin's fixed constant
+
+
+def rglru_block(x: jax.Array, params: dict, cfg: RGLRUConfig, *,
+                state: Optional[Tuple[jax.Array, jax.Array]] = None,
+                chunk: int = 256
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """x [B, S, d_model] -> (y [B, S, d_model], (h_state, conv_state))."""
+    B, S, _ = x.shape
+    W = params["lam"].shape[0]                              # lru_width
+
+    gate_br = jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"])
+    rec = jnp.einsum("bsd,dw->bsw", x, params["w_rec_branch"])
+
+    # depthwise causal conv on the recurrent branch
+    wconv = params["conv_w"]                                # [width, W]
+    prev = (state[1] if state is not None
+            else jnp.zeros((B, cfg.conv1d_width - 1, W), x.dtype))
+    xpad = jnp.concatenate([prev, rec], axis=1)
+    rec = sum(xpad[:, i:i + S] * wconv[i][None, None]
+              for i in range(cfg.conv1d_width)) + params["conv_b"][None, None]
+    new_conv_state = xpad[:, S:, :]
+
+    # RG-LRU gates
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", rec, params["w_a"])
+                       + params["b_a"][None, None])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", rec, params["w_x"])
+                       + params["b_x"][None, None])
+    log_a = -_C * jax.nn.softplus(params["lam"])[None, None] * r
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gated = (i * rec).astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a ** 2, 1e-12))
+    bx = beta * gated
+
+    h0 = (state[0].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, W), jnp.float32))
+
+    if S == 1:
+        h_last = a[:, 0] * h0 + bx[:, 0]
+        h_all = h_last[:, None]
+    else:
+        pad = (-S) % chunk
+        a_p = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        bx_p = jnp.pad(bx, ((0, 0), (0, pad), (0, 0)))
+        nc = (S + pad) // chunk
+        # reuse the [B,S,d,N] scan with N=1
+        a_c = a_p.reshape(B, nc, chunk, W, 1).transpose(1, 0, 2, 3, 4)
+        bx_c = bx_p.reshape(B, nc, chunk, W, 1).transpose(1, 0, 2, 3, 4)
+
+        def step(h, blk):
+            a_i, bx_i = blk
+            h_i, h_next = _ssm_assoc_scan(a_i, bx_i, h[..., None])
+            return h_next[..., 0], h_i[..., 0]
+
+        h_last, h_chunks = lax.scan(step, h0, (a_c, bx_c))
+        h_all = h_chunks.transpose(1, 0, 2, 3).reshape(B, S + pad, W)[:, :S]
+
+    merged = h_all.astype(x.dtype) * jax.nn.gelu(gate_br)
+    out = jnp.einsum("bsw,wd->bsd", merged, params["w_out"])
+    return out, (h_last, new_conv_state)

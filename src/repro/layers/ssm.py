@@ -1,0 +1,122 @@
+"""Mamba-1 selective SSM block (Falcon-Mamba) in JAX.
+
+Recurrence: h_t = exp(dt_t ⊙ A) h_{t-1} + dt_t ⊙ B_t x_t ;  y_t = C_t·h_t + D x_t
+
+Training/prefill runs a chunked scan: ``lax.scan`` over sequence chunks
+carrying the [B, d_inner, N] state; inside a chunk the linear recurrence
+is solved with ``lax.associative_scan`` (work-efficient, parallel). Decode
+is a single state update. The recurrence itself is not a TP matmul and is
+excluded from ZERO-resizing (DESIGN.md §5); the in/out projections (the
+FLOPs majority) are TP-split and controlled.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import SSMConfig
+
+
+def _ssm_assoc_scan(a: jax.Array, bx: jax.Array, h0: jax.Array):
+    """Solve h_t = a_t * h_{t-1} + bx_t along axis 1 (seq). a, bx:
+    [B, S, d, N]; h0 [B, d, N]. Returns (h [B,S,d,N], h_last)."""
+    # fold h0 into the first step: bx_0' = a_0*h0 + bx_0
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_s, h = lax.associative_scan(combine, (a, bx), axis=1)
+    return h, h[:, -1]
+
+
+def mamba_mixer(x: jax.Array, params: dict, cfg: SSMConfig, *,
+                state: Optional[Tuple[jax.Array, jax.Array]] = None,
+                chunk: int = 256
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """x [B, S, d_model] -> (y [B, S, d_model], (ssm_state, conv_state)).
+
+    state: (h [B, d_inner, N], conv buf [B, d_conv-1, d_inner]) for decode
+    continuation; None starts from zeros.
+    """
+    B, S, d_model = x.shape
+    d_in = params["A_log"].shape[0]
+    N = cfg.d_state
+
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])       # [B,S,2*d_in]
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv1d (width d_conv) over sequence
+    wconv = params["conv_w"]                                # [d_conv, d_in]
+    prev = (state[1] if state is not None
+            else jnp.zeros((B, cfg.d_conv - 1, d_in), x.dtype))
+    xpad = jnp.concatenate([prev, xi], axis=1)              # [B, S+dc-1, d_in]
+    conv = sum(xpad[:, i:i + S] * wconv[i][None, None]
+               for i in range(cfg.d_conv))
+    conv = conv + params["conv_b"][None, None]
+    new_conv_state = xpad[:, S:, :] if cfg.d_conv > 1 else prev
+    xi = jax.nn.silu(conv)
+
+    # input-dependent dt, B, C
+    dt_rank = params["w_dt"].shape[0]
+    dbc = jnp.einsum("bsd,dr->bsr", xi, params["w_x"])      # [B,S,dt_rank+2N]
+    dt, Bmat, Cmat = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt, params["w_dt"])
+                         + params["dt_bias"][None, None])   # [B,S,d_in]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))       # [d_in, N]
+
+    h0 = (state[0].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, d_in, N), jnp.float32))
+
+    if S == 1:  # decode fast path
+        a1 = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * A[None])
+        bx1 = (dt[:, 0, :, None] * Bmat[:, 0, None, :].astype(dt.dtype)
+               * xi[:, 0, :, None]).astype(jnp.float32)
+        h_last = a1 * h0 + bx1
+        y = jnp.einsum("bdn,bn->bd", h_last.astype(x.dtype),
+                       Cmat[:, 0])[:, None]
+    else:
+        # §Perf: the discretized (a, bx) and state trajectories live ONLY
+        # inside the chunk scan — the [B, S, d_in, N] tensors that
+        # dominated memory (1.5 TB/device at train_4k) never materialize.
+        pad = (-S) % chunk
+        nc = (S + pad) // chunk
+
+        def cpad(v, fill=0.0):
+            return jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2),
+                           constant_values=fill)
+
+        def chunked(v):
+            return v.reshape((B, nc, chunk) + v.shape[2:]).transpose(
+                (1, 0, 2) + tuple(range(3, v.ndim + 1)))
+
+        xi_c = chunked(cpad(xi))
+        dt_c = chunked(cpad(dt))
+        B_c = chunked(cpad(Bmat))
+        C_c = chunked(cpad(Cmat))
+
+        @jax.checkpoint
+        def step(h, blk):
+            # remat: without this, autodiff saves the [B,chunk,d_in,N]
+            # (a, bx, h) trajectories of EVERY chunk — the 1.4 TB/device
+            # §Perf finding. Recomputing them in bwd costs ~1 extra scan.
+            xi_i, dt_i, B_i, C_i = blk                  # [B, chunk, ...]
+            a_i = jnp.exp(dt_i[..., None].astype(jnp.float32) * A[None, None])
+            bx_i = (dt_i[..., None] * B_i[:, :, None, :].astype(dt_i.dtype)
+                    * xi_i[..., None]).astype(jnp.float32)
+            h_i, h_next = _ssm_assoc_scan(a_i, bx_i, h)
+            y_i = jnp.einsum("bsdn,bsn->bsd", h_i.astype(xi_i.dtype), C_i)
+            return h_next, y_i
+
+        h_last, y_chunks = lax.scan(step, h0, (xi_c, dt_c, B_c, C_c))
+        y = y_chunks.transpose(1, 0, 2, 3).reshape(B, S + pad, d_in)[:, :S]
+
+    y = y + params["D"][None, None] * xi
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, (h_last.astype(jnp.float32), new_conv_state)

@@ -1,0 +1,285 @@
+"""Tensor-parallel linear layers with flexible workload control.
+
+Two execution paths per op:
+
+* **plain** (ctx is None / neutral): einsum + logical-axis sharding
+  constraints — GSPMD handles the TP partitioning (used for baseline
+  dry-runs and when the controller reports no stragglers).
+* **controlled**: a ``jax.shard_map`` block over the TP ("model") axis in
+  which each rank applies its γ-bucket (ZERO-resizing ``lax.switch``) and,
+  for FFN pairs, the straggler sheds `m` intermediate blocks to helpers
+  (migration with reduce-merging). Plan semantics per rank, over its local
+  keep-first priority list `pri`:
+
+      [ keep (kc_b - m·is_straggler) | migrate m (straggler only) | pruned ]
+
+  Branches are duplicated for the straggler (keep kc_b − m) so migrated
+  blocks are truly not computed locally (static shapes, real FLOP cut).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import resizing
+from repro.core.workload import PlanStatic, keep_blocks_for_bucket
+from repro.sharding import filter_spec_for_mesh, shard
+
+
+@dataclasses.dataclass
+class ControlContext:
+    """Device-side plan handed to controlled layers.
+
+    Arrays may carry a leading layer dimension (scan slices it off):
+      bucket_by_rank: [e] or [L, e] int32
+      mig_src:        [] int32 (−1 = no migration this step)
+      pri:            scope -> [nb] / [e, nb_loc] (+ optional leading L)
+    """
+
+    mesh: Mesh
+    axis: str
+    static: PlanStatic
+    bucket_by_rank: jax.Array
+    mig_src: jax.Array
+    pri: Dict[str, jax.Array]
+    use_kernel: bool = False
+    per_layer: bool = False      # arrays carry a leading layer dim (PriDiff)
+
+    @property
+    def tp(self) -> int:
+        return self.static.tp_size
+
+    def layer_slice(self, bucket, pri) -> "ControlContext":
+        """Rebind per-layer arrays (used inside scan bodies / unrolled ends)."""
+        return dataclasses.replace(self, bucket_by_rank=bucket, pri=pri,
+                                   per_layer=False)
+
+
+def _spec(mesh: Mesh, *parts) -> P:
+    return filter_spec_for_mesh(P(*parts), mesh)
+
+
+# ---------------------------------------------------------------------------
+# Plain path
+# ---------------------------------------------------------------------------
+
+
+def dense(x: jax.Array, w: jax.Array, out_axes, *, mesh=None) -> jax.Array:
+    """x [..., K] @ w [K, N] with a logical sharding constraint on y."""
+    y = jnp.einsum("...k,kn->...n", x, w)
+    return shard(y, out_axes, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Controlled projection (resizing only) — attention/SSM projections
+# ---------------------------------------------------------------------------
+
+
+def controlled_proj(x: jax.Array, w: jax.Array, ctx: Optional[ControlContext],
+                    scope: str, *, split: str, out_axes=None) -> jax.Array:
+    """TP linear with per-rank ZERO-resizing on the contraction dim.
+
+    split="col": w [K, N] partitioned on N over the TP axis; x replicated
+      on TP. Resizing prunes K blocks (the paper's Fig. 2 forward case).
+    split="row": w [K, N] partitioned on K; x partitioned on its last dim.
+      Resizing prunes local K blocks; output psum'd over the TP axis.
+    """
+    if ctx is None or scope not in ctx.pri:
+        if split == "row":
+            y = jnp.einsum("...k,kn->...n", x, w)
+            return shard(y, out_axes, mesh=ctx.mesh if ctx else None) \
+                if out_axes else y
+        return dense(x, w, out_axes, mesh=ctx.mesh if ctx else None) \
+            if out_axes else jnp.einsum("...k,kn->...n", x, w)
+
+    mesh, axis = ctx.mesh, ctx.axis
+    st = ctx.static
+    blk = st.block_for(scope)
+    pri = ctx.pri[scope]
+    lead = x.shape[:-1]
+
+    if split == "col":
+        in_specs = (_spec(mesh, *([None] * len(lead)), None),
+                    _spec(mesh, None, axis),
+                    _spec(mesh, axis),            # bucket_by_rank [e] -> [1]
+                    _spec(mesh, None))            # pri [nb] replicated
+        out_spec = _spec(mesh, *([None] * len(lead)), axis)
+
+        def body(x_, w_, bucket_, pri_):
+            return resizing.switched_matmul(
+                x_, w_, pri_, bucket_[0], buckets=st.buckets,
+                block=blk, use_kernel=ctx.use_kernel)
+
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_spec, check_vma=False)(
+            x, w, ctx.bucket_by_rank, pri)
+
+    # row-split: x last dim and w first dim are sharded; per-rank pri [e, nb]
+    in_specs = (_spec(mesh, *([None] * len(lead)), axis),
+                _spec(mesh, axis, None),
+                _spec(mesh, axis),
+                _spec(mesh, axis, None))
+    out_spec = _spec(mesh, *([None] * len(lead)), None)
+
+    def body_row(x_, w_, bucket_, pri_):
+        y = resizing.switched_matmul(
+            x_, w_, pri_[0], bucket_[0], buckets=st.buckets,
+            block=blk, use_kernel=ctx.use_kernel)
+        return lax.psum(y, axis)
+
+    return jax.shard_map(body_row, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_spec, check_vma=False)(
+        x, w, ctx.bucket_by_rank, pri)
+
+
+# ---------------------------------------------------------------------------
+# Controlled FFN pair (resizing + migration with reduce-merging)
+# ---------------------------------------------------------------------------
+
+
+def _gather_cols_mat(w, ids, block):
+    d, H = w.shape
+    return jnp.take(w.reshape(d, H // block, block), ids, axis=1) \
+        .reshape(d, ids.shape[0] * block)
+
+
+def controlled_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
+                   ctx: Optional[ControlContext], scope: str,
+                   act_fn: Callable, w_gate: Optional[jax.Array] = None,
+                   out_axes=("batch", None, "embed")) -> jax.Array:
+    """FFN pair y = act(x@w_up[,·gate]) @ w_down under workload control.
+
+    w_up/w_gate: [d, H] column-split over TP; w_down: [H, d_out] row-split.
+    The intermediate H blocks are the controlled workload unit: each rank
+    resizes by its bucket; the straggler additionally migrates `m` blocks
+    which helpers compute from broadcast slices and merge into the final
+    psum (reduce-merging, Sec. IV-A).
+    """
+    if ctx is None or scope not in ctx.pri:
+        h = jnp.einsum("...k,kh->...h", x, w_up)
+        mesh = ctx.mesh if ctx else None
+        h = shard(h, ("batch", None, "mlp"), mesh=mesh) if h.ndim == 3 else h
+        if w_gate is not None:
+            h = act_fn(jnp.einsum("...k,kh->...h", x, w_gate)) * h
+        else:
+            h = act_fn(h)
+        y = jnp.einsum("...h,hd->...d", h, w_down)
+        return shard(y, out_axes, mesh=mesh) if y.ndim == 3 else y
+
+    mesh, axis = ctx.mesh, ctx.axis
+    st = ctx.static
+    blk = st.block_for(scope)
+    e = st.tp_size
+    m = st.mig_blocks
+    pri = ctx.pri[scope]                       # [e, nb_loc]
+    lead = x.shape[:-1]
+    nl = len(lead)
+
+    in_specs = (_spec(mesh, *([None] * nl), None),       # x replicated on TP
+                _spec(mesh, None, axis),                 # w_up col-split
+                _spec(mesh, axis, None),                 # w_down row-split
+                _spec(mesh, None, axis) if w_gate is not None else None,
+                _spec(mesh, axis),                       # bucket [e]
+                _spec(mesh, axis, None),                 # pri [e, nb]
+                _spec(mesh),                             # mig_src scalar
+                )
+    if w_gate is None:
+        in_specs = in_specs[:3] + in_specs[4:]
+    out_spec = _spec(mesh, *([None] * nl), None)
+
+    def body(x_, w_up_, w_down_, *rest):
+        if w_gate is not None:
+            w_gate_, bucket_, pri_, mig_src_ = rest
+        else:
+            bucket_, pri_, mig_src_ = rest
+            w_gate_ = None
+        x2 = x_.reshape(-1, x_.shape[-1])
+        pri_ = pri_[0]
+        bucket_self = bucket_[0]
+        rank = lax.axis_index(axis)
+        Hloc = w_up_.shape[1]
+        nb = Hloc // blk
+        enabled = jnp.logical_and(mig_src_ >= 0, m > 0)
+        is_straggler = jnp.logical_and(enabled, rank == mig_src_)
+
+        # ---- per-rank local compute: switch over (bucket × straggler) ----
+        def make_branch(kc: int):
+            kc = max(1, min(kc, nb))
+
+            def branch(ops_):
+                x2_, wu, wg, wd, pri_b = ops_
+                keep = jnp.sort(pri_b[:kc])
+                wu_k = _gather_cols_mat(wu, keep, blk)
+                h = x2_ @ wu_k
+                if wg is not None:
+                    h = act_fn(x2_ @ _gather_cols_mat(wg, keep, blk)) * h
+                else:
+                    h = act_fn(h)
+                return h @ resizing.gather_rows(wd, keep, blk)
+            return branch
+
+        kcs = [keep_blocks_for_bucket(g, nb) for g in st.buckets]
+        branches = [make_branch(kc) for kc in kcs]
+        if m > 0:
+            branches += [make_branch(kc - m) for kc in kcs]
+        branch_idx = bucket_self + len(st.buckets) * is_straggler.astype(jnp.int32)
+        partial = lax.switch(branch_idx, branches,
+                             (x2, w_up_, w_gate_, w_down_, pri_))
+
+        # ---- migration: straggler exports blocks [kc_self - m, kc_self) --
+        if m > 0:
+            kc_table = jnp.array(kcs, jnp.int32)
+            kc_self = kc_table[bucket_self]
+            start = jnp.clip(kc_self - m, 0, nb - m)
+            mig_ids = lax.dynamic_slice_in_dim(pri_, start, m)
+
+            exp_up = _gather_cols_mat(w_up_, mig_ids, blk)
+            exp_down = resizing.gather_rows(w_down_, mig_ids, blk)
+            src = jnp.where(enabled, mig_src_, 0)
+
+            def bcast(v):
+                contrib = jnp.where(rank == src, v, jnp.zeros_like(v))
+                return lax.psum(contrib, axis)
+
+            b_up, b_down = bcast(exp_up), bcast(exp_down)
+            b_gate = bcast(_gather_cols_mat(w_gate_, mig_ids, blk)) \
+                if w_gate_ is not None else None
+
+            m_per = -(-m // max(e - 1, 1))
+            m_pad = m_per * max(e - 1, 1)
+            pad = m_pad - m
+            if pad:
+                b_up = jnp.pad(b_up, ((0, 0), (0, pad * blk)))
+                b_down = jnp.pad(b_down, ((0, pad * blk), (0, 0)))
+                if b_gate is not None:
+                    b_gate = jnp.pad(b_gate, ((0, 0), (0, pad * blk)))
+
+            rprime = (rank + e - src) % e
+            is_helper = jnp.logical_and(enabled, rprime > 0)
+            lo = (jnp.maximum(rprime, 1) - 1) * m_per * blk
+            sl_up = lax.dynamic_slice_in_dim(b_up, lo, m_per * blk, 1)
+            sl_down = lax.dynamic_slice_in_dim(b_down, lo, m_per * blk, 0)
+            h_mig = x2 @ sl_up
+            if b_gate is not None:
+                sl_gate = lax.dynamic_slice_in_dim(b_gate, lo, m_per * blk, 1)
+                h_mig = act_fn(x2 @ sl_gate) * h_mig
+            else:
+                h_mig = act_fn(h_mig)
+            # mask padded block lanes and non-helpers, then REDUCE-MERGE
+            col = jnp.arange(m_per * blk) + lo
+            lane_ok = (col < m * blk).astype(x2.dtype)
+            delta = (h_mig * (lane_ok * is_helper.astype(x2.dtype))[None, :]) @ sl_down
+            partial = partial + delta
+
+        y = lax.psum(partial, axis)
+        return y.reshape(*lead, w_down_.shape[1])
+
+    args = (x, w_up, w_down) + ((w_gate,) if w_gate is not None else ()) + (
+        ctx.bucket_by_rank, pri, ctx.mig_src)
+    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_spec, check_vma=False)(*args)

@@ -1,0 +1,38 @@
+"""Model registry: family -> functional API."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init: Callable
+    loss_fn: Callable
+    forward: Callable
+    init_cache: Optional[Callable] = None
+    cache_axes: Optional[Callable] = None
+    decode_step: Optional[Callable] = None
+    encode: Optional[Callable] = None      # enc-dec only
+
+    @property
+    def has_decode(self) -> bool:
+        return self.decode_step is not None
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.num_classes:                     # the paper's ViT classifier
+        from repro.models import vit
+        return ModelAPI(init=vit.init, loss_fn=vit.loss_fn, forward=vit.forward)
+    if cfg.encdec is not None:
+        from repro.models import encdec
+        return ModelAPI(init=encdec.init, loss_fn=encdec.loss_fn,
+                        forward=encdec.forward, init_cache=encdec.init_cache,
+                        cache_axes=encdec.cache_axes,
+                        decode_step=encdec.decode_step, encode=encdec.encode)
+    from repro.models import lm
+    return ModelAPI(init=lm.init, loss_fn=lm.loss_fn, forward=lm.forward,
+                    init_cache=lm.init_cache, cache_axes=lm.cache_axes,
+                    decode_step=lm.decode_step)

@@ -1,0 +1,128 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The mel-spectrogram + conv frontend is a STUB (per the brief):
+``frame_embeds`` [B, F, d] arrive precomputed. The encoder is a
+bidirectional transformer over frames; the decoder is a causal
+transformer with cross-attention. Positions are sinusoidal (computed on
+the fly — no 500k learned-position table).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import blocks
+from repro.layers.blocks import _normal, rms_norm
+from repro.models import lm as lm_lib
+from repro.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def sinusoid_positions(S: int, d: int, offset=0) -> jax.Array:
+    pos = jnp.arange(S)[:, None] + offset
+    dim = jnp.arange(d // 2)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Tuple[Params, Params]:
+    ks = jax.random.split(rng, 6)
+    enc_cfg = cfg  # same dims for encoder/decoder (Whisper)
+    enc, enc_ax = blocks.init_stack(
+        jax.random.fold_in(ks[0], 0), _enc_cfg(cfg), dtype,
+        kind_override="attn_bidir")
+    dec, dec_ax = blocks.init_stack(
+        jax.random.fold_in(ks[0], 1), cfg, dtype, kind_override="attn_cross")
+    p = {
+        "embed": _normal(ks[1], (cfg.vocab_size, cfg.d_model), dtype=dtype),
+        "encoder": enc,
+        "decoder": dec,
+        "norm_enc": jnp.zeros((cfg.d_model,), jnp.float32),
+        "norm_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    ax = {
+        "embed": ("vocab", "embed"),
+        "encoder": enc_ax,
+        "decoder": dec_ax,
+        "norm_enc": ("embed",),
+        "norm_f": ("embed",),
+    }
+    return p, ax
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, num_layers=cfg.encdec.num_encoder_layers)
+
+
+def encode(p: Params, cfg: ModelConfig, frame_embeds: jax.Array, *,
+           ctx=None) -> jax.Array:
+    mesh = ctx.mesh if ctx else None
+    B, F, d = frame_embeds.shape
+    x = frame_embeds + sinusoid_positions(F, d).astype(frame_embeds.dtype)[None]
+    x = shard(x, ("batch", None, "embed"), mesh=mesh)
+    x, _, _ = blocks.apply_stack(
+        p["encoder"], x, _enc_cfg(cfg), ctx=ctx, positions=jnp.arange(F),
+        causal=False, kind_override="attn_bidir")
+    return rms_norm(x, p["norm_enc"], cfg.norm_eps)
+
+
+def forward(p: Params, cfg: ModelConfig, tokens: jax.Array,
+            frame_embeds: jax.Array, *, ctx=None, remat: str = "none"):
+    """Teacher-forced decoder over encoder output. Returns logits."""
+    mesh = ctx.mesh if ctx else None
+    enc = encode(p, cfg, frame_embeds, ctx=ctx)
+    B, S = tokens.shape
+    x = jnp.take(p["embed"], tokens, axis=0)
+    x = x + sinusoid_positions(S, cfg.d_model).astype(x.dtype)[None]
+    x = shard(x, ("batch", None, "embed"), mesh=mesh)
+    x, _, _ = blocks.apply_stack(
+        p["decoder"], x, cfg, ctx=ctx, positions=jnp.arange(S),
+        encoder_out=enc, remat=remat, kind_override="attn_cross")
+    x = rms_norm(x, p["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("...d,vd->...v", x, p["embed"])
+    return shard(logits, ("batch", None, "vocab"), mesh=mesh)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch, *, ctx=None, remat="none"):
+    logits = forward(p, cfg, batch["tokens"], batch["frame_embeds"],
+                     ctx=ctx, remat=remat)
+    loss = lm_lib.sharded_xent(logits, batch["labels"],
+                               mesh=ctx.mesh if ctx else None)
+    return loss, {"xent": loss}
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int, dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    one = {"attn": {"k": jnp.zeros((B, cfg.num_kv_heads, S, hd), dtype),
+                    "v": jnp.zeros((B, cfg.num_kv_heads, S, hd), dtype)}}
+    return {"scan": (jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (cfg.num_layers,) + t.shape), one),)}
+
+
+def cache_axes(cfg: ModelConfig):
+    one = {"attn": {"k": (None, "batch", "kv_heads", "decode_seq", None),
+                    "v": (None, "batch", "kv_heads", "decode_seq", None)}}
+    return {"scan": (one,)}
+
+
+def decode_step(p: Params, cfg: ModelConfig, cache, tokens: jax.Array,
+                cur_pos: jax.Array, encoder_out: jax.Array, *, ctx=None):
+    """One decoder token against the self-cache + fixed encoder output."""
+    mesh = ctx.mesh if ctx else None
+    B = tokens.shape[0]
+    x = jnp.take(p["embed"], tokens[:, None], axis=0)
+    x = x + sinusoid_positions(1, cfg.d_model, offset=cur_pos[0]).astype(x.dtype)[None]
+    x = shard(x, ("batch", None, "embed"), mesh=mesh)
+    x, new_cache, _ = blocks.apply_stack(
+        p["decoder"], x, cfg, ctx=ctx, positions=cur_pos[:, None],
+        caches=cache, cur_pos=cur_pos, encoder_out=encoder_out,
+        kind_override="attn_cross")
+    x = rms_norm(x, p["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, 0], p["embed"])
+    return shard(logits, ("batch", "vocab"), mesh=mesh), new_cache

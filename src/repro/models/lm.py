@@ -1,0 +1,235 @@
+"""Decoder-only language models (dense / MoE / SSM / hybrid / VLM).
+
+Pure-functional: ``init`` builds the param pytree + logical-axes pytree;
+``forward`` / ``loss_fn`` / ``prefill`` / ``decode_step`` are jit-able.
+The VLM variant consumes precomputed patch embeddings (frontend stub) and
+M-RoPE positions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import blocks
+from repro.layers.blocks import _normal, rms_norm
+from repro.sharding import shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Tuple[Params, Params]:
+    ks = jax.random.split(rng, 4)
+    stack, stack_ax = blocks.init_stack(ks[0], cfg, dtype)
+    p: Params = {
+        "embed": _normal(ks[1], (cfg.vocab_size, cfg.d_model), dtype=dtype),
+        "stack": stack,
+        "norm_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    ax: Params = {
+        "embed": ("vocab", "embed"),
+        "stack": stack_ax,
+        "norm_f": ("embed",),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = _normal(ks[2], (cfg.d_model, cfg.vocab_size), dtype=dtype)
+        ax["head"] = ("embed", "vocab")
+    return p, ax
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _embed(p: Params, tokens: jax.Array, cfg: ModelConfig, mesh) -> jax.Array:
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        x = x * math.sqrt(cfg.d_model)
+    return shard(x, ("batch", None, "embed"), mesh=mesh)
+
+
+def _logits(p: Params, x: jax.Array, cfg: ModelConfig, mesh) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["embed"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["head"])
+    axes = ("batch", None, "vocab") if logits.ndim == 3 else ("batch", "vocab")
+    return shard(logits, axes, mesh=mesh)
+
+
+def mrope_positions_for(cfg: ModelConfig, B: int, S: int,
+                        num_patches: int) -> jax.Array:
+    """[B, S, 3] (t, h, w) position streams: a √P×√P patch grid followed by
+    sequential text positions (Qwen2-VL layout)."""
+    g = max(int(math.sqrt(max(num_patches, 1))), 1)
+    i = jnp.arange(S)
+    is_patch = i < num_patches
+    t = jnp.where(is_patch, 0, i - num_patches + g)
+    h = jnp.where(is_patch, i // g, i - num_patches + g)
+    w = jnp.where(is_patch, i % g, i - num_patches + g)
+    pos = jnp.stack([t, h, w], axis=-1)
+    return jnp.broadcast_to(pos[None], (B, S, 3)).astype(jnp.int32)
+
+
+def sharded_xent(logits: jax.Array, labels: jax.Array,
+                 mesh=None) -> jax.Array:
+    """Token-mean cross entropy; the vocab dim stays model-sharded (GSPMD
+    inserts the max/sum reductions)."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(p: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            ctx=None, patch_embeds: Optional[jax.Array] = None,
+            remat: str = "none", collect: bool = False):
+    """tokens [B, St]; patch_embeds [B, P, d] for VLM (prepended).
+
+    Returns (logits [B, S, V], caches-or-None, aux)."""
+    mesh = ctx.mesh if ctx else None
+    x = _embed(p, tokens, cfg, mesh)
+    B = x.shape[0]
+    mpos = None
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+        x = shard(x, ("batch", None, "embed"), mesh=mesh)
+    S = x.shape[1]
+    if cfg.pos_embedding == "mrope":
+        P = 0 if patch_embeds is None else patch_embeds.shape[1]
+        mpos = mrope_positions_for(cfg, B, S, P)
+    positions = jnp.arange(S)
+    caches = _empty_caches(cfg, B, S, x.dtype) if collect else None
+    x, new_caches, aux = blocks.apply_stack(
+        p["stack"], x, cfg, ctx=ctx, positions=positions,
+        caches=caches, cur_pos=jnp.zeros((B,), jnp.int32) if collect else None,
+        mrope_positions=mpos, remat=remat)
+    x = rms_norm(x, p["norm_f"], cfg.norm_eps)
+    return _logits(p, x, cfg, mesh), new_caches, aux
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            ctx=None, remat: str = "none"):
+    logits, _, aux = forward(p, cfg, batch["tokens"], ctx=ctx,
+                             patch_embeds=batch.get("patch_embeds"),
+                             remat=remat)
+    St = batch["labels"].shape[1]
+    loss = sharded_xent(logits[:, -St:], batch["labels"],
+                        mesh=ctx.mesh if ctx else None)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: ModelConfig, kind: str, B: int, S: int, dtype):
+    d = cfg.d_model
+    if kind == "mamba":
+        s = cfg.ssm
+        d_in = s.expand * d
+        return {"h": jnp.zeros((B, d_in, s.d_state), jnp.float32),
+                "conv": jnp.zeros((B, s.d_conv - 1, d_in), dtype)}
+    if kind == "rglru":
+        g = cfg.rglru
+        W = g.lru_width or d
+        return {"h": jnp.zeros((B, W), jnp.float32),
+                "conv": jnp.zeros((B, g.conv1d_width - 1, W), dtype)}
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"attn": {
+            "latent": jnp.zeros((B, S, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((B, S, m.qk_rope_head_dim), dtype)}}
+    hd = cfg.resolved_head_dim
+    return {"attn": {
+        "k": jnp.zeros((B, cfg.num_kv_heads, S, hd), dtype),
+        "v": jnp.zeros((B, cfg.num_kv_heads, S, hd), dtype)}}
+
+
+def _cache_axes(cfg: ModelConfig, kind: str):
+    if kind == "mamba":
+        return {"h": ("batch", "lru", None), "conv": ("batch", None, "lru")}
+    if kind == "rglru":
+        return {"h": ("batch", "lru"), "conv": ("batch", None, "lru")}
+    if cfg.mla is not None:
+        return {"attn": {"latent": ("batch", "decode_seq", None),
+                         "k_rope": ("batch", "decode_seq", None)}}
+    return {"attn": {"k": ("batch", "kv_heads", "decode_seq", None),
+                     "v": ("batch", "kv_heads", "decode_seq", None)}}
+
+
+def _fix_rglru_cache(c):
+    # apply_block returns {"h","conv"} for rglru; drop the placeholder
+    return c
+
+
+def _empty_caches(cfg: ModelConfig, B: int, S: int, dtype):
+    prefix, pattern, repeat, suffix = blocks.split_layers(cfg)
+    out: Params = {}
+    if prefix:
+        out["prefix"] = [_layer_cache(cfg, k, B, S, dtype) for k in prefix]
+    group = tuple(_layer_cache(cfg, k, B, S, dtype) for k in pattern)
+    out["scan"] = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (repeat,) + t.shape), group)
+    if suffix:
+        out["suffix"] = [_layer_cache(cfg, k, B, S, dtype) for k in suffix]
+    return out
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int, dtype=jnp.float32) -> Params:
+    return _empty_caches(cfg, B, S, dtype)
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    prefix, pattern, repeat, suffix = blocks.split_layers(cfg)
+    out: Params = {}
+    lift = lambda ax: jax.tree.map(
+        lambda t: (None,) + tuple(t), ax,
+        is_leaf=lambda t: isinstance(t, tuple)
+        and all(e is None or isinstance(e, str) for e in t))
+    if prefix:
+        out["prefix"] = [_cache_axes(cfg, k) for k in prefix]
+    out["scan"] = tuple(lift(_cache_axes(cfg, k)) for k in pattern)
+    if suffix:
+        out["suffix"] = [_cache_axes(cfg, k) for k in suffix]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(p: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array, cur_pos: jax.Array, *, ctx=None):
+    """One-token decode. tokens [B]; cur_pos [B] (uniform). Returns
+    (logits [B, V], new_cache)."""
+    mesh = ctx.mesh if ctx else None
+    x = _embed(p, tokens[:, None], cfg, mesh)
+    B = x.shape[0]
+    positions = cur_pos[:, None]
+    mpos = None
+    if cfg.pos_embedding == "mrope":
+        mpos = jnp.broadcast_to(cur_pos[:, None, None], (B, 1, 3)).astype(jnp.int32)
+    x, new_cache, _ = blocks.apply_stack(
+        p["stack"], x, cfg, ctx=ctx, positions=positions, caches=cache,
+        cur_pos=cur_pos, mrope_positions=mpos)
+    x = rms_norm(x, p["norm_f"], cfg.norm_eps)
+    return _logits(p, x[:, 0], cfg, mesh), new_cache

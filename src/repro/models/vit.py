@@ -1,0 +1,73 @@
+"""The paper's benchmark model: ViT for image classification (Sec. V-A).
+
+Encoder-only transformer over patch embeddings + [CLS], learned positions,
+GELU MLP, classification head. This is the model the paper trains on
+Colossal-AI (ViT-1B: hs=2048, depth=24, sql=65 for 32x32 CIFAR images with
+patch 4). The FFN/QKV linears run through the controlled TP path — this
+model is the primary vehicle for the accuracy experiments (Figs. 3-11).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import blocks
+from repro.layers.blocks import _normal, rms_norm
+from repro.sharding import shard
+
+Params = Dict[str, Any]
+
+PATCH_DIM = 4 * 4 * 3   # 32x32x3 images, patch 4
+
+
+def init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Tuple[Params, Params]:
+    ks = jax.random.split(rng, 6)
+    stack, stack_ax = blocks.init_stack(ks[0], cfg, dtype,
+                                        kind_override="attn_bidir")
+    S = cfg.frontend.num_tokens           # patches + CLS
+    p = {
+        "patch_proj": _normal(ks[1], (PATCH_DIM, cfg.d_model), dtype=dtype),
+        "cls": _normal(ks[2], (1, 1, cfg.d_model), dtype=dtype),
+        "pos": _normal(ks[3], (S, cfg.d_model), std=0.01, dtype=dtype),
+        "stack": stack,
+        "norm_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        "head": _normal(ks[4], (cfg.d_model, cfg.num_classes), dtype=dtype),
+    }
+    ax = {
+        "patch_proj": (None, "embed"),
+        "cls": (None, None, "embed"),
+        "pos": (None, "embed"),
+        "stack": stack_ax,
+        "norm_f": ("embed",),
+        "head": ("embed", "classes"),
+    }
+    return p, ax
+
+
+def forward(p: Params, cfg: ModelConfig, patches: jax.Array, *,
+            ctx=None, remat: str = "none") -> jax.Array:
+    """patches [B, P, PATCH_DIM] -> logits [B, num_classes]."""
+    mesh = ctx.mesh if ctx else None
+    B = patches.shape[0]
+    x = jnp.einsum("bpk,kd->bpd", patches.astype(p["patch_proj"].dtype),
+                   p["patch_proj"])
+    cls = jnp.broadcast_to(p["cls"], (B, 1, cfg.d_model)).astype(x.dtype)
+    x = jnp.concatenate([cls, x], axis=1) + p["pos"][None].astype(x.dtype)
+    x = shard(x, ("batch", None, "embed"), mesh=mesh)
+    x, _, _ = blocks.apply_stack(
+        p["stack"], x, cfg, ctx=ctx, positions=jnp.arange(x.shape[1]),
+        causal=False, remat=remat, kind_override="attn_bidir")
+    x = rms_norm(x, p["norm_f"], cfg.norm_eps)
+    return jnp.einsum("bd,dc->bc", x[:, 0], p["head"])
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch, *, ctx=None, remat="none"):
+    logits = forward(p, cfg, batch["patches"], ctx=ctx, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    acc = jnp.mean((logits.argmax(-1) == labels).astype(jnp.float32))
+    return loss, {"xent": loss, "acc": acc}

@@ -1,0 +1,83 @@
+"""AdamW with warmup-cosine schedule, global-norm clipping, sharded states.
+
+Pure-pytree implementation (no optax dependency in the container). The
+optimizer state mirrors the parameter pytree, so parameter shardings apply
+directly to the moments — under tensor parallelism the moments of a
+column-split weight are column-split too (ZeRO-1-like for the TP axis).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any            # first moment pytree
+    nu: Any            # second moment pytree
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_at(step, cfg: TrainConfig, total_steps: int = 0):
+    base = cfg.learning_rate
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    if total_steps > cfg.warmup_steps:
+        prog = jnp.clip((step - cfg.warmup_steps)
+                        / max(total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    else:
+        cos = 1.0
+    return base * warm * cos
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads, jnp.asarray(0.0)
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def apply(params, grads, state: AdamWState, cfg: TrainConfig,
+          total_steps: int = 0):
+    """One AdamW update. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    lr = lr_at(state.step, cfg, total_steps)
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics

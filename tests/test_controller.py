@@ -1,0 +1,184 @@
+"""Controller (Eqs. 1-3, Alg. 2) and priority (Alg. 1) tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import WorkloadControlConfig
+from repro.core import hetero as hetero_lib
+from repro.core import priority as pri_lib
+from repro.core.controller import (CostFunctions, SemiController, eq1_gamma,
+                                   eq2_beta, eq3_migration_prefix,
+                                   work_fraction)
+from repro.core.workload import keep_blocks_for_bucket
+
+
+COSTS = CostFunctions(omega1=1e-3, omega2_slope=1e-5, phi1_base=5e-5,
+                      phi1_slope=2e-5, phi2_slope=1e-4)
+
+
+class TestEq1:
+    def test_no_gap_no_pruning(self):
+        assert eq1_gamma(1.0, 1.0, 1.0) == 0.0
+
+    def test_gap_offset(self):
+        # 2x slower with matmul share 1.0 of runtime: prune half
+        assert eq1_gamma(2.0, 1.0, 2.0) == pytest.approx(0.5)
+
+    @given(t=st.floats(0.1, 10), ref=st.floats(0.1, 10), m=st.floats(0.01, 10))
+    @settings(max_examples=50, deadline=None)
+    def test_bounds(self, t, ref, m):
+        g = eq1_gamma(t, ref, m)
+        assert 0.0 <= g <= 0.875
+
+
+class TestEq2:
+    def test_zero_workload(self):
+        assert eq2_beta(0.0, COSTS, 8) == 0.0
+
+    @given(lg=st.floats(1.0, 1e4), e=st.integers(2, 64))
+    @settings(max_examples=50, deadline=None)
+    def test_beta_in_unit_interval(self, lg, e):
+        assert 0.0 <= eq2_beta(lg, COSTS, e) <= 1.0
+
+    def test_cheap_migration_prefers_migration(self):
+        cheap = CostFunctions(omega1=1.0, omega2_slope=1.0,
+                              phi1_base=0.0, phi1_slope=1e-9,
+                              phi2_slope=1e-9)
+        assert eq2_beta(100.0, cheap, 8) == 1.0
+
+    def test_expensive_migration_prefers_resizing(self):
+        dear = CostFunctions(omega1=0.0, omega2_slope=1e-9,
+                             phi1_base=10.0, phi1_slope=10.0, phi2_slope=10.0)
+        assert eq2_beta(100.0, dear, 8) == 0.0
+
+
+class TestEq3:
+    def test_uniform_times_no_migration(self):
+        t = np.ones(8)
+        x = eq3_migration_prefix(t, np.full(8, 100.0), COSTS, 8)
+        assert x == 0
+
+    def test_single_heavy_straggler_migrates(self):
+        t = np.array([8.0, 1, 1, 1, 1, 1, 1, 1])
+        x = eq3_migration_prefix(t, np.full(8, 100.0), COSTS, 8)
+        assert x >= 1
+
+    def test_prefix_grows_with_cheaper_comm(self):
+        t = np.array([8.0, 6, 4, 3, 1, 1, 1, 1])
+        w = np.full(8, 100.0)
+        cheap = CostFunctions(0, 0, 0, 1e-9, 1e-9)
+        dear = CostFunctions(0, 0, 1.0, 1.0, 1.0)
+        assert (eq3_migration_prefix(t, w, cheap, 8)
+                >= eq3_migration_prefix(t, w, dear, 8))
+
+
+class TestPriority:
+    def test_incremental_update_preserves_pruned_stats(self):
+        """The endless-loop fix (Sec. III-B): pruned blocks keep their old
+        statistic — zero-imputed non-updates must not look 'unimportant'."""
+        st_ = pri_lib.PriorityState.create(4)
+        w0 = np.zeros((4 * 8, 3))
+        st_ = pri_lib.update_state(st_, w0, 8)
+        # big refinement on blocks 0,1; none on 2,3 (they were pruned)
+        w1 = w0.copy()
+        w1[:16] += 1.0
+        st_ = pri_lib.update_state(st_, w1, 8)
+        pri = pri_lib.build_pri_list(st_)
+        st_ = pri_lib.mark_pruned(st_, pri, keep_blocks=2)   # prune 2 worst
+        assert set(np.asarray(st_.pruned_last).nonzero()[0]) == {2, 3}
+        var_before = st_.w_var.copy()
+        # next epoch: pruned blocks didn't move (zero imputation), others did
+        w2 = w1.copy()
+        w2[:16] += 1.0
+        st_ = pri_lib.update_state(st_, w2, 8)
+        # pruned blocks' stats preserved, NOT refreshed to ~0
+        np.testing.assert_array_equal(st_.w_var[2:], var_before[2:])
+
+    def test_priority_keeps_high_variation(self):
+        st_ = pri_lib.PriorityState.create(3)
+        st_.w_var[:] = [0.5, 0.1, 0.9]
+        pri = pri_lib.build_pri_list(st_)
+        assert list(pri) == [2, 0, 1]
+
+    def test_differentiated_gamma_floor(self):
+        """γ_k >= α·γ_uniform (Alg. 1 line 11, bucket-rounded)."""
+        states = {"a": pri_lib.PriorityState.create(8)}
+        states["a"].w_var[:] = 1.0      # everything still moving -> γ_k = 0
+        buckets = (0.0, 0.25, 0.5, 0.75)
+        out = pri_lib.differentiated_gamma(states, 0.5, alpha=0.8,
+                                           theta=1e-3, buckets=buckets)
+        assert buckets[out["a"]] >= 0.8 * 0.5 - 1e-9
+
+
+class TestSemiController:
+    def _mk(self, mode="semi", tp=8):
+        cfg = WorkloadControlConfig(enabled=True, mode=mode, block_size=8)
+        model = hetero_lib.IterationModel(matmul_time=1.0, other_time=0.1)
+        return SemiController(cfg, tp, model, num_blocks=64)
+
+    def test_no_stragglers_neutral(self):
+        c = self._mk()
+        plan, rep = c.plan(np.ones(8))
+        assert plan.is_neutral()
+        assert rep.stragglers == []
+
+    def test_zero_mode_buckets_straggler(self):
+        c = self._mk("zero")
+        times = np.ones(8)
+        times[3] = 2.0
+        plan, rep = c.plan(times)
+        assert plan.dynamic.bucket_by_rank[3] > 0
+        assert all(plan.dynamic.bucket_by_rank[i] == 0 for i in range(8) if i != 3)
+
+    def test_semi_single_straggler_splits(self):
+        c = self._mk("semi")
+        times = np.ones(8)
+        times[0] = 3.0
+        plan, rep = c.plan(times)
+        assert rep.stragglers == [0]
+        assert 0.0 <= rep.beta <= 1.0
+        # the straggler either migrates, resizes, or both
+        assert rep.mig_blocks > 0 or plan.dynamic.bucket_by_rank[0] > 0
+
+    def test_semi_multi_straggler_grouping(self):
+        c = self._mk("semi")
+        times = np.array([8.0, 6, 4, 2, 1, 1, 1, 1], float)
+        plan, rep = c.plan(times)
+        assert len(rep.stragglers) == 4
+        # heaviest rank migrates (if cost-effective) or resizes hardest
+        assert rep.mig_src in (-1, 0)
+
+    def test_work_fraction_balances(self):
+        """After planning, the modeled per-rank times should be closer to
+        uniform than before (the whole point of Eq. 1)."""
+        c = self._mk("zero")
+        model = c.model
+        chi = np.ones(8)
+        chi[2] = 3.0
+        times0 = model.times(chi, np.ones(8))
+        plan, _ = c.plan(times0)
+        frac = work_fraction(plan, c.num_blocks)
+        times1 = model.times(chi, frac)
+        assert times1.max() / times1.min() < times0.max() / times0.min()
+
+
+class TestHetero:
+    def test_round_robin_single_straggler(self):
+        s = hetero_lib.HeteroSchedule(num_ranks=4, kind="round_robin",
+                                      chis=(3.0,), period=5)
+        for step in range(20):
+            chi = s.chi(step)
+            assert (chi > 1).sum() == 1
+        assert np.argmax(s.chi(0)) != np.argmax(s.chi(5))
+
+    def test_static(self):
+        s = hetero_lib.HeteroSchedule(num_ranks=4, kind="static",
+                                      chis=(2.0, 1.0, 1.0, 1.0))
+        np.testing.assert_array_equal(s.chi(0), [2, 1, 1, 1])
+
+    def test_iteration_model_step_time_is_max(self):
+        m = hetero_lib.IterationModel(matmul_time=1.0, other_time=0.0)
+        chi = np.array([1.0, 4.0])
+        assert m.step_time(chi, np.ones(2)) == pytest.approx(4.0)
+        # pruning the straggler to 1/4 work restores balance
+        assert m.step_time(chi, np.array([1.0, 0.25])) == pytest.approx(1.0)

@@ -1,0 +1,38 @@
+"""HLO inspector unit tests (string-level, no compile)."""
+from repro.launch.hlo_inspect import (collective_histogram,
+                                      find_redundant_collectives,
+                                      reshape_churn)
+
+FAKE_HLO = """
+HloModule jit_step
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag1 = f32[128,4096]{1,0} all-gather(%p0), dimensions={1}
+  %ag2 = f32[128,4096]{1,0} all-gather(%p0), dimensions={1}
+  %ar = f32[128,256]{1,0} all-reduce(%p0), to_apply=%add
+  %t = f32[256,128]{0,1} transpose(%p0), dimensions={1,0}
+  %r = f32[32768]{0} reshape(%p0)
+  ROOT %out = f32[128,256]{1,0} copy(%ar)
+}
+"""
+
+
+def test_histogram_counts_and_bytes():
+    rows = collective_histogram(FAKE_HLO)
+    kinds = {r[0]: (r[2], r[3]) for r in rows}
+    assert kinds["all-gather"][0] == 2
+    assert kinds["all-gather"][1] == 2 * 128 * 4096 * 4
+    assert kinds["all-reduce"][0] == 1
+
+
+def test_redundant_detection():
+    red = find_redundant_collectives(FAKE_HLO)
+    assert len(red) == 1
+    assert red[0][0] == "all-gather" and red[0][2] == 2
+
+
+def test_reshape_churn():
+    churn = reshape_churn(FAKE_HLO)
+    assert churn["transpose"] == 1
+    assert churn["reshape"] == 1
+    assert churn["copy"] == 1

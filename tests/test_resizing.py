@@ -1,0 +1,120 @@
+"""ZERO-resizing unit + property tests (paper Sec. III)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import resizing, workload
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+class TestResizedMatmul:
+    def test_forward_matches_masked_oracle(self):
+        rng = np.random.default_rng(0)
+        K, N, B = 128, 48, 16
+        x, w = _rand(rng, 6, K), _rand(rng, K, N)
+        keep = jnp.array([0, 2, 5], jnp.int32)
+        y = resizing.resized_matmul(x, w, keep, block=B)
+        mask = np.repeat(np.isin(np.arange(K // B), np.array(keep)), B)
+        np.testing.assert_allclose(y, (x * mask) @ w, atol=1e-4)
+
+    def test_output_shape_equals_unpruned(self):
+        """Consistency constraint: output dims match the unpruned matmul."""
+        rng = np.random.default_rng(1)
+        x, w = _rand(rng, 4, 7, 64), _rand(rng, 64, 32)
+        y = resizing.resized_matmul(x, w, jnp.array([1], jnp.int32), block=16)
+        assert y.shape == (4, 7, 32)
+
+    def test_gradients_zero_imputed_with_lineage(self):
+        """VJP scatters grads to exactly the kept rows/cols, zeros elsewhere
+        (the paper's lineage + Zero imputation, Fig. 2 right)."""
+        rng = np.random.default_rng(2)
+        K, N, B = 96, 24, 16
+        x, w = _rand(rng, 8, K), _rand(rng, K, N)
+        keep = jnp.array([1, 3, 4], jnp.int32)
+        gx, gw = jax.grad(
+            lambda x_, w_: jnp.sum(
+                resizing.resized_matmul(x_, w_, keep, block=B) ** 2),
+            argnums=(0, 1))(x, w)
+        mask = np.repeat(np.isin(np.arange(K // B), np.array(keep)), B)
+        assert np.all(np.asarray(gw)[~mask] == 0.0)
+        assert np.all(np.asarray(gx)[:, ~mask] == 0.0)
+        # kept entries match the masked-dense oracle exactly
+        gx_r, gw_r = jax.grad(
+            lambda x_, w_: jnp.sum(((x_ * mask) @ w_) ** 2),
+            argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gw, np.asarray(gw_r) * mask[:, None], atol=1e-3)
+        np.testing.assert_allclose(gx, np.asarray(gx_r) * mask, atol=1e-3)
+
+    @given(nb=st.integers(2, 8), bucket=st.integers(0, 3),
+           seed=st.integers(0, 100))
+    @settings(max_examples=15, deadline=None)
+    def test_switched_matmul_bucket0_is_dense(self, nb, bucket, seed):
+        rng = np.random.default_rng(seed)
+        B = 8
+        K, N = nb * B, 16
+        x, w = _rand(rng, 4, K), _rand(rng, K, N)
+        pri = jnp.asarray(rng.permutation(nb).astype(np.int32))
+        buckets = (0.0, 0.25, 0.5, 0.75)
+        y = resizing.switched_matmul(x, w, pri, jnp.array(bucket),
+                                     buckets=buckets, block=B)
+        assert y.shape == (4, N)
+        if bucket == 0:
+            np.testing.assert_allclose(y, x @ w, atol=1e-4)
+        else:
+            kc = workload.keep_blocks_for_bucket(buckets[bucket], nb)
+            keep = np.sort(np.asarray(pri)[:kc])
+            mask = np.repeat(np.isin(np.arange(nb), keep), B)
+            np.testing.assert_allclose(y, (x * mask) @ w, atol=1e-4)
+
+
+class TestImputation:
+    def test_zero_is_identity(self):
+        g = jnp.ones((8, 4))
+        kept = jnp.array([True] * 4 + [False] * 4)
+        np.testing.assert_array_equal(
+            resizing.impute_rows(g, kept, "zero"), g)
+
+    def test_average_fills_pruned_rows(self):
+        g = jnp.concatenate([jnp.full((2, 3), 4.0), jnp.zeros((2, 3))])
+        kept = jnp.array([True, True, False, False])
+        out = resizing.impute_rows(g, kept, "average")
+        np.testing.assert_allclose(out[2:], 4.0)
+        np.testing.assert_allclose(out[:2], 4.0)
+
+    def test_same_uses_previous(self):
+        g = jnp.zeros((4, 2))
+        prev = jnp.full((4, 2), 7.0)
+        kept = jnp.array([True, False, True, False])
+        out = resizing.impute_rows(g, kept, "same", prev)
+        np.testing.assert_allclose(np.asarray(out)[1], 7.0)
+        np.testing.assert_allclose(np.asarray(out)[0], 0.0)
+
+
+class TestWorkload:
+    @given(gamma=st.floats(0.0, 0.875), nb=st.integers(1, 64))
+    @settings(max_examples=50, deadline=None)
+    def test_bucket_rounds_up(self, gamma, nb):
+        """Eq.(1)'s γ is rounded UP so the runtime gap is fully offset."""
+        b = workload.bucket_for_gamma(gamma)
+        assert workload.DEFAULT_BUCKETS[b] >= gamma - 1e-9
+
+    @given(nb=st.integers(1, 64), gamma=st.floats(0.0, 1.0))
+    @settings(max_examples=50, deadline=None)
+    def test_keep_blocks_bounds(self, nb, gamma):
+        kc = workload.keep_blocks_for_bucket(gamma, nb)
+        assert 1 <= kc <= nb
+
+    def test_adapt_block_size(self):
+        assert workload.adapt_block_size(1024) == 128
+        assert workload.adapt_block_size(704) == 64    # 704 = 11·64
+        assert workload.adapt_block_size(96) == 32     # 96 = 3·32
+        assert workload.adapt_block_size(176) == 0     # 176 = 11·16: exempt
+
+    def test_neutral_plan(self):
+        plan = workload.WorkloadPlan.neutral(4)
+        assert plan.is_neutral()

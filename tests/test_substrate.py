@@ -1,0 +1,113 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, sharding utils."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import store as ckpt
+from repro.config import TrainConfig
+from repro.data.pipeline import (PatternImageStream, TokenTaskStream,
+                                 eval_accuracy, patchify)
+from repro.optim import adamw
+from repro.sharding import (DEFAULT_RULES, fit_spec_to_shape,
+                            logical_to_spec, make_rules)
+from jax.sharding import PartitionSpec as P
+
+
+class TestData:
+    def test_token_stream_deterministic_and_learnable(self):
+        s1 = iter(TokenTaskStream(64, 16, 4, seed=3))
+        s2 = iter(TokenTaskStream(64, 16, 4, seed=3))
+        b1, b2 = next(s1), next(s2)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        # labels are the next-token shift of the same underlying sequence
+        np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+        # periodic-copy structure: token t equals token t-period
+        np.testing.assert_array_equal(b1["tokens"][:, 4:], b1["tokens"][:, :-4])
+
+    def test_image_stream_shapes(self):
+        b = next(iter(PatternImageStream(batch_size=5, seed=1)))
+        assert b["images"].shape == (5, 32, 32, 3)
+        assert b["labels"].shape == (5,)
+        p = patchify(b["images"], 4)
+        assert p.shape == (5, 64, 48)
+
+    def test_patchify_roundtrip_content(self):
+        img = np.arange(2 * 8 * 8 * 3, dtype=np.float32).reshape(2, 8, 8, 3)
+        p = patchify(img, 4)
+        # first patch = top-left 4x4 block
+        np.testing.assert_array_equal(
+            p[0, 0].reshape(4, 4, 3), img[0, :4, :4, :])
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        cfg = TrainConfig(learning_rate=0.1, warmup_steps=1, grad_clip=0)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw.init(params)
+        target = jnp.array([1.0, 2.0])
+        for _ in range(300):
+            g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+            params, state, _ = adamw.apply(params, g, state, cfg)
+        np.testing.assert_allclose(params["w"], target, atol=1e-2)
+
+    def test_grad_clip(self):
+        g = {"w": jnp.full((4,), 100.0)}
+        clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(200.0)
+        assert float(jnp.linalg.norm(clipped["w"])) == pytest.approx(1.0, rel=1e-3)
+
+    def test_moments_match_param_tree(self):
+        params = {"a": jnp.zeros((3, 4)), "b": {"c": jnp.ones((2,))}}
+        st_ = adamw.init(params)
+        assert jax.tree.structure(st_.mu) == jax.tree.structure(params)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                "nested": {"b": np.array([1, 2], np.int32)}}
+        ckpt.save(str(tmp_path), 7, tree)
+        assert ckpt.latest_step(str(tmp_path)) == 7
+        like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                            tree)
+        out = ckpt.restore(str(tmp_path), 7, like)
+        np.testing.assert_array_equal(out["w"], tree["w"])
+        np.testing.assert_array_equal(out["nested"]["b"], tree["nested"]["b"])
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, {"w": np.zeros((2, 2))})
+        bad = {"w": jax.ShapeDtypeStruct((3, 3), np.float32)}
+        with pytest.raises(ValueError):
+            ckpt.restore(str(tmp_path), 1, bad)
+
+
+class TestShardingRules:
+    def test_logical_to_spec(self):
+        spec = logical_to_spec(("batch", None, "mlp"))
+        assert spec == P(("pod", "data"), None, "model")
+
+    def test_rule_override(self):
+        rules = make_rules(batch=None)
+        assert logical_to_spec(("batch", "vocab"), rules) == P(None, "model")
+
+    @given(dim=st.integers(1, 4096))
+    @settings(max_examples=50, deadline=None)
+    def test_fit_spec_never_violates_divisibility(self, dim):
+        import jax as _jax
+        from jax.sharding import Mesh
+        devs = np.array(_jax.devices()[:1])
+        # synthesize a mesh-shape check without real devices: use shape math
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+        spec = fit_spec_to_shape(P(("data", "model")), (dim,), FakeMesh)
+        entry = spec[0]
+        n = 1
+        if entry is not None:
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                n *= FakeMesh.shape[a]
+        assert dim % n == 0
