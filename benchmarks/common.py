@@ -48,11 +48,39 @@ def paper_scale_model(arch: str = "vit-1b", batch: int = 64, seq: int = 65):
                            mfu=V100_MFU, comm_frac=PAPER_COMM_FRAC)
 
 
+def is_dry_run() -> bool:
+    """Tiny-shapes smoke mode (CI): set by `benchmarks/run.py --dry-run`.
+
+    Benchmarks consult this to shrink device counts / shapes / iteration
+    counts so the whole sweep finishes in seconds, not minutes."""
+    return os.environ.get("REPRO_BENCH_DRY", "") == "1"
+
+
 def save_json(name: str, payload: dict) -> str:
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def save_bench_json(name: str, config: dict, metrics: dict,
+                    trajectory: bool = False) -> str:
+    """Write bench output in the STABLE schema shared by the CI smoke job
+    and the per-PR trajectory files:
+
+        {"name": <bench id>, "config": {...}, "metrics": {...}}
+
+    Always lands in experiments/bench/<name>.json; with trajectory=True it
+    is ALSO written to the repo root as BENCH_<name>.json (committed, so
+    perf regressions are visible in per-PR diffs). Dry-run smoke never
+    touches trajectory files — tiny-shape numbers must not clobber the
+    committed full-scale points."""
+    payload = {"name": name, "config": config, "metrics": metrics}
+    path = save_json(name, payload)
+    if trajectory and not is_dry_run():
+        with open(os.path.join(ROOT, f"BENCH_{name}.json"), "w") as f:
+            json.dump(payload, f, indent=1, default=float, sort_keys=True)
     return path
 
 

@@ -12,7 +12,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, save_json
+from benchmarks.common import csv_row, is_dry_run, save_bench_json
 from repro.core import resizing
 
 
@@ -28,14 +28,17 @@ def timeit(f, *args, n=20):
 
 def main() -> list:
     rows = []
-    M, K, N, block = 512, 2048, 2048, 128
+    if is_dry_run():
+        M, K, N, block, iters = 128, 512, 512, 128, 5
+    else:
+        M, K, N, block, iters = 512, 2048, 2048, 128, 20
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
     nb = K // block
 
     dense = jax.jit(lambda x, w: x @ w)
-    t_dense = timeit(dense, x, w)
+    t_dense = timeit(dense, x, w, n=iters)
     rows.append(csv_row("kernel_dense_matmul", t_dense * 1e6,
                         f"gflops={2 * M * K * N / t_dense / 1e9:.1f}"))
 
@@ -46,12 +49,15 @@ def main() -> list:
                            jnp.int32)
         pruned = jax.jit(
             lambda x, w, k: resizing.resized_matmul(x, w, k, block=block))
-        t = timeit(pruned, x, w, keep)
+        t = timeit(pruned, x, w, keep, n=iters)
         speedup = t_dense / t
         results[f"gamma{gamma}_us"] = t * 1e6
+        results[f"gamma{gamma}_speedup"] = speedup
         rows.append(csv_row(f"kernel_pruned_matmul_gamma{gamma}", t * 1e6,
                             f"speedup={speedup:.2f},ideal={1/(1-gamma):.2f}"))
-    save_json("kernel_bench", results)
+    save_bench_json("kernel_bench",
+                    {"M": M, "K": K, "N": N, "block": block, "iters": iters,
+                     "dry_run": is_dry_run()}, results)
     return rows
 
 

@@ -1,15 +1,35 @@
 """Benchmark harness — one function per paper table/figure (DESIGN.md §6).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,tab1,...] [--fast]
+                                            [--dry-run]
 
 Prints ``name,us_per_call,derived`` CSV rows. JSON artifacts land in
-experiments/bench/.
+experiments/bench/ (stable schema: {"name", "config", "metrics"});
+``--dry-run`` is the CI smoke mode — tiny shapes, seconds not minutes,
+covering the pruned-matmul kernel path and the multi-straggler migration
+dataflow so perf regressions are visible per-PR.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+
+# key -> (module, slow real-training job, part of the --dry-run smoke set)
+JOBS = [
+    ("fig3", "benchmarks.imputation", False, False),
+    ("kernel", "benchmarks.kernel_bench", False, True),
+    ("roofline", "benchmarks.roofline", False, False),
+    ("tab1", "benchmarks.migration_policies", False, False),
+    ("fig9", "benchmarks.hetero_resizing", True, False),
+    ("fig56", "benchmarks.homo_resizing", True, False),
+    ("fig10", "benchmarks.single_straggler", True, False),
+    ("fig11", "benchmarks.multi_straggler", False, True),
+    ("ablate", "benchmarks.ablations", True, False),
+]
 
 
 def main() -> None:
@@ -19,25 +39,21 @@ def main() -> None:
                          "kernel,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="skip the slow real-training ACC benchmarks")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: tiny shapes on the smoke job subset")
     args = ap.parse_args()
+    if args.dry_run:
+        os.environ["REPRO_BENCH_DRY"] = "1"
 
-    jobs = [
-        ("fig3", "benchmarks.imputation", False),
-        ("kernel", "benchmarks.kernel_bench", False),
-        ("roofline", "benchmarks.roofline", False),
-        ("tab1", "benchmarks.migration_policies", False),
-        ("fig9", "benchmarks.hetero_resizing", True),
-        ("fig56", "benchmarks.homo_resizing", True),
-        ("fig10", "benchmarks.single_straggler", True),
-        ("fig11", "benchmarks.multi_straggler", False),
-        ("ablate", "benchmarks.ablations", True),
-    ]
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
     failed = []
-    for key, module, slow in jobs:
+    ran = []
+    for key, module, slow, smoke in JOBS:
         if only and key not in only:
+            continue
+        if args.dry_run and not smoke:
             continue
         if args.fast and slow:
             continue
@@ -45,10 +61,21 @@ def main() -> None:
             mod = __import__(module, fromlist=["main"])
             for row in mod.main():
                 print(row, flush=True)
+            ran.append(key)
         except Exception as e:                              # noqa: BLE001
             failed.append((key, repr(e)))
             print(f"{key}_FAILED,0.0,{e!r}", flush=True)
             traceback.print_exc(file=sys.stderr)
+
+    if args.dry_run:
+        from benchmarks.common import OUT_DIR
+        os.makedirs(OUT_DIR, exist_ok=True)
+        with open(os.path.join(OUT_DIR, "smoke_summary.json"), "w") as f:
+            json.dump({"name": "smoke_summary",
+                       "config": {"dry_run": True},
+                       "metrics": {"ran": ran,
+                                   "failed": [k for k, _ in failed]}},
+                      f, indent=1)
     if failed:
         sys.exit(1)
 

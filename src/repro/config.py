@@ -243,6 +243,8 @@ class WorkloadControlConfig:
     theta_iter: float = 1e-3      # micro-threshold for per-layer candidates
     # migration
     migration_block: int = 128    # migrated-column granularity
+    max_migration_sources: int = 3   # concurrent straggler slots (0 = no mig)
+    migration_shed_cap: int = 0      # per-source shed-block cap (0 = uncapped)
     # controller
     tavg_refresh_threshold: float = 0.10   # passive T_avg refresh on >10% change
 

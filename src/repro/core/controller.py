@@ -29,7 +29,8 @@ from repro.core.priority import (PriorityState, build_pri_list,
                                  differentiated_gamma, mark_pruned,
                                  update_state)
 from repro.core.workload import (PlanDynamic, PlanStatic, WorkloadPlan,
-                                 bucket_for_gamma, keep_blocks_for_bucket)
+                                 bucket_for_gamma, keep_blocks_for_bucket,
+                                 quantize_shed, shed_bucket_counts)
 
 
 # ---------------------------------------------------------------------------
@@ -148,11 +149,15 @@ class ControllerReport:
     stragglers: list
     gammas: Dict[int, float]
     bucket_by_rank: np.ndarray
-    mig_src: int
-    mig_blocks: int
-    beta: float
+    mig_src: int                       # first (heaviest) source, -1 = none
+    mig_blocks: int                    # TOTAL shed blocks over all sources
+    beta: float                        # β of the heaviest source
     x_migrating: int
     t_ref: float
+    # concurrent multi-straggler decision (aligned, canonical shed-desc order)
+    mig_srcs: tuple = ()
+    mig_shed: tuple = ()
+    betas: tuple = ()
 
 
 class SemiController:
@@ -160,11 +165,17 @@ class SemiController:
 
     def __init__(self, cfg: WorkloadControlConfig, tp: int,
                  iter_model: IterationModel, num_blocks: int,
-                 costs: Optional[CostFunctions] = None, seed: int = 0):
+                 costs: Optional[CostFunctions] = None, seed: int = 0,
+                 max_sources: Optional[int] = None,
+                 shed_cap: Optional[int] = None):
         self.cfg = cfg
         self.tp = tp
         self.model = iter_model
         self.num_blocks = num_blocks            # prunable blocks per rank shard
+        self.max_sources = (cfg.max_migration_sources
+                            if max_sources is None else max_sources)
+        self.shed_cap = (cfg.migration_shed_cap
+                         if shed_cap is None else shed_cap)
         self.costs = costs or pretest_cost_functions(
             iter_model, num_blocks, e=tp)
         self.priority: Dict[str, PriorityState] = {}
@@ -213,57 +224,108 @@ class SemiController:
                                m_i * times[i] / max(t_ref, 1e-12))
                   for i in stragglers}
         bucket_by_rank = np.zeros((e,), np.int32)
-        mig_src, mig_blocks, beta, x_mig = -1, 0, 0.0, 0
+        beta, x_mig = 0.0, 0
+        srcs: list = []          # source ranks, time-desc order
+        sheds: list = []         # matching quantized shed counts
+        betas: list = []
+        # the compiled program needs >= 1 helper slot per source set
+        max_src = min(self.max_sources, e - 1, max(len(stragglers), 0))
 
-        if cfg.mode == "zero" or not stragglers:
+        def _quantized_shed(want: float) -> int:
+            m_q = quantize_shed(int(round(want)), self.num_blocks,
+                                cfg.gamma_buckets)
+            if self.shed_cap:
+                m_q = min(m_q, self.shed_cap)
+            return m_q
+
+        if cfg.mode == "zero" or not stragglers or max_src == 0:
             for i, g in gammas.items():
                 bucket_by_rank[i] = bucket_for_gamma(g, cfg.gamma_buckets)
 
         elif cfg.mode == "mig":
-            # migrate everything for the slowest straggler
-            i = int(np.argmax(times))
-            g = gammas.get(i, 0.0)
-            mig_src, mig_blocks = i, int(round(g * self.num_blocks))
+            # migrate everything for every straggler (slowest first)
+            for i in sorted(stragglers, key=lambda r: -times[r])[:max_src]:
+                m_q = _quantized_shed(gammas[i] * self.num_blocks)
+                if m_q > 0:
+                    srcs.append(i)
+                    sheds.append(m_q)
+                    betas.append(1.0)
+            x_mig = len(srcs)
 
         else:  # semi (Alg. 2)
             order = np.argsort(-times)
+            times_desc = times[order]
+            workloads = np.full((e,), float(self.num_blocks))
             if len(stragglers) == 1:
-                i = stragglers[0]
-                g = gammas[i]
-                L_gamma = g * self.num_blocks
-                beta = eq2_beta(L_gamma, self.costs, e)
-                mig_blocks = int(round(L_gamma * beta))
-                mig_src = i if mig_blocks > 0 else -1
-                resid_gamma = g * (1 - beta)
-                bucket_by_rank[i] = bucket_for_gamma(resid_gamma, cfg.gamma_buckets)
-                x_mig = 1 if mig_blocks > 0 else 0
+                x_mig = 1
             else:
-                times_desc = times[order]
-                workloads = np.full((e,), float(self.num_blocks))
-                x_mig = eq3_migration_prefix(times_desc, workloads, self.costs, e)
-                # jitted path supports one migration source: the slowest
-                # rank migrates; ranks 2..x and the rest resize to T_min.
-                if x_mig >= 1:
-                    i = int(order[0])
-                    g = gammas.get(i, 0.0)
-                    mig_src, mig_blocks = i, int(round(g * self.num_blocks))
-                for j, i in enumerate(order):
-                    if i not in stragglers or i == mig_src:
-                        continue
+                x_mig = eq3_migration_prefix(times_desc, workloads,
+                                             self.costs, e)
+            x_mig = min(x_mig, max_src)
+            # Eq.(3) selection over the sorted straggler list: the first
+            # x ranks migrate (β-split per source), the rest resize.
+            for k in range(x_mig):
+                i = int(order[k])
+                g = gammas.get(i, 0.0)
+                L_gamma = g * self.num_blocks
+                # helpers shrink as the source set grows: e' − 1 = e − x
+                b_k = eq2_beta(L_gamma, self.costs, max(e - x_mig + 1, 2))
+                m_q = _quantized_shed(L_gamma * b_k)
+                # fit check: the source must KEEP >= 1 block after both its
+                # residual-resize bucket and the migrated shed — otherwise
+                # the compiled branch clamp would double-compute blocks.
+                grid = shed_bucket_counts(self.num_blocks, cfg.gamma_buckets)
+                while m_q > 0:
+                    resid_gamma = max(0.0, (L_gamma - m_q) / self.num_blocks)
+                    b_res = bucket_for_gamma(resid_gamma, cfg.gamma_buckets)
+                    kc = keep_blocks_for_bucket(
+                        cfg.gamma_buckets[b_res], self.num_blocks)
+                    if kc - m_q >= 1:
+                        break
+                    smaller = [cnt for cnt in grid if cnt < m_q]
+                    m_q = smaller[-1] if smaller else 0
+                if m_q > 0:
+                    srcs.append(i)
+                    sheds.append(m_q)
+                    betas.append(b_k)
+                    resid_gamma = max(0.0, (L_gamma - m_q) / self.num_blocks)
                     bucket_by_rank[i] = bucket_for_gamma(
-                        gammas[i], cfg.gamma_buckets)
+                        resid_gamma, cfg.gamma_buckets)
+                else:
+                    bucket_by_rank[i] = bucket_for_gamma(g, cfg.gamma_buckets)
+            beta = betas[0] if betas else 0.0
+            x_mig = len(srcs)
+            for i in order:
+                i = int(i)
+                if i not in stragglers or i in srcs:
+                    continue
+                bucket_by_rank[i] = bucket_for_gamma(
+                    gammas[i], cfg.gamma_buckets)
+
+        # canonical plan-signature order: shed counts descending (stable on
+        # the time-desc order above), sources aligned — equivalent plans
+        # then hash to the same compiled executable.
+        if srcs:
+            pairs = sorted(zip(sheds, srcs, betas), key=lambda p: -p[0])
+            sheds = [p[0] for p in pairs]
+            srcs = [p[1] for p in pairs]
+            betas = [p[2] for p in pairs]
 
         report = ControllerReport(
             stragglers=stragglers, gammas=gammas,
-            bucket_by_rank=bucket_by_rank.copy(), mig_src=mig_src,
-            mig_blocks=mig_blocks, beta=beta, x_migrating=x_mig, t_ref=t_ref)
+            bucket_by_rank=bucket_by_rank.copy(),
+            mig_src=srcs[0] if srcs else -1,
+            mig_blocks=int(sum(sheds)), beta=betas[0] if betas else beta,
+            x_migrating=x_mig, t_ref=t_ref,
+            mig_srcs=tuple(srcs), mig_shed=tuple(sheds), betas=tuple(betas))
 
         static = PlanStatic(
             buckets=tuple(cfg.gamma_buckets), block_size=cfg.block_size,
-            mig_blocks=mig_blocks, tp_size=e, imputation=cfg.imputation)
+            mig_shed=tuple(sheds), tp_size=e, imputation=cfg.imputation)
         dynamic = PlanDynamic(
             bucket_by_rank=bucket_by_rank,
-            mig_src=np.array(mig_src, np.int32),
+            mig_src=(np.asarray(srcs, np.int32) if srcs
+                     else np.array(-1, np.int32)),
             pri_lists=self.pri_lists())
         # mark pruned blocks for the incremental-update rule
         for name, st in list(self.priority.items()):
@@ -279,17 +341,29 @@ class SemiController:
 
 def work_fraction(plan: WorkloadPlan, num_blocks: int) -> np.ndarray:
     """Retained matmul-work fraction per rank implied by a plan (for the
-    iteration model / benchmarks)."""
+    iteration model / benchmarks). Handles concurrent multi-source
+    migration: each active source drops its shed fraction; the H = e − S
+    working helpers (first non-source ranks in helper order) each absorb
+    ceil(shed_s / H) blocks per slot — mirroring the padded partition of
+    the real dataflow."""
     e = plan.static.tp_size
     frac = np.ones((e,), np.float64)
     for r in range(e):
         g = plan.static.buckets[int(plan.dynamic.bucket_by_rank[r])]
         frac[r] *= (keep_blocks_for_bucket(g, num_blocks) / num_blocks)
-    src = int(plan.dynamic.mig_src)
-    if plan.static.migration_enabled and src >= 0:
-        mig_frac = plan.static.mig_blocks / num_blocks
-        frac[src] *= max(0.0, 1.0 - mig_frac)
-        for r in range(e):
-            if r != src:
-                frac[r] += mig_frac / max(e - 1, 1)
+    sheds = plan.static.mig_sheds
+    if plan.static.migration_enabled and sheds:
+        srcs = plan.dynamic.mig_srcs(len(sheds))
+        active = [(int(s), int(m)) for s, m in zip(srcs, sheds)
+                  if s >= 0 and m > 0]
+        if active:
+            H = max(e - len(sheds), 1)
+            src_set = {s for s, _ in active}
+            helpers = [r for r in range(e) if r not in src_set][:H]
+            extra = 0.0
+            for s, m in active:
+                frac[s] *= max(0.0, 1.0 - m / num_blocks)
+                extra += -(-m // H) / num_blocks
+            for r in helpers:
+                frac[r] += extra
     return frac

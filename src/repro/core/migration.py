@@ -1,36 +1,58 @@
 """Lightweight workload migration (paper Sec. IV-A), as shard_map dataflow.
 
 Unit of migration: *intermediate-dimension blocks of a TP-split linear
-pair* (e.g. the FFN's d_ff). The straggler sheds `m` blocks of its local
-shard; every normal rank receives the straggler's weight slices for those
+pair* (e.g. the FFN's d_ff). A straggler sheds `m` blocks of its local
+shard; every helper rank receives the straggler's weight slices for those
 blocks ("broadcast"), computes a deterministic sub-range (the paper's rank
 renumbering r' = (r + e - r_s) mod e), and **accumulates the result into
 its own partial output before the layer's all-reduce** — the migration
 `reduce` is merged into the already-required collective (reduce-merging).
 
+Concurrent multi-straggler migration (paper Fig. 11): a *set* of S source
+ranks shed simultaneously. The helper set is the ranks outside the source
+set; each helper is renumbered by its position among helpers (hidx) and
+slot s's export is partitioned as
+
+    j_s(r) = (hidx(r) + H − (r_s mod H)) mod H,   H = e − S,
+
+which for S = 1 reduces exactly to the paper's r' renumbering (see
+:func:`multi_migration_assignment`). All S exports are concatenated into a
+SINGLE masked ``psum`` pair, so the broadcast cost of S sources is one
+fused collective, and every migrated partial still folds into the layer's
+single pre-existing ``psum``.
+
 Collective mapping (DESIGN.md §2):
 * paper `broadcast` → masked ``psum`` of per-rank export buffers (each rank
-  contributes zeros except the straggler). XLA lowers this to the ICI-
+  contributes zeros except the sources). XLA lowers this to the ICI-
   optimal tree/ring — the paper's tree-broadcast insight for free.
 * paper `reduce` → *eliminated*: helpers add their migrated partial product
   into their local partial sum; the single pre-existing ``psum`` collects.
 * backward: JAX autodiff transposes the same dataflow — gradients of the
-  broadcast slices flow back to the straggler's weight shards through the
-  transposed psum, so migration is **lossless** (property-tested).
+  broadcast slices flow back to each straggler's weight shards through the
+  transposed psum, so migration is **lossless** (property-tested for 1, 2
+  and 3 concurrent stragglers).
 
-The forward on the straggler uses :func:`resized_matmul` with the
-complement of the migrated blocks, so the straggler's FLOPs genuinely drop
-(static shapes; the migrated blocks are computed nowhere locally).
+The forward on each straggler uses the complement of its migrated blocks,
+so straggler FLOPs genuinely drop (static shapes; the migrated blocks are
+computed nowhere locally).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core import resizing
+
+
+def _axis_size(axis) -> int:
+    """Static size of a mapped axis; ``lax.axis_size`` only exists on newer
+    jax — ``psum(1, axis)`` constant-folds to the same int everywhere."""
+    if hasattr(lax, "axis_size"):
+        return int(lax.axis_size(axis))
+    return int(lax.psum(1, axis))
 
 
 def _bcast_from(src: jax.Array, value: jax.Array, axis: str) -> jax.Array:
@@ -50,13 +72,134 @@ def migration_assignment(rank, src, e: int, m_pad: int):
 
     Renumbering r' = (rank + e - src) mod e; r'=0 is the straggler itself
     (computes none — handled by a zero mask), helpers r'=1..e-1 take
-    consecutive m_per-block slices.
+    consecutive m_per-block slices. m_per ceil-divides, so an m_pad that
+    is not a multiple of the helper count still gets full coverage (the
+    caller masks the overhanging padded lanes).
     """
-    m_per = m_pad // (e - 1)
+    m_per = -(-m_pad // max(e - 1, 1))
     rprime = (rank + e - src) % e
     is_helper = rprime > 0
     lo = (jnp.maximum(rprime, 1) - 1) * m_per
     return lo, m_per, is_helper
+
+
+def multi_migration_assignment(rank, srcs, e: int, sheds: Sequence[int]):
+    """Deterministic helper partition for S concurrent migration sources.
+
+    ``srcs`` is an [S] int vector of source ranks (−1 = slot idle) and
+    ``sheds`` the matching *static* per-source shed block counts. Helpers
+    are the ranks outside the source set, renumbered by their position
+    among helpers, hidx(r) = #{r'' < r : r'' not a source}. Only the first
+    H = e − S helpers work (the surplus when slots are idle stays free).
+    For slot s, helper j = (hidx + H − (src_s mod H)) mod H computes blocks
+    [j·m_per_s, (j+1)·m_per_s) of that slot's padded export, where
+    m_per_s = ceil(shed_s / H). For S = 1 this reduces exactly to the
+    paper's renumbering r' = (r + e − r_s) mod e.
+
+    Returns ``(los, m_pers, helps)``: per-slot lists of this rank's block
+    offset into the slot's padded export (dynamic), the static per-helper
+    block count, and whether this rank helps that slot (dynamic bool —
+    false for sources, idle slots, and surplus helpers).
+    """
+    srcs = jnp.asarray(srcs)
+    S = int(srcs.shape[0])
+    H = max(e - S, 1)
+    ranks = jnp.arange(e)
+    is_src_vec = jnp.any(ranks[:, None] == srcs[None, :], axis=1)
+    helper_pos = jnp.cumsum(jnp.logical_not(is_src_vec).astype(jnp.int32)) - 1
+    hidx = helper_pos[rank]
+    can_help = jnp.logical_and(jnp.logical_not(is_src_vec[rank]), hidx < H)
+    los, m_pers, helps = [], [], []
+    for s, m_s in enumerate(sheds):
+        m_per = -(-int(m_s) // H)
+        j = (hidx + H - (srcs[s] % H)) % H
+        los.append(j * m_per)
+        m_pers.append(m_per)
+        helps.append(jnp.logical_and(can_help, srcs[s] >= 0))
+    return los, tuple(m_pers), helps
+
+
+def fused_migration_delta(x, *, axis, rank, srcs, sheds, block, act_fn,
+                          exports):
+    """Fused multi-source broadcast + helper compute (the shared core of
+    :func:`migrated_pair_matmul` and ``controlled_ffn``).
+
+    ``exports`` is a per-slot list of ``(exp_in [d, m_s·B], exp_out
+    [m_s·B, n], exp_gate | None)`` gathered by EVERY rank from its own
+    local shard; only the slot source's contribution survives the single
+    masked ``psum`` pair. Helpers slice their partition (see
+    :func:`multi_migration_assignment`), run one fused matmul over all
+    slots, and the returned delta [T, n] is reduce-merged by the caller
+    into its partial output ahead of the layer's existing all-reduce
+    (zeros on sources / idle slots / surplus helpers).
+    """
+    e = _axis_size(axis)
+    S = len(sheds)
+    H = max(e - S, 1)
+    los, m_pers, helps = multi_migration_assignment(rank, srcs, e, sheds)
+    m_pads = [m_per * H for m_per in m_pers]
+
+    c_in, c_out, c_gate = [], [], []
+    for s, m_s in enumerate(sheds):
+        exp_in, exp_out, exp_gate = exports[s]
+        pad = m_pads[s] - m_s
+        if pad:
+            exp_in = jnp.pad(exp_in, ((0, 0), (0, pad * block)))
+            exp_out = jnp.pad(exp_out, ((0, pad * block), (0, 0)))
+            if exp_gate is not None:
+                exp_gate = jnp.pad(exp_gate, ((0, 0), (0, pad * block)))
+        sel = rank == srcs[s]
+        c_in.append(jnp.where(sel, exp_in, jnp.zeros_like(exp_in)))
+        c_out.append(jnp.where(sel, exp_out, jnp.zeros_like(exp_out)))
+        if exp_gate is not None:
+            c_gate.append(jnp.where(sel, exp_gate, jnp.zeros_like(exp_gate)))
+
+    b_in = lax.psum(jnp.concatenate(c_in, axis=1), axis)
+    b_out = lax.psum(jnp.concatenate(c_out, axis=0), axis)
+    b_gate = (lax.psum(jnp.concatenate(c_gate, axis=1), axis)
+              if c_gate else None)
+
+    sl_in, sl_out, sl_gate, gates = [], [], [], []
+    off = 0
+    for s, m_s in enumerate(sheds):
+        m_per = m_pers[s]
+        lo = (off + los[s]) * block
+        sl_in.append(lax.dynamic_slice_in_dim(b_in, lo, m_per * block, 1))
+        sl_out.append(lax.dynamic_slice_in_dim(b_out, lo, m_per * block, 0))
+        if b_gate is not None:
+            sl_gate.append(lax.dynamic_slice_in_dim(
+                b_gate, lo, m_per * block, 1))
+        # mask padded block lanes, non-helpers and idle slots
+        lane = jnp.arange(m_per * block) + los[s] * block
+        gates.append((lane < m_s * block).astype(x.dtype)
+                     * helps[s].astype(x.dtype))
+        off += m_pads[s]
+
+    cat_in = jnp.concatenate(sl_in, axis=1)
+    cat_out = jnp.concatenate(sl_out, axis=0)
+    gate_mask = jnp.concatenate(gates)
+    h_mig = x @ cat_in
+    if b_gate is not None:
+        h_mig = act_fn(x @ jnp.concatenate(sl_gate, axis=1)) * h_mig
+    else:
+        h_mig = act_fn(h_mig)
+    return (h_mig * gate_mask[None, :]) @ cat_out
+
+
+def _normalize_slots(mig_src, mig_block_ids
+                     ) -> Tuple[jax.Array, List[jax.Array]]:
+    """Normalize (scalar src, [m] ids) / ([S] srcs, per-slot ids) inputs."""
+    srcs = jnp.atleast_1d(jnp.asarray(mig_src, jnp.int32))
+    if isinstance(mig_block_ids, (list, tuple)):
+        ids = [jnp.asarray(i, jnp.int32) for i in mig_block_ids]
+    else:
+        arr = jnp.asarray(mig_block_ids, jnp.int32)
+        ids = [arr] if arr.ndim == 1 else [arr[s] for s in range(arr.shape[0])]
+    if srcs.shape[0] != len(ids):
+        raise ValueError(
+            f"mig_src has {srcs.shape[0]} slots but mig_block_ids has "
+            f"{len(ids)} — straggler set and shed lists must align")
+    return srcs, ids
 
 
 def migrated_pair_matmul(
@@ -65,47 +208,35 @@ def migrated_pair_matmul(
     w_out_loc: jax.Array,         # [Hloc, d_out] row-split
     *,
     axis: str,
-    mig_src: jax.Array,           # scalar int32; -1 disables
-    mig_block_ids: jax.Array,     # [m] int32 block ids within the straggler's shard
+    mig_src: jax.Array,           # int32 [] or [S] source ranks; -1 disables
+    mig_block_ids,                # [m] int32, or per-slot list / [S, m] array
     block: int,
     act_fn: Callable[[jax.Array], jax.Array],
     w_gate_loc: Optional[jax.Array] = None,   # optional gate for GLU acts
     psum_result: bool = True,
 ) -> jax.Array:
-    """Forward of a TP linear pair with single-source migration.
+    """Forward of a TP linear pair with multi-source migration.
 
-    Returns the (optionally psum'd) output [T, d_out]. With mig_src = -1
-    the result equals the plain TP pair (all ranks dense).
+    Returns the (optionally psum'd) output [T, d_out]. With every source
+    slot at -1 the result equals the plain TP pair (all ranks dense).
+    Source ranks must be distinct; each slot sheds its own block ids out
+    of the *source's* local shard.
     """
-    e = lax.axis_size(axis)
+    e = _axis_size(axis)
     rank = lax.axis_index(axis)
+    srcs, ids_by_slot = _normalize_slots(mig_src, mig_block_ids)
+    S = int(srcs.shape[0])
+    sheds = tuple(int(i.shape[0]) for i in ids_by_slot)
+    H = max(e - S, 1)
     Hloc = w_in_loc.shape[1]
     nb = Hloc // block
-    m = mig_block_ids.shape[0]
-    enabled = mig_src >= 0
-    src = jnp.where(enabled, mig_src, 0)
 
-    # ----- local compute: straggler drops the migrated blocks (resized) ---
-    # keep-list: complement of mig_block_ids for the straggler, first
-    # (nb - m) blocks otherwise (helpers run dense separately below).
-    all_ids = jnp.arange(nb, dtype=mig_block_ids.dtype)
-    in_mig = jnp.zeros((nb,), bool).at[jnp.clip(mig_block_ids, 0, nb - 1)].set(True)
-    complement = jnp.argsort(in_mig.astype(jnp.int32), stable=True)[: nb - m]
-    complement = jnp.sort(complement)
+    ranks_v = jnp.arange(e)
+    is_src_vec = jnp.any(ranks_v[:, None] == srcs[None, :], axis=1)
+    i_am_src = is_src_vec[rank]
+    my_slot = jnp.argmax(srcs == rank)
 
-    def straggler_branch(ops_):
-        x_, w_in, w_gate, w_out = ops_
-        # prune migrated intermediate blocks out of BOTH matmuls
-        w_in_k = _gather_cols_mat(w_in, complement, block)        # [d, (nb-m)B]
-        h = x_ @ w_in_k
-        if w_gate is not None:
-            w_g_k = _gather_cols_mat(w_gate, complement, block)
-            h = act_fn(x_ @ w_g_k) * h
-        else:
-            h = act_fn(h)
-        w_out_k = resizing.gather_rows(w_out, complement, block)  # [(nb-m)B, d_out]
-        return h @ w_out_k
-
+    # ----- local compute: each straggler drops ITS slot's blocks ---------
     def dense_branch(ops_):
         x_, w_in, w_gate, w_out = ops_
         h = x_ @ w_in
@@ -115,47 +246,42 @@ def migrated_pair_matmul(
             h = act_fn(h)
         return h @ w_out
 
-    is_straggler = jnp.logical_and(enabled, rank == src)
-    partial = lax.cond(
-        is_straggler, straggler_branch, dense_branch,
-        (x, w_in_loc, w_gate_loc, w_out_loc))
+    def make_drop_branch(s: int):
+        ids_s, m_s = ids_by_slot[s], sheds[s]
 
-    if m > 0:
-        # ----- broadcast migrated slices (weight-only; x is replicated) ---
-        m_per = -(-m // max(e - 1, 1))
-        m_pad = m_per * max(e - 1, 1)
-        pad_ids = jnp.concatenate(
-            [mig_block_ids, jnp.zeros((m_pad - m,), mig_block_ids.dtype)])
-        valid = jnp.concatenate(
-            [jnp.ones((m,), bool), jnp.zeros((m_pad - m,), bool)])
+        def branch(ops_):
+            x_, w_in, w_gate, w_out = ops_
+            in_mig = jnp.zeros((nb,), bool).at[
+                jnp.clip(ids_s, 0, nb - 1)].set(True)
+            complement = jnp.sort(jnp.argsort(
+                in_mig.astype(jnp.int32), stable=True)[: nb - m_s])
+            w_in_k = _gather_cols_mat(w_in, complement, block)
+            h = x_ @ w_in_k
+            if w_gate is not None:
+                h = act_fn(x_ @ _gather_cols_mat(w_gate, complement, block)) * h
+            else:
+                h = act_fn(h)
+            return h @ resizing.gather_rows(w_out, complement, block)
+        return branch
 
-        exp_in = _gather_cols_mat(w_in_loc, pad_ids, block)       # [d, m_pad*B]
-        exp_out = resizing.gather_rows(w_out_loc, pad_ids, block)  # [m_pad*B, d_out]
-        exp_gate = (_gather_cols_mat(w_gate_loc, pad_ids, block)
-                    if w_gate_loc is not None else None)
+    branches = [dense_branch] + [make_drop_branch(s) for s in range(S)]
+    branch_idx = jnp.where(i_am_src, 1 + my_slot, 0)
+    partial = lax.switch(branch_idx, branches,
+                         (x, w_in_loc, w_gate_loc, w_out_loc))
 
-        b_in = _bcast_from(src, exp_in, axis)
-        b_out = _bcast_from(src, exp_out, axis)
-        b_gate = _bcast_from(src, exp_gate, axis) if exp_gate is not None else None
-
-        lo, m_per_, is_helper = migration_assignment(rank, src, e, m_pad)
-        sl_in = lax.dynamic_slice_in_dim(b_in, lo * block, m_per_ * block, axis=1)
-        sl_out = lax.dynamic_slice_in_dim(b_out, lo * block, m_per_ * block, axis=0)
-        sl_valid = lax.dynamic_slice_in_dim(valid.astype(x.dtype), lo, m_per_)
-        sl_valid = jnp.repeat(sl_valid, block)
-
-        h_mig = x @ sl_in
-        if b_gate is not None:
-            sl_gate = lax.dynamic_slice_in_dim(
-                b_gate, lo * block, m_per_ * block, axis=1)
-            h_mig = act_fn(x @ sl_gate) * h_mig
-        else:
-            h_mig = act_fn(h_mig)
-        # zero the padded / non-helper / disabled lanes, then REDUCE-MERGE:
-        gate_mask = (sl_valid * is_helper.astype(x.dtype)
-                     * enabled.astype(x.dtype))
-        delta = (h_mig * gate_mask[None, :]) @ sl_out
-        partial = partial + delta
+    if sum(sheds) > 0:
+        # every rank gathers its own slices for each slot; only the slot
+        # source's contribution survives the fused masked psum inside
+        exports = []
+        for s in range(S):
+            exp_in = _gather_cols_mat(w_in_loc, ids_by_slot[s], block)
+            exp_out = resizing.gather_rows(w_out_loc, ids_by_slot[s], block)
+            exp_g = (_gather_cols_mat(w_gate_loc, ids_by_slot[s], block)
+                     if w_gate_loc is not None else None)
+            exports.append((exp_in, exp_out, exp_g))
+        partial = partial + fused_migration_delta(
+            x, axis=axis, rank=rank, srcs=srcs, sheds=sheds, block=block,
+            act_fn=act_fn, exports=exports)
 
     return lax.psum(partial, axis) if psum_result else partial
 
@@ -172,69 +298,98 @@ def scatter_gather_pair_matmul(x, w_in_loc, w_out_loc, *, axis, mig_src,
                                w_gate_loc=None):
     """The paper's *baseline* comm pattern (scatter-gather) for Table I.
 
-    Straggler point-to-point scatters a distinct slice to each helper
-    (emulated with ppermute rounds), helpers compute, results are gathered
-    back to the straggler and it injects them into its partial output —
-    i.e. NO reduce-merging: the collected result transits twice. Used only
-    for the migration-policy benchmark; semantics match migrated_pair_matmul.
+    Each source point-to-point scatters a distinct slice to each helper
+    (emulated with ppermute rotation rounds), helpers compute, results are
+    gathered back to the source which injects them into its partial output
+    — i.e. NO reduce-merging: the collected result transits twice. Used
+    only for the migration-policy benchmark; semantics match
+    :func:`migrated_pair_matmul`, including multi-source slots (processed
+    per slot: S · (e−1) rotation rounds).
     """
-    e = lax.axis_size(axis)
+    e = _axis_size(axis)
     rank = lax.axis_index(axis)
-    m = mig_block_ids.shape[0]
-    m_per = -(-m // max(e - 1, 1))
-    m_pad = m_per * max(e - 1, 1)
-    src = jnp.where(mig_src >= 0, mig_src, 0)
+    srcs, ids_by_slot = _normalize_slots(mig_src, mig_block_ids)
+    S = int(srcs.shape[0])
+    sheds = tuple(int(i.shape[0]) for i in ids_by_slot)
+    H = max(e - S, 1)
+    ranks_v = jnp.arange(e)
+    is_src_vec = jnp.any(ranks_v[:, None] == srcs[None, :], axis=1)
+    i_am_src = is_src_vec[rank]
+    my_slot = jnp.argmax(srcs == rank)
 
-    # Emulated scatter: each helper receives ONLY its slice, via one
-    # ppermute per helper round (e-1 rounds of [d, m_per*B] + [m_per*B, d]).
-    pad_ids = jnp.concatenate(
-        [mig_block_ids, jnp.zeros((m_pad - m,), mig_block_ids.dtype)])
-    valid = jnp.concatenate([jnp.ones((m,), bool), jnp.zeros((m_pad - m,), bool)])
-
-    partial = None
     deltas = jnp.zeros((x.shape[0], w_out_loc.shape[1]), x.dtype)
-    for h in range(1, e):  # helper with renumber r' = h
-        ids_h = lax.dynamic_slice_in_dim(pad_ids, (h - 1) * m_per, m_per)
-        val_h = lax.dynamic_slice_in_dim(valid.astype(x.dtype), (h - 1) * m_per, m_per)
-        sl_in = _gather_cols_mat(w_in_loc, ids_h, block)
-        sl_out = resizing.gather_rows(w_out_loc, ids_h, block)
-        perm = [(int(s), int((s + h) % e)) for s in range(e)]
-        r_in = lax.ppermute(sl_in, axis, perm)     # slice travels src -> src+h
-        r_out = lax.ppermute(sl_out, axis, perm)
-        hm = act_fn(x @ r_in)
-        if w_gate_loc is not None:
-            sl_g = _gather_cols_mat(w_gate_loc, ids_h, block)
-            r_g = lax.ppermute(sl_g, axis, perm)
-            hm = act_fn(x @ r_g) * (x @ r_in)
-        is_h = (rank == (src + h) % e)
-        mask = jnp.repeat(val_h, block) * is_h.astype(x.dtype)
-        d_h = (hm * mask[None, :]) @ r_out
-        # GATHER back to straggler (reverse permute) — the redundant hop
-        d_back = lax.ppermute(d_h, axis, [(int((s + h) % e), int(s)) for s in range(e)])
-        deltas = deltas + d_back
+    for s, m_s in enumerate(sheds):
+        if m_s == 0:
+            continue
+        src_s = srcs[s]
+        m_per = -(-m_s // H)
+        m_pad = m_per * H
+        pad_ids = jnp.concatenate(
+            [ids_by_slot[s], jnp.zeros((m_pad - m_s,), jnp.int32)])
+        # rotation rounds: round h carries chunk c(h) = #{h' < h landing on
+        # a helper} from every rank to rank+h; only the slice leaving the
+        # slot's source at a helper-landing rotation is real work.
+        land = jnp.logical_not(is_src_vec[(src_s + jnp.arange(e)) % e])  # [e]
+        for h in range(1, e):
+            c_h = jnp.sum(land[1:h].astype(jnp.int32)) if h > 1 \
+                else jnp.zeros((), jnp.int32)
+            valid_h = jnp.logical_and(jnp.logical_and(land[h], c_h < H),
+                                      src_s >= 0)
+            ids_h = lax.dynamic_slice_in_dim(pad_ids, c_h * m_per, m_per)
+            sl_in = _gather_cols_mat(w_in_loc, ids_h, block)
+            sl_out = resizing.gather_rows(w_out_loc, ids_h, block)
+            perm = [(int(r), int((r + h) % e)) for r in range(e)]
+            r_in = lax.ppermute(sl_in, axis, perm)   # slice travels src->src+h
+            r_out = lax.ppermute(sl_out, axis, perm)
+            hm = act_fn(x @ r_in)
+            if w_gate_loc is not None:
+                r_g = lax.ppermute(
+                    _gather_cols_mat(w_gate_loc, ids_h, block), axis, perm)
+                hm = act_fn(x @ r_g) * (x @ r_in)
+            is_recv = jnp.logical_and(rank == (src_s + h) % e, valid_h)
+            lane = jnp.arange(m_per * block) + c_h * m_per * block
+            mask = ((lane < m_s * block).astype(x.dtype)
+                    * is_recv.astype(x.dtype))
+            d_h = (hm * mask[None, :]) @ r_out
+            # GATHER back to the source (reverse permute) — the redundant hop
+            d_back = lax.ppermute(
+                d_h, axis, [(int((r + h) % e), int(r)) for r in range(e)])
+            deltas = deltas + jnp.where(rank == src_s, d_back,
+                                        jnp.zeros_like(d_back))
 
-    # straggler-local resized compute
-    nb = w_in_loc.shape[1] // block
-    in_mig = jnp.zeros((nb,), bool).at[jnp.clip(mig_block_ids, 0, nb - 1)].set(True)
-    complement = jnp.sort(jnp.argsort(in_mig.astype(jnp.int32), stable=True)[: nb - m])
-
-    w_in_k = _gather_cols_mat(w_in_loc, complement, block)
-    hloc = x @ w_in_k
-    if w_gate_loc is not None:
-        w_g_k = _gather_cols_mat(w_gate_loc, complement, block)
-        hloc = act_fn(x @ w_g_k) * hloc
-    else:
-        hloc = act_fn(hloc)
-    part_straggler = hloc @ resizing.gather_rows(w_out_loc, complement, block)
-
-    def dense(_):
-        hh = x @ w_in_loc
-        if w_gate_loc is not None:
-            hh = act_fn(x @ w_gate_loc) * hh
+    # source-local resized compute (each source drops its own slot's blocks)
+    def dense_branch(ops_):
+        x_, w_in, w_gate, w_out = ops_
+        hh = x_ @ w_in
+        if w_gate is not None:
+            hh = act_fn(x_ @ w_gate) * hh
         else:
             hh = act_fn(hh)
-        return hh @ w_out_loc
+        return hh @ w_out
 
-    partial = lax.cond(jnp.logical_and(mig_src >= 0, rank == src),
-                       lambda _: part_straggler + deltas, dense, None)
-    return lax.psum(partial, axis)
+    nb = w_in_loc.shape[1] // block
+
+    def make_src_branch(s: int):
+        ids_s, m_s = ids_by_slot[s], sheds[s]
+
+        def branch(ops_):
+            x_, w_in, w_gate, w_out = ops_
+            in_mig = jnp.zeros((nb,), bool).at[
+                jnp.clip(ids_s, 0, nb - 1)].set(True)
+            complement = jnp.sort(jnp.argsort(
+                in_mig.astype(jnp.int32), stable=True)[: nb - m_s])
+            w_in_k = _gather_cols_mat(w_in, complement, block)
+            hloc = x_ @ w_in_k
+            if w_gate is not None:
+                hloc = act_fn(
+                    x_ @ _gather_cols_mat(w_gate, complement, block)) * hloc
+            else:
+                hloc = act_fn(hloc)
+            return hloc @ resizing.gather_rows(w_out, complement, block)
+        return branch
+
+    branches = [dense_branch] + [make_src_branch(s) for s in range(S)]
+    branch_idx = jnp.where(i_am_src, 1 + my_slot, 0)
+    partial = lax.switch(branch_idx, branches,
+                         (x, w_in_loc, w_gate_loc, w_out_loc))
+    return lax.psum(partial + deltas, axis)

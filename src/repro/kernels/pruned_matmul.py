@@ -24,6 +24,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, n_keep: int):
     @pl.when(pl.program_id(2) == 0)
@@ -69,7 +73,7 @@ def block_pruned_matmul_2d(x: jax.Array, w: jax.Array, keep_idx: jax.Array,
         ),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(keep_idx, x, w)

@@ -55,13 +55,16 @@ def plan_specs(static: PlanStatic, cfg: ModelConfig, mesh: Mesh,
     num_layers dim — the PriDiff variant)."""
     e = static.tp_size
     lead = (static.num_layers,) if static.per_layer else ()
+    # one slot per concurrent migration source (>=1 so the array shape is
+    # stable when migration is off; idle slots carry -1)
+    n_slots = max(1, static.num_sources)
 
     def pri_shape(name, nb):
         core = (nb,) if SCOPE_LAYOUT.get(name) == "col" else (e, nb)
         return SDS(lead + core, jnp.int32)
 
     specs = {"bucket_by_rank": SDS(lead + (e,), jnp.int32),
-             "mig_src": SDS((), jnp.int32),
+             "mig_src": SDS((n_slots,), jnp.int32),
              "pri": {k: pri_shape(k, nb) for k, nb in scopes.items()}}
     shards = {"bucket_by_rank": _replicated(mesh),
               "mig_src": _replicated(mesh),

@@ -47,7 +47,7 @@ from repro.config import (ShapeConfig, TrainConfig, WorkloadControlConfig,
                           get_config, smoke_variant)
 from repro.core import hetero as hetero_lib
 from repro.core.controller import SemiController, work_fraction
-from repro.core.workload import PlanStatic, WorkloadPlan
+from repro.core.workload import PlanCompileCache, PlanStatic, WorkloadPlan
 from repro.data.pipeline import PatternImageStream, TokenTaskStream, patchify
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_small_mesh
@@ -81,6 +81,7 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                  ckpt_dir: Optional[str] = None, resume: bool = False,
                  imputation: str = "zero", selection: str = "priority",
                  hetero_period: int = 10, mig_blocks: int = 0,
+                 max_sources: int = 3,
                  eval_every: int = 0, quiet: bool = False,
                  force_gamma: Optional[float] = None,
                  data_noise: float = 0.35) -> Dict:
@@ -95,19 +96,32 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
         enabled=control_mode != "off" or force_gamma is not None,
         mode=control_mode if control_mode != "off" else "zero",
         imputation=imputation, selection=selection,
-        block_size=8)
+        block_size=8,
+        # legacy CLI contract: --mig-blocks 0 disables migration entirely;
+        # otherwise it caps the per-source shed count
+        max_migration_sources=max_sources if mig_blocks > 0 else 0,
+        migration_shed_cap=mig_blocks)
     control_static = None
     if control_cfg.enabled:
         control_static = PlanStatic(
             buckets=control_cfg.gamma_buckets,
             block_size=control_cfg.block_size,
-            mig_blocks=mig_blocks, tp_size=tp,
-            imputation=imputation)
+            tp_size=tp, imputation=imputation)
 
     with use_mesh(mesh):
-        fn, args_sds, in_sh, out_sh = steps_lib.build_train_step(
-            cfg, shape, mesh, train_cfg, control_static, total_steps=steps)
-        step_jit = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        # Plan-signature compile cache: the controller's multi-straggler
+        # plans change the STATIC shed counts, so the step function is
+        # (re)built per canonical signature; shed quantization keeps the
+        # signature set small and each one compiles at most once.
+        def _build_step(static):
+            fn_, _, in_sh_, out_sh_ = steps_lib.build_train_step(
+                cfg, shape, mesh, train_cfg, static, total_steps=steps)
+            jitted = jax.jit(fn_, in_shardings=in_sh_, out_shardings=out_sh_)
+            n_slots = max(1, static.num_sources) if static is not None else 0
+            return jitted, n_slots, in_sh_
+
+        step_cache = PlanCompileCache(_build_step)
+        step_jit, plan_slots, in_sh = step_cache.get(control_static)
 
         # real init
         box = {}
@@ -169,7 +183,7 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
         nb_loc = list(scopes.values())[0] if scopes else 0
         work_frac = np.ones((tp,))
         history = {"loss": [], "acc": [], "modeled_step_s": [],
-                   "gammas": [], "mig": []}
+                   "gammas": [], "mig": [], "mig_shed": []}
 
         def scope_stats():
             """Mean-over-layers weight matrices per controlled scope:
@@ -199,6 +213,7 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
             chis = schedule.chi(it)
             plan_arrays = None
             report = None
+            step_fn, n_slots = step_jit, plan_slots
             if controller is not None:
                 if force_gamma is not None:
                     # Figs. 5/6: force a uniform γ on EVERY rank
@@ -235,24 +250,27 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                         if pri is None or pri.shape[0] != nb_total:
                             pri = np.arange(nb_total, dtype=np.int32)
                         pri_all[name] = jnp.asarray(per_rank_pri(pri, tp, nb))
+                # pick the executable for this plan's signature: migration
+                # shed counts are static, so multi-straggler replans swap
+                # between cached compiled steps instead of recompiling
+                st_iter = dataclasses.replace(
+                    control_static, mig_shed=plan.static.mig_sheds,
+                    mig_blocks=0)
+                step_fn, n_slots, _ = step_cache.get(st_iter)
                 plan_arrays = {
                     "bucket_by_rank": jnp.asarray(plan.dynamic.bucket_by_rank),
-                    "mig_src": jnp.asarray(plan.dynamic.mig_src),
+                    "mig_src": jnp.asarray(plan.dynamic.mig_srcs(n_slots)),
                     "pri": pri_all,
                 }
-                # mig_blocks static: clamp runtime plan to the compiled slot
-                if control_static.mig_blocks == 0:
-                    plan_arrays["mig_src"] = jnp.asarray(
-                        np.int32(-1))
                 work_frac = work_fraction(plan, nb_loc)
 
             b = make_batch()
             b = {k: jnp.asarray(v) for k, v in b.items()}
             t0 = time.time()
             if plan_arrays is not None:
-                params, opt, metrics = step_jit(params, opt, b, plan_arrays)
+                params, opt, metrics = step_fn(params, opt, b, plan_arrays)
             else:
-                params, opt, metrics = step_jit(params, opt, b)
+                params, opt, metrics = step_fn(params, opt, b)
             metrics = jax.device_get(metrics)
             wall = time.time() - t0
 
@@ -264,6 +282,9 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                 history["gammas"].append(
                     {int(k): float(v) for k, v in report.gammas.items()})
                 history["mig"].append(int(report.mig_src))
+                history["mig_shed"].append(
+                    [list(map(int, report.mig_srcs)),
+                     list(map(int, report.mig_shed))])
 
             if controller is not None and (it + 1) % 10 == 0:
                 stats = scope_stats()
@@ -292,6 +313,9 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
         history["final_loss"] = history["loss"][-1] if history["loss"] else None
         history["mean_modeled_step_s"] = float(
             np.mean(history["modeled_step_s"])) if history["modeled_step_s"] else 0
+        # compile-cache telemetry: distinct plan signatures built vs reused
+        history["plan_compiles"] = step_cache.compile_count
+        history["plan_cache_hits"] = step_cache.hit_count
         return history
 
 
@@ -306,7 +330,10 @@ def main():
     ap.add_argument("--hetero", default="none",
                     choices=["none", "static", "round_robin", "contention"])
     ap.add_argument("--chi", type=float, default=2.0)
-    ap.add_argument("--mig-blocks", type=int, default=0)
+    ap.add_argument("--mig-blocks", type=int, default=0,
+                    help="per-source migration shed cap; 0 disables migration")
+    ap.add_argument("--max-sources", type=int, default=3,
+                    help="max concurrent migration stragglers per TP group")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
@@ -327,7 +354,8 @@ def main():
         lr=args.lr, batch=args.batch, seq=args.seq, seed=args.seed,
         ckpt_dir=args.ckpt_dir, resume=args.resume,
         imputation=args.imputation, selection=args.selection,
-        mig_blocks=args.mig_blocks, eval_every=args.eval_every)
+        mig_blocks=args.mig_blocks, max_sources=args.max_sources,
+        eval_every=args.eval_every)
     print(f"final loss: {hist['final_loss']:.4f}  "
           f"mean modeled step: {hist['mean_modeled_step_s']*1e3:.2f} ms")
     if args.out:

@@ -7,14 +7,18 @@ Two execution paths per op:
   dry-runs and when the controller reports no stragglers).
 * **controlled**: a ``jax.shard_map`` block over the TP ("model") axis in
   which each rank applies its γ-bucket (ZERO-resizing ``lax.switch``) and,
-  for FFN pairs, the straggler sheds `m` intermediate blocks to helpers
-  (migration with reduce-merging). Plan semantics per rank, over its local
-  keep-first priority list `pri`:
+  for FFN pairs, each straggler in the CONCURRENT source set sheds its
+  slot's `m_s` intermediate blocks to the helpers (migration with
+  reduce-merging; see core/migration.py for the multi-source partition).
+  Plan semantics per rank, over its local keep-first priority list `pri`:
 
-      [ keep (kc_b - m·is_straggler) | migrate m (straggler only) | pruned ]
+      [ keep (kc_b - m_s·is_straggler) | migrate m_s (slot source only) | pruned ]
 
-  Branches are duplicated for the straggler (keep kc_b − m) so migrated
+  Branches are duplicated per source slot (keep kc_b − m_s) so migrated
   blocks are truly not computed locally (static shapes, real FLOP cut).
+  The per-slot shed counts live in ``PlanStatic.mig_sheds`` (static —
+  quantized + compile-cached upstream); the source rank ids arrive as the
+  dynamic ``mig_src`` vector, so retargeting stragglers never recompiles.
 """
 from __future__ import annotations
 
@@ -27,8 +31,9 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import resizing
+from repro.core.migration import fused_migration_delta
 from repro.core.workload import PlanStatic, keep_blocks_for_bucket
-from repro.sharding import filter_spec_for_mesh, shard
+from repro.sharding import filter_spec_for_mesh, shard, shard_map
 
 
 @dataclasses.dataclass
@@ -37,7 +42,8 @@ class ControlContext:
 
     Arrays may carry a leading layer dimension (scan slices it off):
       bucket_by_rank: [e] or [L, e] int32
-      mig_src:        [] int32 (−1 = no migration this step)
+      mig_src:        [] or [S] int32 source ranks, aligned with
+                      static.mig_sheds (−1 = slot idle / no migration)
       pri:            scope -> [nb] / [e, nb_loc] (+ optional leading L)
     """
 
@@ -115,8 +121,8 @@ def controlled_proj(x: jax.Array, w: jax.Array, ctx: Optional[ControlContext],
                 x_, w_, pri_, bucket_[0], buckets=st.buckets,
                 block=blk, use_kernel=ctx.use_kernel)
 
-        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_spec, check_vma=False)(
+        return shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_spec, check_vma=False)(
             x, w, ctx.bucket_by_rank, pri)
 
     # row-split: x last dim and w first dim are sharded; per-rank pri [e, nb]
@@ -132,8 +138,8 @@ def controlled_proj(x: jax.Array, w: jax.Array, ctx: Optional[ControlContext],
             block=blk, use_kernel=ctx.use_kernel)
         return lax.psum(y, axis)
 
-    return jax.shard_map(body_row, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_spec, check_vma=False)(
+    return shard_map(body_row, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_spec, check_vma=False)(
         x, w, ctx.bucket_by_rank, pri)
 
 
@@ -175,7 +181,8 @@ def controlled_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
     st = ctx.static
     blk = st.block_for(scope)
     e = st.tp_size
-    m = st.mig_blocks
+    sheds = st.mig_sheds                       # per-source shed counts (static)
+    S = len(sheds)
     pri = ctx.pri[scope]                       # [e, nb_loc]
     lead = x.shape[:-1]
     nl = len(lead)
@@ -204,10 +211,26 @@ def controlled_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
         rank = lax.axis_index(axis)
         Hloc = w_up_.shape[1]
         nb = Hloc // blk
-        enabled = jnp.logical_and(mig_src_ >= 0, m > 0)
-        is_straggler = jnp.logical_and(enabled, rank == mig_src_)
+        if S > 0 and max(sheds) >= nb:
+            raise ValueError(
+                f"mig_shed {sheds} must leave each source at least one of "
+                f"its {nb} local blocks")
 
-        # ---- per-rank local compute: switch over (bucket × straggler) ----
+        # source-slot vector: pad/trim the dynamic mig_src to S entries
+        if S > 0:
+            srcs = jnp.atleast_1d(mig_src_)[:S]
+            if srcs.shape[0] < S:
+                srcs = jnp.concatenate(
+                    [srcs, jnp.full((S - srcs.shape[0],), -1, srcs.dtype)])
+            ranks_v = jnp.arange(e)
+            is_src_vec = jnp.any(ranks_v[:, None] == srcs[None, :], axis=1)
+            is_straggler = is_src_vec[rank]
+            my_slot = jnp.argmax(srcs == rank)
+        else:
+            is_straggler = jnp.zeros((), bool)
+            my_slot = jnp.zeros((), jnp.int32)
+
+        # ---- per-rank local compute: switch over (bucket × source slot) --
         def make_branch(kc: int):
             kc = max(1, min(kc, nb))
 
@@ -225,61 +248,41 @@ def controlled_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
 
         kcs = [keep_blocks_for_bucket(g, nb) for g in st.buckets]
         branches = [make_branch(kc) for kc in kcs]
-        if m > 0:
-            branches += [make_branch(kc - m) for kc in kcs]
-        branch_idx = bucket_self + len(st.buckets) * is_straggler.astype(jnp.int32)
+        for m_s in sheds:
+            branches += [make_branch(kc - m_s) for kc in kcs]
+        branch_idx = bucket_self + len(st.buckets) * jnp.where(
+            is_straggler, 1 + my_slot, 0).astype(jnp.int32)
         partial = lax.switch(branch_idx, branches,
                              (x2, w_up_, w_gate_, w_down_, pri_))
 
-        # ---- migration: straggler exports blocks [kc_self - m, kc_self) --
-        if m > 0:
+        # ---- migration: slot source s exports the m_s blocks right after
+        # its (clamped) locally-kept prefix; all slots share ONE fused
+        # masked-psum broadcast and helpers fold their partials into the
+        # layer's single psum (core/migration.py:fused_migration_delta).
+        if S > 0:
             kc_table = jnp.array(kcs, jnp.int32)
             kc_self = kc_table[bucket_self]
-            start = jnp.clip(kc_self - m, 0, nb - m)
-            mig_ids = lax.dynamic_slice_in_dim(pri_, start, m)
-
-            exp_up = _gather_cols_mat(w_up_, mig_ids, blk)
-            exp_down = resizing.gather_rows(w_down_, mig_ids, blk)
-            src = jnp.where(enabled, mig_src_, 0)
-
-            def bcast(v):
-                contrib = jnp.where(rank == src, v, jnp.zeros_like(v))
-                return lax.psum(contrib, axis)
-
-            b_up, b_down = bcast(exp_up), bcast(exp_down)
-            b_gate = bcast(_gather_cols_mat(w_gate_, mig_ids, blk)) \
-                if w_gate_ is not None else None
-
-            m_per = -(-m // max(e - 1, 1))
-            m_pad = m_per * max(e - 1, 1)
-            pad = m_pad - m
-            if pad:
-                b_up = jnp.pad(b_up, ((0, 0), (0, pad * blk)))
-                b_down = jnp.pad(b_down, ((0, pad * blk), (0, 0)))
-                if b_gate is not None:
-                    b_gate = jnp.pad(b_gate, ((0, 0), (0, pad * blk)))
-
-            rprime = (rank + e - src) % e
-            is_helper = jnp.logical_and(enabled, rprime > 0)
-            lo = (jnp.maximum(rprime, 1) - 1) * m_per * blk
-            sl_up = lax.dynamic_slice_in_dim(b_up, lo, m_per * blk, 1)
-            sl_down = lax.dynamic_slice_in_dim(b_down, lo, m_per * blk, 0)
-            h_mig = x2 @ sl_up
-            if b_gate is not None:
-                sl_gate = lax.dynamic_slice_in_dim(b_gate, lo, m_per * blk, 1)
-                h_mig = act_fn(x2 @ sl_gate) * h_mig
-            else:
-                h_mig = act_fn(h_mig)
-            # mask padded block lanes and non-helpers, then REDUCE-MERGE
-            col = jnp.arange(m_per * blk) + lo
-            lane_ok = (col < m * blk).astype(x2.dtype)
-            delta = (h_mig * (lane_ok * is_helper.astype(x2.dtype))[None, :]) @ sl_down
-            partial = partial + delta
+            exports = []
+            for s, m_s in enumerate(sheds):
+                # start from the CLAMPED keep count max(kc − m_s, 1): the
+                # local branch never keeps fewer than 1 block, so the
+                # migrated window must start after it to stay disjoint
+                # (no double compute even when kc − m_s < 1)
+                start = jnp.clip(jnp.maximum(kc_self - m_s, 1), 0, nb - m_s)
+                mig_ids = lax.dynamic_slice_in_dim(pri_, start, m_s)
+                exp_up = _gather_cols_mat(w_up_, mig_ids, blk)
+                exp_down = resizing.gather_rows(w_down_, mig_ids, blk)
+                exp_g = (_gather_cols_mat(w_gate_, mig_ids, blk)
+                         if w_gate_ is not None else None)
+                exports.append((exp_up, exp_down, exp_g))
+            partial = partial + fused_migration_delta(
+                x2, axis=axis, rank=rank, srcs=srcs, sheds=sheds, block=blk,
+                act_fn=act_fn, exports=exports)
 
         y = lax.psum(partial, axis)
         return y.reshape(*lead, w_down_.shape[1])
 
     args = (x, w_up, w_down) + ((w_gate,) if w_gate is not None else ()) + (
         ctx.bucket_by_rank, pri, ctx.mig_src)
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_spec, check_vma=False)(*args)
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_spec, check_vma=False)(*args)

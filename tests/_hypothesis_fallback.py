@@ -1,0 +1,109 @@
+"""Minimal stand-in for the `hypothesis` API surface this suite uses.
+
+Activated by conftest.py ONLY when the real hypothesis is not installed
+(e.g. a bare container without the `[test]` extra). Property tests then
+run a fixed number of deterministic seeded random examples — no shrinking,
+no example database, but the same assertions against the same strategies,
+so `pytest` stays runnable everywhere. CI installs the real thing via
+`pip install -e .[test]`.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def settings(max_examples: int = None, deadline=None, **_kw):  # noqa: D103
+    def deco(fn):
+        if max_examples is not None:
+            fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**kw_strategies):
+    """Kwargs-style @given: runs the test body over seeded random draws.
+
+    Works in either decorator order relative to @settings (the example
+    count is looked up at call time on both the wrapper and the wrapped
+    function, whichever @settings annotated).
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 20))
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                draw = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(*args, **draw, **kwargs)
+        # pytest must not see the strategy-filled params as fixtures: hide
+        # them from the (wraps-copied) signature and drop __wrapped__ so
+        # inspect does not tunnel back to the original function.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in kw_strategies])
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.is_hypothesis_test_fallback = True
+        return wrapper
+    return deco
+
+
+def assume(condition) -> bool:
+    """Real hypothesis aborts the example; here we just require truthiness
+    of draws to be handled by the strategies, so assume() is a no-op pass
+    for truthy and an explicit skip-signal (exception-free) for falsy —
+    tests in this suite don't use assume, this exists for safety only."""
+    return bool(condition)
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    all = classmethod(lambda cls: [cls.too_slow, cls.data_too_large])
+
+
+def install() -> types.ModuleType:
+    """Register this module as `hypothesis` (+ `.strategies`) in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = HealthCheck
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from"):
+        setattr(strat, name, globals()[name])
+    mod.strategies = strat
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat
+    return mod

@@ -1,0 +1,15 @@
+"""Shared pytest config.
+
+If `hypothesis` is missing (bare container, no `[test]` extra installed),
+swap in the deterministic fallback from tests/_hypothesis_fallback.py so
+the suite still collects and the property tests run seeded random
+examples. `pip install -e .[test]` (what CI does) gets the real engine.
+"""
+import importlib.util
+import os
+import sys
+
+if importlib.util.find_spec("hypothesis") is None:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_fallback
+    _hypothesis_fallback.install()

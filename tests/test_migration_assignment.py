@@ -1,0 +1,130 @@
+"""Edge cases of the migration helper-partition (single and multi source).
+
+Host-only: migration_assignment / multi_migration_assignment are pure
+index arithmetic (jnp on scalars), no mesh needed.
+"""
+import numpy as np
+import pytest
+
+from repro.core.migration import (migration_assignment,
+                                  multi_migration_assignment)
+
+
+def _cover_single(e, src, m_pad):
+    """Lanes of [0, m_pad) computed per rank under the single-source rule."""
+    cover = np.zeros(m_pad, np.int32)
+    for r in range(e):
+        lo, m_per, is_h = migration_assignment(r, src, e, m_pad)
+        if bool(is_h):
+            for b in range(int(lo), int(lo) + int(m_per)):
+                if b < m_pad:
+                    cover[b] += 1
+    return cover
+
+
+class TestSingleSource:
+    def test_e2_single_helper_takes_everything(self):
+        """e=2: the one helper owns the full padded export."""
+        for src in (0, 1):
+            helper = 1 - src
+            lo, m_per, is_h = migration_assignment(helper, src, 2, 4)
+            assert bool(is_h) and int(lo) == 0 and int(m_per) == 4
+            _, _, src_is_h = migration_assignment(src, src, 2, 4)
+            assert not bool(src_is_h)
+
+    def test_m_pad_not_divisible_by_helper_count(self):
+        """m_pad % (e-1) != 0: ceil partition still covers every block
+        exactly once (the surplus lanes fall off the padded end)."""
+        e, m_pad = 4, 5                      # 3 helpers, ceil -> 2 each
+        lo0, m_per, _ = migration_assignment((0 + 1) % e, 0, e, m_pad)
+        assert int(m_per) == 2
+        assert (_cover_single(e, 0, m_pad) == 1).all()
+
+    def test_straggler_is_rank0_renumbering(self):
+        """src=0: r' = r, helpers 1..e-1 take consecutive slices."""
+        e, m_pad = 4, 6
+        los = []
+        for r in range(e):
+            lo, m_per, is_h = migration_assignment(r, 0, e, m_pad)
+            if r == 0:
+                assert not bool(is_h)
+            else:
+                assert bool(is_h)
+                los.append(int(lo))
+        assert los == [0, 2, 4]
+        assert (_cover_single(e, 0, m_pad) == 1).all()
+
+    @pytest.mark.parametrize("e,src,m_pad", [
+        (2, 0, 3), (4, 3, 8), (8, 0, 7), (8, 5, 12), (8, 7, 1)])
+    def test_exact_cover_property(self, e, src, m_pad):
+        assert (_cover_single(e, src, m_pad) == 1).all()
+
+
+class TestMultiSource:
+    def test_single_slot_reduces_to_paper_renumbering(self):
+        """S=1 multi-source partition == the paper's r' rule, every rank."""
+        for e in (2, 4, 8):
+            for src in range(e):
+                for m in (1, 3, 2 * e):
+                    H = e - 1
+                    m_per_ref = -(-m // H) if H else m
+                    m_pad = m_per_ref * max(H, 1)
+                    for r in range(e):
+                        lo1, mp1, h1 = migration_assignment(r, src, e, m_pad)
+                        los, mps, helps = multi_migration_assignment(
+                            r, np.array([src]), e, [m])
+                        assert int(mps[0]) == int(mp1)
+                        assert bool(helps[0]) == bool(h1)
+                        if bool(h1):
+                            assert int(los[0]) == int(lo1)
+
+    def test_concurrent_sources_disjoint_exact_cover(self):
+        """3 simultaneous stragglers: each slot's shed blocks are computed
+        exactly once, never by a source rank."""
+        e, srcs, sheds = 8, np.array([1, 4, 6]), (5, 3, 1)
+        H = e - len(sheds)
+        for s, m_s in enumerate(sheds):
+            m_per = -(-m_s // H)
+            cover = np.zeros(m_s, np.int32)
+            for r in range(e):
+                los, mps, helps = multi_migration_assignment(r, srcs, e, sheds)
+                if bool(helps[s]):
+                    assert r not in set(srcs.tolist())
+                    for b in range(int(los[s]), int(los[s]) + int(mps[s])):
+                        if b < m_s:
+                            cover[b] += 1
+            assert (cover == 1).all(), (s, cover)
+
+    def test_idle_slots_free_surplus_helpers(self):
+        """Slots padded with -1: nobody helps them; real slots still get
+        full coverage from the first H helpers only."""
+        e, sheds = 8, (4, 2, 2)
+        srcs = np.array([2, -1, -1])
+        H = e - len(sheds)
+        helping = [r for r in range(e)
+                   if bool(multi_migration_assignment(r, srcs, e, sheds)[2][0])]
+        assert len(helping) == H and 2 not in helping
+        for s in (1, 2):                      # idle slots
+            for r in range(e):
+                assert not bool(
+                    multi_migration_assignment(r, srcs, e, sheds)[2][s])
+        cover = np.zeros(sheds[0], np.int32)
+        for r in helping:
+            los, mps, _ = multi_migration_assignment(r, srcs, e, sheds)
+            for b in range(int(los[0]), int(los[0]) + int(mps[0])):
+                if b < sheds[0]:
+                    cover[b] += 1
+        assert (cover == 1).all()
+
+    def test_e_minus_s_equals_one_single_helper(self):
+        """e=4 with 3 sources: the lone helper absorbs every slot."""
+        e, srcs, sheds = 4, np.array([0, 1, 3]), (2, 2, 1)
+        helper = 2
+        los, mps, helps = multi_migration_assignment(helper, srcs, e, sheds)
+        assert all(bool(h) for h in helps)
+        assert [int(lo) for lo in los] == [0, 0, 0]
+        assert [int(mp) for mp in mps] == list(sheds)
+        for r in (0, 1, 3):
+            assert not any(
+                bool(h) for h in
+                multi_migration_assignment(r, srcs, e, sheds)[2])

@@ -120,6 +120,7 @@ class TestMigrationPrimitives:
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import migration
+from repro.sharding import shard_map
 e, T, d, H, block = 8, 16, 32, 128, 4
 mesh = Mesh(np.array(jax.devices()).reshape(e), ("model",))
 rng = np.random.default_rng(0)
@@ -130,10 +131,10 @@ act = jax.nn.silu
 ids = jnp.array([0, 2, 3], jnp.int32)
 kw = dict(axis="model", mig_src=jnp.array(4, jnp.int32),
           mig_block_ids=ids, block=block, act_fn=act)
-f1 = jax.shard_map(lambda x,a,b: migration.migrated_pair_matmul(x,a,b,**kw),
+f1 = shard_map(lambda x,a,b: migration.migrated_pair_matmul(x,a,b,**kw),
     mesh=mesh, in_specs=(P(), P(None,"model"), P("model",None)),
     out_specs=P(), check_vma=False)
-f2 = jax.shard_map(lambda x,a,b: migration.scatter_gather_pair_matmul(x,a,b,**kw),
+f2 = shard_map(lambda x,a,b: migration.scatter_gather_pair_matmul(x,a,b,**kw),
     mesh=mesh, in_specs=(P(), P(None,"model"), P("model",None)),
     out_specs=P(), check_vma=False)
 y1, y2 = f1(x, w1, w2), f2(x, w1, w2)
