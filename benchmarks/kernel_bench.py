@@ -1,63 +1,230 @@
-"""Kernel-level benchmark: block-pruned matmul FLOP savings.
+"""Kernel-level benchmark sweep: the pruned Pallas family vs its dense
+equivalent, END TO END THROUGH THE GRADIENT (ISSUE 2 tentpole gate).
 
-Wall-clock on the XLA gather path (the CPU-executable realization of the
-kernel's dataflow; the Pallas kernel itself targets TPU and runs here in
-interpret mode for correctness only), plus analytic FLOP counts per γ.
+Sweep axes: keep-ratio × M × block. For each point we time forward and
+forward+backward of ``block_pruned_matmul`` (custom kernel VJP) and
+compare against the SAME kernel family run dense (keep = all blocks) —
+the apples-to-apples baseline at matched execution layer. On CPU the
+kernels run in interpret mode, which is uniformly slower than native XLA
+(recorded alongside as ``xla_dense`` context), so the gated quantity is
+the pruned/dense RATIO: algorithmically the pruned path must win at any
+keep-ratio ≤ 7/8, on TPU and CPU-interpret alike. A fused-FFN section
+times the one-pallas_call FFN pair the same way.
+
+The keep=1/2 fwd+bwd ratio is regression-gated against
+``benchmarks/kernel_threshold.json`` (CI smoke job): a kernel change that
+erodes the pruning advantage past the recorded threshold fails the run.
+
+Emits the stable schema {"name","config","metrics"} to
+experiments/bench/kernels.json and (full runs) BENCH_kernels.json.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, is_dry_run, save_bench_json
-from repro.core import resizing
+from benchmarks.common import ROOT, csv_row, is_dry_run, save_bench_json
+from repro.kernels import ops
+
+THRESHOLD_PATH = os.path.join(ROOT, "benchmarks", "kernel_threshold.json")
 
 
-def timeit(f, *args, n=20):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        f(*args).block_until_ready()
+def _timed_once(f, args, n):
+    r = f(*args)
+    (r[0] if isinstance(r, tuple) else r).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(n):
         r = f(*args)
-        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    (r[0] if isinstance(r, tuple) else r).block_until_ready()
     return (time.perf_counter() - t0) / n
 
 
-def main() -> list:
-    rows = []
-    if is_dry_run():
-        M, K, N, block, iters = 128, 512, 512, 128, 5
-    else:
-        M, K, N, block, iters = 512, 2048, 2048, 128, 20
-    rng = np.random.default_rng(0)
+def interleaved_min(cases, n=3, repeats=5):
+    """Min-of-repeats with INTERLEAVED sampling: every repeat sweeps all
+    cases back-to-back, so slow drift of the host (allocator growth,
+    thermal, background load) hits every case equally instead of
+    inflating whichever config happens to be measured last — the
+    pruned/dense ratios stay honest. ``cases``: {key: (fn, args)}.
+    Returns {key: best_seconds}."""
+    for f, args in cases.values():            # compile/warm everything first
+        r = f(*args)
+        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    best = {k: np.inf for k in cases}
+    for _ in range(repeats):
+        for k, (f, args) in cases.items():
+            best[k] = min(best[k], _timed_once(f, args, n))
+    return best
+
+
+def _bench_matmul_group(M, K, N, block, keep_ratios, iters, repeats):
+    """Interleaved fwd / fwd+bwd sweep over keep ratios (1.0 = dense
+    kernel baseline) for one (M, block) point. Returns
+    {ratio: {"fwd": s, "bwd": s, "kb": int, "nb": int}}."""
+    rng = np.random.default_rng(M + block)
     x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
     nb = K // block
 
-    dense = jax.jit(lambda x, w: x @ w)
-    t_dense = timeit(dense, x, w, n=iters)
-    rows.append(csv_row("kernel_dense_matmul", t_dense * 1e6,
-                        f"gflops={2 * M * K * N / t_dense / 1e9:.1f}"))
+    fwd = jax.jit(lambda x_, w_, k_: ops.block_pruned_matmul(
+        x_, w_, k_, block))
+    grad = jax.jit(jax.grad(lambda x_, w_, k_: jnp.sum(
+        ops.block_pruned_matmul(x_, w_, k_, block) ** 2), (0, 1)))
 
-    results = {"dense_us": t_dense * 1e6}
-    for gamma in (0.25, 0.5, 0.75):
-        kc = nb - int(gamma * nb)
-        keep = jnp.asarray(np.sort(rng.choice(nb, kc, replace=False)),
+    cases, kbs = {}, {}
+    for r in (1.0,) + tuple(keep_ratios):
+        kb = max(1, int(round(r * nb)))
+        keep = jnp.asarray(np.sort(rng.choice(nb, kb, replace=False)),
                            jnp.int32)
-        pruned = jax.jit(
-            lambda x, w, k: resizing.resized_matmul(x, w, k, block=block))
-        t = timeit(pruned, x, w, keep, n=iters)
-        speedup = t_dense / t
-        results[f"gamma{gamma}_us"] = t * 1e6
-        results[f"gamma{gamma}_speedup"] = speedup
-        rows.append(csv_row(f"kernel_pruned_matmul_gamma{gamma}", t * 1e6,
-                            f"speedup={speedup:.2f},ideal={1/(1-gamma):.2f}"))
-    save_bench_json("kernel_bench",
-                    {"M": M, "K": K, "N": N, "block": block, "iters": iters,
-                     "dry_run": is_dry_run()}, results)
+        kbs[r] = kb
+        cases[("fwd", r)] = (fwd, (x, w, keep))
+        cases[("bwd", r)] = (grad, (x, w, keep))
+    times = interleaved_min(cases, n=iters, repeats=repeats)
+    return {r: {"fwd": times[("fwd", r)], "bwd": times[("bwd", r)],
+                "kb": kbs[r], "nb": nb} for r in (1.0,) + tuple(keep_ratios)}
+
+
+def _bench_ffn_group(M, d, H, D2, block, iters, repeats):
+    rng = np.random.default_rng(H + block)
+    x = jnp.asarray(rng.standard_normal((M, d)), jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((d, H)) * 0.1, jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((H, D2)) * 0.1, jnp.float32)
+    nb = H // block
+    act = jax.nn.silu
+
+    fwd = jax.jit(lambda x_, u_, d_, k_: ops.fused_pruned_ffn(
+        x_, u_, d_, k_, None, act, block))
+    grad = jax.jit(jax.grad(lambda x_, u_, d_, k_: jnp.sum(
+        ops.fused_pruned_ffn(x_, u_, d_, k_, None, act, block) ** 2),
+        (0, 1, 2)))
+
+    cases, kbs = {}, {}
+    for r in (1.0, 0.5):
+        kb = max(1, int(round(r * nb)))
+        keep = jnp.asarray(np.sort(rng.choice(nb, kb, replace=False)),
+                           jnp.int32)
+        kbs[r] = kb
+        cases[("fwd", r)] = (fwd, (x, wu, wd, keep))
+        cases[("bwd", r)] = (grad, (x, wu, wd, keep))
+    times = interleaved_min(cases, n=iters, repeats=repeats)
+    return {r: {"fwd": times[("fwd", r)], "bwd": times[("bwd", r)],
+                "kb": kbs[r], "nb": nb} for r in (1.0, 0.5)}
+
+
+def timeit(f, *args, n=3, repeats=5):
+    """Min-of-repeats for standalone references (xla_dense)."""
+    return interleaved_min({"_": (f, args)}, n=n, repeats=repeats)["_"]
+
+
+def _xla_dense(M, K, N, iters):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    fwd = jax.jit(lambda x_, w_: x_ @ w_)
+    grad = jax.jit(jax.grad(lambda x_, w_: jnp.sum((x_ @ w_) ** 2), (0, 1)))
+    return timeit(fwd, x, w, n=iters), timeit(grad, x, w, n=iters)
+
+
+def main() -> list:
+    rows = []
+    dry = is_dry_run()
+    if dry:
+        # smoke shapes: deep enough in K that the grid-step savings (not
+        # fixed pallas_call overhead) dominate; keep=7/8 is only gated on
+        # the full run, where the signal is clean
+        Ms, blocks, K, N, iters = (64,), (32,), 512, 128, 2
+        ffn_shapes = (64, 64, 128, 64)          # M, d, H, D2
+        keep_ratios = (0.25, 0.5, 0.75)
+    else:
+        Ms, blocks, K, N, iters = (128, 256), (64, 128), 1024, 512, 4
+        ffn_shapes = (256, 256, 1024, 256)
+        keep_ratios = (0.25, 0.5, 0.75, 0.875)
+
+    repeats = 3 if dry else 6
+    sweep = []
+    gate_ratios = {}
+    for M in Ms:
+        for block in blocks:
+            g = _bench_matmul_group(M, K, N, block, keep_ratios, iters,
+                                    repeats)
+            d_fwd, d_bwd = g[1.0]["fwd"], g[1.0]["bwd"]
+            for r in (1.0,) + keep_ratios:
+                f, b = g[r]["fwd"], g[r]["bwd"]
+                sweep.append({"M": M, "K": K, "N": N, "block": block,
+                              "keep_ratio": r, "kb": g[r]["kb"],
+                              "nb": g[r]["nb"],
+                              "fwd_us": f * 1e6, "fwdbwd_us": b * 1e6,
+                              "ratio_fwd": f / d_fwd,
+                              "ratio_fwdbwd": b / d_bwd})
+                if r < 1.0:
+                    gate_ratios.setdefault(r, []).append(b / d_bwd)
+                    rows.append(csv_row(
+                        f"kernel_pruned_M{M}_b{block}_keep{r}", b * 1e6,
+                        f"ratio_fwdbwd={b/d_bwd:.2f},"
+                        f"ratio_fwd={f/d_fwd:.2f}"))
+
+    xla_f, xla_b = _xla_dense(max(Ms), K, N, iters)
+    rows.append(csv_row("kernel_xla_dense_ref", xla_b * 1e6,
+                        f"fwd_us={xla_f*1e6:.1f}"))
+
+    # fused FFN pair: pruned vs dense at the same (kernel) execution layer
+    Mf, d, H, D2 = ffn_shapes
+    gf = _bench_ffn_group(Mf, d, H, D2, blocks[-1], iters, repeats)
+    ffn = {}
+    for r in (0.5, 1.0):
+        b = gf[r]["bwd"]
+        ratio = b / gf[1.0]["bwd"]
+        ffn[f"keep{r}"] = {"fwd_us": gf[r]["fwd"] * 1e6, "fwdbwd_us": b * 1e6,
+                           "kb": gf[r]["kb"], "nb": gf[r]["nb"],
+                           "ratio_fwdbwd": ratio}
+        rows.append(csv_row(f"kernel_fused_ffn_keep{r}", b * 1e6,
+                            f"ratio_fwdbwd={ratio:.2f}"))
+
+    # ---- gates ----------------------------------------------------------
+    worst = {r: max(v) for r, v in gate_ratios.items()}
+    max_at_or_below_78 = max(worst.values())
+    gate_pass = max_at_or_below_78 < 1.0
+    threshold = None
+    if os.path.exists(THRESHOLD_PATH):
+        threshold = json.load(open(THRESHOLD_PATH))
+    reg_ratio = worst.get(0.5)
+    reg_max = (threshold or {}).get("ratio_fwdbwd_keep_half_max")
+    reg_pass = reg_max is None or reg_ratio <= reg_max
+
+    metrics = {
+        "sweep": sweep,
+        "ffn": ffn,
+        "xla_dense": {"fwd_us": xla_f * 1e6, "fwdbwd_us": xla_b * 1e6,
+                      "note": "native XLA context; interpret-mode kernels "
+                              "are gated on the pruned/dense ratio, not "
+                              "absolute CPU time"},
+        "gate": {"worst_ratio_by_keep": {str(k): v for k, v in worst.items()},
+                 "max_ratio_fwdbwd_at_or_below_7_8": max_at_or_below_78,
+                 "pruned_beats_dense": gate_pass,
+                 "regression_threshold": reg_max,
+                 "ratio_fwdbwd_keep_half": reg_ratio,
+                 "regression_pass": reg_pass},
+    }
+    config = {"Ms": list(Ms), "blocks": list(blocks), "K": K, "N": N,
+              "keep_ratios": list(keep_ratios), "iters": iters,
+              "ffn_shapes": list(ffn_shapes), "dry_run": dry,
+              "interpret": ops.interpret_mode()}
+    save_bench_json("kernels", config, metrics, trajectory=True)
+    rows.append(csv_row("kernel_gate", 0.0,
+                        f"max_ratio@<=7/8={max_at_or_below_78:.2f},"
+                        f"pass={gate_pass},regression_pass={reg_pass}"))
+    if not gate_pass:
+        raise RuntimeError(
+            f"pruned fwd+bwd not faster than dense kernel at keep<=7/8 "
+            f"(worst ratio {max_at_or_below_78:.3f})")
+    if not reg_pass:
+        raise RuntimeError(
+            f"keep=1/2 fwd+bwd ratio {reg_ratio:.3f} regressed past the "
+            f"recorded threshold {reg_max} ({THRESHOLD_PATH})")
     return rows
 
 

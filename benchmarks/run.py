@@ -32,11 +32,21 @@ JOBS = [
 ]
 
 
+# named job subsets for --suite (CI entry points)
+SUITES = {
+    "kernels": {"kernel"},
+    "migration": {"fig11", "tab1"},
+    "smoke": {key for key, _, _, smoke in JOBS if smoke},
+}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig56,fig9,tab1,fig10,fig11,"
                          "kernel,roofline")
+    ap.add_argument("--suite", default=None, choices=sorted(SUITES),
+                    help="named subset (CI): kernels | migration | smoke")
     ap.add_argument("--fast", action="store_true",
                     help="skip the slow real-training ACC benchmarks")
     ap.add_argument("--dry-run", action="store_true",
@@ -46,6 +56,8 @@ def main() -> None:
         os.environ["REPRO_BENCH_DRY"] = "1"
 
     only = set(args.only.split(",")) if args.only else None
+    if args.suite:
+        only = SUITES[args.suite] | (only or set())
 
     print("name,us_per_call,derived")
     failed = []
@@ -53,7 +65,8 @@ def main() -> None:
     for key, module, slow, smoke in JOBS:
         if only and key not in only:
             continue
-        if args.dry_run and not smoke:
+        if args.dry_run and not smoke and only is None:
+            # dry-run default = smoke subset; explicit --only/--suite wins
             continue
         if args.fast and slow:
             continue

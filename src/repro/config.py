@@ -247,6 +247,9 @@ class WorkloadControlConfig:
     migration_shed_cap: int = 0      # per-source shed-block cap (0 = uncapped)
     # controller
     tavg_refresh_threshold: float = 0.10   # passive T_avg refresh on >10% change
+    # execution: route controlled matmuls through the Pallas pruned-kernel
+    # family (fused FFN + kernel-level backward; interpret-mode off-TPU)
+    use_kernel: bool = False
 
 
 @dataclass(frozen=True)

@@ -154,10 +154,14 @@ def fused_migration_delta(x, *, axis, rank, srcs, sheds, block, act_fn,
         if exp_gate is not None:
             c_gate.append(jnp.where(sel, exp_gate, jnp.zeros_like(exp_gate)))
 
-    b_in = lax.psum(jnp.concatenate(c_in, axis=1), axis)
-    b_out = lax.psum(jnp.concatenate(c_out, axis=0), axis)
-    b_gate = (lax.psum(jnp.concatenate(c_gate, axis=1), axis)
-              if c_gate else None)
+    # ONE fused masked-psum broadcast for all slots AND all three weight
+    # groups (in/out/gate): psum over a tuple lets XLA emit a single
+    # grouped all-reduce instead of 2-3 back-to-back collectives
+    bufs = (jnp.concatenate(c_in, axis=1), jnp.concatenate(c_out, axis=0)) \
+        + ((jnp.concatenate(c_gate, axis=1),) if c_gate else ())
+    bufs = lax.psum(bufs, axis)
+    b_in, b_out = bufs[0], bufs[1]
+    b_gate = bufs[2] if c_gate else None
 
     sl_in, sl_out, sl_gate, gates = [], [], [], []
     off = 0

@@ -82,6 +82,29 @@ def resized_matmul(x: jax.Array, w: jax.Array, keep_idx: jax.Array,
     return xk @ wk
 
 
+def resized_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
+                keep_idx: jax.Array, act_fn, w_gate: Optional[jax.Array] = None,
+                *, block: int, use_kernel: bool = False) -> jax.Array:
+    """Pruned FFN pair y = act(x @ Wup[:, keep] [, · gate]) @ Wdown[keep, :].
+
+    The single entry point both the migration dataflow and the plain
+    resizing path use, so they share one kernel family: with
+    ``use_kernel`` the whole pair is ONE fused pallas_call (the resized
+    hidden activation never round-trips HBM, and the backward runs the
+    kernel-level dX/dW family); otherwise the XLA gather path.
+    """
+    if use_kernel:
+        from repro.kernels import ops  # local import: kernels are optional
+        return ops.fused_pruned_ffn(x, w_up, w_down, keep_idx, w_gate,
+                                    act_fn, block)
+    h = x @ gather_cols(w_up, keep_idx, block)
+    if w_gate is not None:
+        h = act_fn(x @ gather_cols(w_gate, keep_idx, block)) * h
+    else:
+        h = act_fn(h)
+    return h @ gather_rows(w_down, keep_idx, block)
+
+
 def switched_matmul(x: jax.Array, w: jax.Array, pri_list: jax.Array,
                     bucket_idx: jax.Array, *, buckets: Sequence[float],
                     block: int, use_kernel: bool = False) -> jax.Array:

@@ -1,7 +1,7 @@
-"""Block-pruned matmul Pallas TPU kernel — the compute hot-spot of
-ZERO-resizing (DESIGN.md §2).
+"""Block-pruned matmul Pallas TPU kernel family — the compute hot-spot of
+ZERO-resizing (DESIGN.md §2, DESIGN_KERNELS.md).
 
-y = x[:, keep-blocks] @ w[keep-blocks, :]
+Forward:   y = x[:, keep-blocks] @ w[keep-blocks, :]
 
 The K (contraction) grid iterates ONLY the kept blocks; the pruning index
 vector is scalar-prefetched (SMEM) and consumed by the BlockSpec index
@@ -9,11 +9,36 @@ maps, so the gather of pruned X columns / W rows happens during the
 HBM→VMEM tile streaming — the pruned copies are never materialized (the
 paper's "temporarily resize" without the temporary).
 
-Tiling: (tm × block) X-tiles and (block × tn) W-tiles with a float32
-VMEM accumulator; `block` is the pruning granularity (128 = MXU lane
-width). Default tm=256, tn=256: VMEM footprint per step is
-tm·block + block·tn + tm·tn floats ≈ 0.5 MiB, well under the ~16 MiB
-v5e VMEM budget, and every matmul dim is a multiple of 128.
+Backward (kernel-level, no XLA gather/scatter):
+
+    dX[:, b] = dy @ w[b, :]^T   if block b kept, else 0
+    dW[b, :] = x[:, b]^T @ dy   if block b kept, else 0
+
+Both backward kernels take the *inverse* permutation ``order`` =
+concat(keep_idx, pruned_idx) as a scalar-prefetch vector. The grid's
+block dimension runs over ALL nb blocks; slot k < kb streams tiles
+through ``order[k]`` index maps and accumulates real matmuls, while slot
+k >= kb only writes a zero tile at the pruned position ``order[k]`` —
+pruned dX/dW blocks are zeroed IN-KERNEL, never via a full-size
+zeros+scatter temporary, and the kept tiles land directly at their final
+offsets through the inverse BlockSpec index maps.
+
+Out-pruned family (for the fused-FFN dataflow): compact activations
+
+    yc = x @ w[:, keep-blocks]            (outpruned_matmul_2d)
+    dx = dyc @ w[:, keep-blocks]^T        (outpruned_matmul_dx_2d, dense out)
+    dW[:, b] = x^T @ dyc[:, slot(b)]      (outpruned_matmul_dw_2d, 0 if pruned)
+
+Fused FFN: y = act(x @ Wup[:, keep] [, · gate]) @ Wdown[keep, :] in ONE
+pallas_call — the (resized) hidden activation lives only in a VMEM
+scratch tile, never round-tripping through HBM.
+
+Tiling: (tm × block) X-tiles and (block × tn) W-tiles with float32
+VMEM accumulators; ``block`` is the pruning granularity (128 = MXU lane
+width). Default tm=256, tn=256: VMEM per step is tm·block + block·tn +
+tm·tn floats ≈ 0.5 MiB, well under the ~16 MiB v5e budget, and every
+matmul dim is a multiple of 128. See DESIGN_KERNELS.md for the budget
+math of the fused-FFN kernel (which holds full-width x/Wdown rows).
 """
 from __future__ import annotations
 
@@ -21,6 +46,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -29,7 +55,16 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
 
 
-def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, n_keep: int):
+def _params(*semantics):
+    return _CompilerParams(dimension_semantics=semantics)
+
+
+# ---------------------------------------------------------------------------
+# forward: y[M, N] = x[:, keep] @ w[keep, :]
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, n_keep: int):
     @pl.when(pl.program_id(2) == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -46,19 +81,24 @@ def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, n_keep: int):
 def block_pruned_matmul_2d(x: jax.Array, w: jax.Array, keep_idx: jax.Array,
                            *, block: int = 128, tm: int = 256, tn: int = 256,
                            interpret: bool = True) -> jax.Array:
-    """2-D core: x [M, K] @ w[K, N] over kept K-blocks. M % tm == 0,
-    N % tn == 0, K % block == 0 are required (the ops.py wrapper pads).
+    """2-D core: x [M, K] @ w [K, N] over kept K-blocks. M % tm == 0,
+    N % tn == 0, K % block == 0 are required (the ops.py wrapper pads and
+    validates with readable errors).
 
-    interpret=True executes the kernel body in Python on CPU (this
-    container has no TPU); on TPU pass interpret=False.
+    interpret=True executes the kernel body on CPU (containers without a
+    TPU); ops.py auto-detects the backend.
     """
     M, K = x.shape
     K2, N = w.shape
-    assert K == K2 and M % tm == 0 and N % tn == 0 and K % block == 0
+    if K != K2 or M % tm or N % tn or K % block:
+        raise ValueError(
+            f"block_pruned_matmul_2d: x {x.shape} @ w {w.shape} with "
+            f"block={block}, tm={tm}, tn={tn} — K must match and M/N/K must "
+            "be multiples of tm/tn/block (ops.py pads before calling)")
     kb = keep_idx.shape[0]
 
     grid = (M // tm, N // tn, kb)
-    kernel = functools.partial(_kernel, n_keep=kb)
+    kernel = functools.partial(_fwd_kernel, n_keep=kb)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -73,7 +113,483 @@ def block_pruned_matmul_2d(x: jax.Array, w: jax.Array, keep_idx: jax.Array,
         ),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         interpret=interpret,
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        compiler_params=_params("parallel", "parallel", "arbitrary"),
     )(keep_idx, x, w)
+
+
+# ---------------------------------------------------------------------------
+# backward dX: dX[M, K] = dy @ w[kept]^T at kept blocks, zeros elsewhere
+# ---------------------------------------------------------------------------
+
+
+def _flat_k(s, kb: int, inner: int):
+    """Slot id for the flattened backward grid: steps [0, kb·inner) sweep
+    the contraction for the kb kept slots; the (nb−kb) trailing steps are
+    single-visit zero-writes for the pruned slots."""
+    return jnp.where(s < kb * inner, s // inner, kb + (s - kb * inner))
+
+
+def _flat_inner(s, kb: int, inner: int):
+    return jnp.where(s < kb * inner, s % inner, 0)
+
+
+def _dx_kernel(order_ref, dy_ref, w_ref, o_ref, acc_ref,
+               *, nj: int, kb: int):
+    s = pl.program_id(1)
+    compute = s < kb * nj
+    j = _flat_inner(s, kb, nj)
+
+    @pl.when(jnp.logical_and(compute, j == 0))
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(compute)
+    def _mm():
+        # dy tile [tm, tn] × w tile [block, tn] contracted over N → [tm, block]
+        acc_ref[...] += lax.dot_general(
+            dy_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(compute, j == nj - 1))
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    @pl.when(jnp.logical_not(compute))
+    def _prune():
+        # pruned slot: ONE grid step writing the zero tile in-kernel
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("kb", "block", "tm", "tn",
+                                             "compact_out", "interpret"))
+def pruned_matmul_dx_2d(dy: jax.Array, w: jax.Array, order: jax.Array,
+                        *, kb: int, block: int = 128, tm: int = 256,
+                        tn: int = 256, compact_out: bool = False,
+                        interpret: bool = True) -> jax.Array:
+    """dX of the pruned matmul, written tile-by-tile through the inverse
+    index map ``order`` ([nb] = concat(keep_idx, pruned_idx) permutation;
+    ``kb`` is the static kept count, i.e. the keep-prefix length).
+
+    compact_out=False → full [M, K=nb·block] dX: the grid block-dim covers
+    all nb slots; pruned slots (k >= kb) emit a zero tile in-kernel at
+    position order[k] — no zeros+scatter temporary.
+    compact_out=True → compact [M, kb·block] dh for the fused-FFN backward:
+    the grid covers only the kb kept slots; output tile k lands at slot k
+    (``order`` then only needs its keep prefix to be valid).
+    """
+    M, N = dy.shape
+    K2, N2 = w.shape
+    nslots = kb if compact_out else order.shape[0]
+    if N != N2 or M % tm or N % tn or K2 % block:
+        raise ValueError(
+            f"pruned_matmul_dx_2d: dy {dy.shape} / w {w.shape} with "
+            f"block={block}, tm={tm}, tn={tn} — N must match and M/N/K must "
+            "be tile multiples (ops.py pads before calling)")
+    nj = N // tn
+    kernel = functools.partial(_dx_kernel, nj=nj, kb=kb)
+    # flattened block×contraction grid: kb·nj compute steps, then ONE
+    # zero-write step per pruned slot (nslots − kb of them)
+    grid = (M // tm, kb * nj + (nslots - kb))
+
+    def _k(s):
+        return _flat_k(s, kb, nj)
+
+    if compact_out:
+        out_map = pl.BlockSpec((tm, block), lambda i, s, od: (i, _k(s)))
+    else:
+        out_map = pl.BlockSpec((tm, block), lambda i, s, od: (i, od[_k(s)]))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tm, tn),
+                             lambda i, s, od: (i, _flat_inner(s, kb, nj))),
+                pl.BlockSpec((block, tn),
+                             lambda i, s, od: (od[_k(s)],
+                                               _flat_inner(s, kb, nj))),
+            ],
+            out_specs=out_map,
+            scratch_shapes=[pltpu.VMEM((tm, block), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, nslots * block), dy.dtype),
+        interpret=interpret,
+        compiler_params=_params("parallel", "arbitrary"),
+    )(order, dy, w)
+
+
+# ---------------------------------------------------------------------------
+# backward dW: dW[K, N] = x[:, kept]^T @ dy at kept row-blocks, zeros else
+# ---------------------------------------------------------------------------
+
+
+def _dw_kernel(order_ref, x_ref, dy_ref, o_ref, acc_ref,
+               *, nm: int, kb: int):
+    s = pl.program_id(1)
+    compute = s < kb * nm
+    m = _flat_inner(s, kb, nm)
+
+    @pl.when(jnp.logical_and(compute, m == 0))
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(compute)
+    def _mm():
+        # x tile [tm, block] × dy tile [tm, tn] contracted over M → [block, tn]
+        acc_ref[...] += lax.dot_general(
+            x_ref[...], dy_ref[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(compute, m == nm - 1))
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    @pl.when(jnp.logical_not(compute))
+    def _prune():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("kb", "block", "tm", "tn",
+                                             "x_compact", "interpret"))
+def pruned_matmul_dw_2d(x: jax.Array, dy: jax.Array, order: jax.Array,
+                        *, kb: int, block: int = 128, tm: int = 256,
+                        tn: int = 256, x_compact: bool = False,
+                        interpret: bool = True) -> jax.Array:
+    """dW [K, N] of the pruned matmul: kept row-block order[k] (k < kb)
+    receives x[:, order[k]]^T @ dy; pruned slots emit zero tiles in-kernel.
+
+    x_compact=True: x is the compact resized activation [M, kb·block] (the
+    fused-FFN hidden); kept slot k streams its k-th compact block instead
+    of gathering through order.
+    """
+    M, N = dy.shape
+    M2, Kx = x.shape
+    nb = order.shape[0]
+    if M != M2 or M % tm or N % tn or Kx % block:
+        raise ValueError(
+            f"pruned_matmul_dw_2d: x {x.shape} / dy {dy.shape} with "
+            f"block={block}, tm={tm}, tn={tn} — M must match and M/N/K must "
+            "be tile multiples (ops.py pads before calling)")
+    nm = M // tm
+    kernel = functools.partial(_dw_kernel, nm=nm, kb=kb)
+
+    def _k(s):
+        return _flat_k(s, kb, nm)
+
+    def _m(s):
+        return _flat_inner(s, kb, nm)
+
+    if x_compact:
+        x_map = pl.BlockSpec(
+            (tm, block), lambda j, s, od: (_m(s), jnp.minimum(_k(s), kb - 1)))
+    else:
+        x_map = pl.BlockSpec((tm, block), lambda j, s, od: (_m(s), od[_k(s)]))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            # flattened block×contraction grid: kb·nm compute steps plus one
+            # zero-write step per pruned slot
+            grid=(N // tn, kb * nm + (nb - kb)),
+            in_specs=[
+                x_map,
+                pl.BlockSpec((tm, tn), lambda j, s, od: (_m(s), j)),
+            ],
+            out_specs=pl.BlockSpec((block, tn),
+                                   lambda j, s, od: (od[_k(s)], j)),
+            scratch_shapes=[pltpu.VMEM((block, tn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb * block, N), dy.dtype),
+        interpret=interpret,
+        compiler_params=_params("parallel", "arbitrary"),
+    )(order, x, dy)
+
+
+# ---------------------------------------------------------------------------
+# out-pruned forward: yc[M, kb·block] = x @ w[:, keep-blocks] (compact)
+# ---------------------------------------------------------------------------
+
+
+def _op_kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, nt: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(t == nt - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tm", "tk", "interpret"))
+def outpruned_matmul_2d(x: jax.Array, w: jax.Array, keep_idx: jax.Array,
+                        *, block: int = 128, tm: int = 256, tk: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """Compact out-pruned matmul: yc[:, k-th block] = x @ w[:, keep_idx[k]].
+    Full contraction over K (tiled by tk); the gather of kept W column
+    blocks rides the index map — no gathered W copy."""
+    M, K = x.shape
+    K2, H = w.shape
+    if K != K2 or M % tm or K % tk or H % block:
+        raise ValueError(
+            f"outpruned_matmul_2d: x {x.shape} @ w {w.shape} with "
+            f"block={block}, tm={tm}, tk={tk} — K must match and M/K/H must "
+            "be tile multiples (ops.py pads before calling)")
+    kb = keep_idx.shape[0]
+    nt = K // tk
+    kernel = functools.partial(_op_kernel, nt=nt)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(M // tm, kb, nt),
+            in_specs=[
+                pl.BlockSpec((tm, tk), lambda i, k, t, idx: (i, t)),
+                pl.BlockSpec((tk, block), lambda i, k, t, idx: (t, idx[k])),
+            ],
+            out_specs=pl.BlockSpec((tm, block), lambda i, k, t, idx: (i, k)),
+            scratch_shapes=[pltpu.VMEM((tm, block), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, kb * block), x.dtype),
+        interpret=interpret,
+        compiler_params=_params("parallel", "arbitrary", "arbitrary"),
+    )(keep_idx, x, w)
+
+
+# ---------------------------------------------------------------------------
+# out-pruned backward dx: dx[M, K] = dyc @ w[:, keep]^T (dense output —
+# every K position receives contributions from the compact blocks)
+# ---------------------------------------------------------------------------
+
+
+def _op_dx_kernel(idx_ref, dyc_ref, w_ref, o_ref, acc_ref, *, kb: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # dyc tile [tm, block] × w tile [tk, block] contracted over block → [tm, tk]
+    acc_ref[...] += lax.dot_general(
+        dyc_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == kb - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tm", "tk", "interpret"))
+def outpruned_matmul_dx_2d(dyc: jax.Array, w: jax.Array, keep_idx: jax.Array,
+                           *, block: int = 128, tm: int = 256, tk: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """dx of the out-pruned matmul: dyc [M, kb·block] @ w[:, keep]^T →
+    [M, K]. The contraction runs over the compact kept blocks only."""
+    M, Kc = dyc.shape
+    K, H = w.shape
+    if Kc % block or M % tm or K % tk or H % block:
+        raise ValueError(
+            f"outpruned_matmul_dx_2d: dyc {dyc.shape} / w {w.shape} with "
+            f"block={block}, tm={tm}, tk={tk} — dims must be tile multiples "
+            "(ops.py pads before calling)")
+    kb = Kc // block
+    kernel = functools.partial(_op_dx_kernel, kb=kb)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(M // tm, K // tk, kb),
+            in_specs=[
+                pl.BlockSpec((tm, block), lambda i, t, k, idx: (i, k)),
+                pl.BlockSpec((tk, block), lambda i, t, k, idx: (t, idx[k])),
+            ],
+            out_specs=pl.BlockSpec((tm, tk), lambda i, t, k, idx: (i, t)),
+            scratch_shapes=[pltpu.VMEM((tm, tk), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, K), dyc.dtype),
+        interpret=interpret,
+        compiler_params=_params("parallel", "parallel", "arbitrary"),
+    )(keep_idx, dyc, w)
+
+
+# ---------------------------------------------------------------------------
+# out-pruned backward dW: dW[K, H]; kept col-block order[k] = x^T @ dyc[:, k]
+# ---------------------------------------------------------------------------
+
+
+def _op_dw_kernel(order_ref, x_ref, dyc_ref, o_ref, acc_ref,
+                  *, nm: int, kb: int):
+    s = pl.program_id(1)
+    compute = s < kb * nm
+    m = _flat_inner(s, kb, nm)
+
+    @pl.when(jnp.logical_and(compute, m == 0))
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(compute)
+    def _mm():
+        # x tile [tm, tk] × dyc tile [tm, block] contracted over M → [tk, block]
+        acc_ref[...] += lax.dot_general(
+            x_ref[...], dyc_ref[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(compute, m == nm - 1))
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    @pl.when(jnp.logical_not(compute))
+    def _prune():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("kb", "block", "tm", "tk",
+                                             "interpret"))
+def outpruned_matmul_dw_2d(x: jax.Array, dyc: jax.Array, order: jax.Array,
+                           *, kb: int, block: int = 128, tm: int = 256,
+                           tk: int = 128, interpret: bool = True) -> jax.Array:
+    """dW [K, H] of the out-pruned matmul: kept col-block order[k] (k < kb)
+    receives x^T @ dyc[:, k]; pruned slots emit zero tiles in-kernel."""
+    M, K = x.shape
+    M2, Kc = dyc.shape
+    nb = order.shape[0]
+    if M != M2 or M % tm or K % tk or Kc % block:
+        raise ValueError(
+            f"outpruned_matmul_dw_2d: x {x.shape} / dyc {dyc.shape} with "
+            f"block={block}, tm={tm}, tk={tk} — M must match and dims must "
+            "be tile multiples (ops.py pads before calling)")
+    nm = M // tm
+    kernel = functools.partial(_op_dw_kernel, nm=nm, kb=kb)
+
+    def _k(s):
+        return _flat_k(s, kb, nm)
+
+    def _m(s):
+        return _flat_inner(s, kb, nm)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            # flattened block×contraction grid (see _flat_k): pruned slots
+            # cost one zero-write step, not a full M sweep
+            grid=(K // tk, kb * nm + (nb - kb)),
+            in_specs=[
+                pl.BlockSpec((tm, tk), lambda t, s, od: (_m(s), t)),
+                pl.BlockSpec(
+                    (tm, block),
+                    lambda t, s, od: (_m(s), jnp.minimum(_k(s), kb - 1))),
+            ],
+            out_specs=pl.BlockSpec((tk, block),
+                                   lambda t, s, od: (t, od[_k(s)])),
+            scratch_shapes=[pltpu.VMEM((tk, block), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((K, nb * block), dyc.dtype),
+        interpret=interpret,
+        compiler_params=_params("parallel", "arbitrary"),
+    )(order, x, dyc)
+
+
+# ---------------------------------------------------------------------------
+# fused pruned FFN: y = act(x @ Wup[:, keep] [, · gate]) @ Wdown[keep, :]
+# ---------------------------------------------------------------------------
+
+
+def _ffn_kernel(idx_ref, x_ref, wup_ref, wdown_ref, o_ref, acc_ref,
+                *, act_fn, kb: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pre = jnp.dot(x_ref[...], wup_ref[...],
+                  preferred_element_type=jnp.float32)
+    h = act_fn(pre)
+    # hidden tile h [tm, block] never leaves VMEM: immediately contracted
+    # into the running [tm, d_out] accumulator (no HBM round-trip)
+    acc_ref[...] += jnp.dot(h.astype(wdown_ref.dtype), wdown_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == kb - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _ffn_kernel_gated(idx_ref, x_ref, wup_ref, wgate_ref, wdown_ref, o_ref,
+                      acc_ref, *, act_fn, kb: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pre = jnp.dot(x_ref[...], wup_ref[...],
+                  preferred_element_type=jnp.float32)
+    gate = jnp.dot(x_ref[...], wgate_ref[...],
+                   preferred_element_type=jnp.float32)
+    h = act_fn(gate) * pre
+    acc_ref[...] += jnp.dot(h.astype(wdown_ref.dtype), wdown_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == kb - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act_fn", "block", "tm",
+                                             "interpret"))
+def fused_ffn_2d(x: jax.Array, wup: jax.Array, wdown: jax.Array,
+                 keep_idx: jax.Array, wgate: jax.Array = None, *, act_fn,
+                 block: int = 128, tm: int = 256,
+                 interpret: bool = True) -> jax.Array:
+    """One-pallas_call pruned FFN forward.
+
+    x [M, K]; wup/wgate [K, H]; wdown [H, d_out]; keep_idx [kb] kept
+    H-block ids. Per grid step the kernel streams one kept (K × block)
+    Wup (and Wgate) slice plus the matching (block × d_out) Wdown slice,
+    computes the hidden tile in VMEM, applies the activation (· gate), and
+    folds it straight into the f32 [tm, d_out] accumulator — the resized
+    hidden activation never round-trips through HBM. VMEM budget:
+    tm·K + (1|2)·K·block + block·d_out + 2·tm·d_out floats
+    (see DESIGN_KERNELS.md).
+    """
+    M, K = x.shape
+    H = wup.shape[1]
+    H2, D2 = wdown.shape
+    if wup.shape[0] != K or H != H2 or M % tm or H % block:
+        raise ValueError(
+            f"fused_ffn_2d: x {x.shape}, wup {wup.shape}, wdown "
+            f"{wdown.shape} with block={block}, tm={tm} — contraction dims "
+            "must match and M/H must be tile multiples (ops.py pads)")
+    kb = keep_idx.shape[0]
+    gated = wgate is not None
+    x_spec = pl.BlockSpec((tm, K), lambda i, k, idx: (i, 0))
+    w_spec = pl.BlockSpec((K, block), lambda i, k, idx: (0, idx[k]))
+    down_spec = pl.BlockSpec((block, D2), lambda i, k, idx: (idx[k], 0))
+    if gated:
+        kernel = functools.partial(_ffn_kernel_gated, act_fn=act_fn, kb=kb)
+        in_specs = [x_spec, w_spec, w_spec, down_spec]
+        args = (keep_idx, x, wup, wgate, wdown)
+    else:
+        kernel = functools.partial(_ffn_kernel, act_fn=act_fn, kb=kb)
+        in_specs = [x_spec, w_spec, down_spec]
+        args = (keep_idx, x, wup, wdown)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(M // tm, kb),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((tm, D2), lambda i, k, idx: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((tm, D2), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, D2), x.dtype),
+        interpret=interpret,
+        compiler_params=_params("parallel", "arbitrary"),
+    )(*args)

@@ -53,6 +53,20 @@ def find_redundant_collectives(hlo_text: str, min_count: int = 2
     return [r for r in collective_histogram(body) if r[2] >= min_count]
 
 
+def op_histogram(hlo_text: str) -> Dict[str, int]:
+    """Opcode → count over the whole module (entry + nested computations).
+
+    The kernel-backward acceptance check reads this: the pruned-matmul
+    gradient path must stay free of ``gather``/``scatter`` (the XLA
+    zero-imputation path materializes both)."""
+    counts = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line.strip())
+        if m:
+            counts[m.group(2)] += 1
+    return dict(counts)
+
+
 def reshape_churn(hlo_text: str) -> Dict[str, int]:
     counts = collections.Counter()
     for line in hlo_text.splitlines():

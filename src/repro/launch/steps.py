@@ -148,7 +148,7 @@ def control_block_size(cfg: ModelConfig, static: PlanStatic) -> int:
 def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                      train: TrainConfig = TrainConfig(),
                      control_static: Optional[PlanStatic] = None,
-                     total_steps: int = 0):
+                     total_steps: int = 0, use_kernel: bool = False):
     """Returns (train_step, arg_sds, in_shardings, out_shardings)."""
     cfg = specs_lib.effective_model_cfg(cfg, shape)
     api = get_api(cfg)
@@ -182,7 +182,8 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 
     def train_step(params, opt_state, batch, plan=None):
         with sh.use_rules(rules):
-            ctx = (make_ctx(mesh, control_static, plan)
+            ctx = (make_ctx(mesh, control_static, plan,
+                            use_kernel=use_kernel)
                    if control_static is not None else None)
 
             def lf(p, b):
@@ -311,11 +312,13 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 
 def build_step_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                    train: TrainConfig = TrainConfig(),
-                   control_static: Optional[PlanStatic] = None):
+                   control_static: Optional[PlanStatic] = None,
+                   use_kernel: bool = False):
     """Dispatch on the shape kind: train_4k -> train_step;
     prefill_32k -> prefill; decode shapes -> serve_step."""
     if shape.kind == "train":
-        return build_train_step(cfg, shape, mesh, train, control_static)
+        return build_train_step(cfg, shape, mesh, train, control_static,
+                                use_kernel=use_kernel)
     if shape.kind == "prefill":
         return build_prefill_step(cfg, shape, mesh,
                                   jnp.dtype(train.param_dtype))

@@ -84,7 +84,8 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                  max_sources: int = 3,
                  eval_every: int = 0, quiet: bool = False,
                  force_gamma: Optional[float] = None,
-                 data_noise: float = 0.35) -> Dict:
+                 data_noise: float = 0.35,
+                 use_kernel: bool = False) -> Dict:
     """Returns a summary dict (loss/acc curves, modeled step times)."""
     cfg = smoke_variant(get_config(arch))
     api = get_api(cfg)
@@ -100,7 +101,7 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
         # legacy CLI contract: --mig-blocks 0 disables migration entirely;
         # otherwise it caps the per-source shed count
         max_migration_sources=max_sources if mig_blocks > 0 else 0,
-        migration_shed_cap=mig_blocks)
+        migration_shed_cap=mig_blocks, use_kernel=use_kernel)
     control_static = None
     if control_cfg.enabled:
         control_static = PlanStatic(
@@ -115,7 +116,8 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
         # signature set small and each one compiles at most once.
         def _build_step(static):
             fn_, _, in_sh_, out_sh_ = steps_lib.build_train_step(
-                cfg, shape, mesh, train_cfg, static, total_steps=steps)
+                cfg, shape, mesh, train_cfg, static, total_steps=steps,
+                use_kernel=control_cfg.use_kernel)
             jitted = jax.jit(fn_, in_shardings=in_sh_, out_shardings=out_sh_)
             n_slots = max(1, static.num_sources) if static is not None else 0
             return jitted, n_slots, in_sh_
@@ -345,6 +347,9 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route controlled matmuls through the Pallas "
+                         "pruned-kernel family (fused FFN + kernel bwd)")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args()
 
@@ -355,7 +360,7 @@ def main():
         ckpt_dir=args.ckpt_dir, resume=args.resume,
         imputation=args.imputation, selection=args.selection,
         mig_blocks=args.mig_blocks, max_sources=args.max_sources,
-        eval_every=args.eval_every)
+        eval_every=args.eval_every, use_kernel=args.use_kernel)
     print(f"final loss: {hist['final_loss']:.4f}  "
           f"mean modeled step: {hist['mean_modeled_step_s']*1e3:.2f} ms")
     if args.out:

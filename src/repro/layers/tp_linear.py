@@ -236,14 +236,17 @@ def controlled_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
 
             def branch(ops_):
                 x2_, wu, wg, wd, pri_b = ops_
+                if kc >= nb:
+                    # dense shortcut: keeping every block, the gather is an
+                    # identity copy — skip it (helpers/buckets at γ=0 run
+                    # the true dense pair)
+                    h = x2_ @ wu
+                    h = act_fn(x2_ @ wg) * h if wg is not None else act_fn(h)
+                    return h @ wd
                 keep = jnp.sort(pri_b[:kc])
-                wu_k = _gather_cols_mat(wu, keep, blk)
-                h = x2_ @ wu_k
-                if wg is not None:
-                    h = act_fn(x2_ @ _gather_cols_mat(wg, keep, blk)) * h
-                else:
-                    h = act_fn(h)
-                return h @ resizing.gather_rows(wd, keep, blk)
+                return resizing.resized_ffn(x2_, wu, wd, keep, act_fn, wg,
+                                            block=blk,
+                                            use_kernel=ctx.use_kernel)
             return branch
 
         kcs = [keep_blocks_for_bucket(g, nb) for g in st.buckets]

@@ -1,0 +1,188 @@
+"""Gradient correctness of the kernel-level backward against the XLA /
+ref.py oracle lineage, under awkward shapes (ISSUE 2 satellite):
+
+* M not a multiple of tm, N not a multiple of tn (padding paths)
+* keep-count 1 and keep-count = all blocks (degenerate grids)
+* bf16 inputs (f32 accumulation, bf16 outputs)
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import resizing
+from repro.kernels import ops
+
+
+def _mk(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32), dtype)
+
+
+def _assert_close(a, b, tol):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    scale = max(1.0, float(np.abs(b).max()))
+    np.testing.assert_allclose(a / scale, b / scale, atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# block_pruned_matmul VJP vs the XLA gather/scatter lineage
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,K,N,block,tm,tn,kb", [
+    (40, 128, 72, 32, 16, 32, 2),    # M % tm != 0, N % tn != 0
+    (16, 128, 32, 32, 16, 32, 1),    # keep-count 1
+    (24, 96, 48, 32, 16, 16, 3),     # keep-count = all blocks
+    (33, 160, 50, 32, 32, 32, 3),    # both dims ragged vs tiles
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pruned_matmul_grads_match_oracle(M, K, N, block, tm, tn, kb, dtype):
+    rng = np.random.default_rng(M * 7 + N)
+    x, w = _mk(rng, (M, K), dtype), _mk(rng, (K, N), dtype)
+    nb = K // block
+    keep = jnp.asarray(np.sort(rng.choice(nb, kb, replace=False)), jnp.int32)
+    cot = _mk(rng, (M, N), dtype)
+
+    def loss_k(x_, w_):
+        y = ops.block_pruned_matmul(x_, w_, keep, block, tm, tn)
+        return jnp.sum(y.astype(jnp.float32) * cot.astype(jnp.float32))
+
+    def loss_o(x_, w_):
+        y = resizing.resized_matmul(x_, w_, keep, block=block)
+        return jnp.sum(y.astype(jnp.float32) * cot.astype(jnp.float32))
+
+    gk = jax.grad(loss_k, (0, 1))(x, w)
+    go = jax.grad(loss_o, (0, 1))(x, w)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    _assert_close(gk[0], go[0], tol)
+    _assert_close(gk[1], go[1], tol)
+    # lineage: pruned blocks must carry exactly zero gradient
+    mask = np.asarray(resizing.keep_mask(keep, nb, block))
+    assert np.all(np.asarray(gk[0], np.float32)[:, ~mask] == 0)
+    assert np.all(np.asarray(gk[1], np.float32)[~mask, :] == 0)
+
+
+def test_pruned_matmul_grad_batched_leading_dims():
+    rng = np.random.default_rng(11)
+    x = _mk(rng, (2, 5, 128), jnp.float32)
+    w = _mk(rng, (128, 40), jnp.float32)
+    keep = jnp.asarray([0, 3], jnp.int32)
+
+    gk = jax.grad(lambda x_: jnp.sum(
+        ops.block_pruned_matmul(x_, w, keep, 32, 16, 32) ** 2))(x)
+    go = jax.grad(lambda x_: jnp.sum(
+        resizing.resized_matmul(x_, w, keep, block=32) ** 2))(x)
+    _assert_close(gk, go, 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused_pruned_ffn VJP vs the explicit gather composition
+# ---------------------------------------------------------------------------
+
+
+def _ffn_oracle(x, wu, wd, keep, act, wg=None, *, block):
+    return resizing.resized_ffn(x, wu, wd, keep, act, wg, block=block,
+                                use_kernel=False)
+
+
+@pytest.mark.parametrize("M,d,H,D2,block,kb", [
+    (10, 48, 128, 40, 32, 2),        # ragged M/D2 vs tiles
+    (8, 32, 64, 32, 32, 1),          # keep-count 1
+    (12, 32, 96, 24, 32, 3),         # keep-count = all blocks
+])
+@pytest.mark.parametrize("gated", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_ffn_grads_match_oracle(M, d, H, D2, block, kb, gated, dtype):
+    rng = np.random.default_rng(M + H + D2)
+    x = _mk(rng, (M, d), dtype)
+    wu = _mk(rng, (d, H), dtype) * 0.2
+    wd = _mk(rng, (H, D2), dtype) * 0.2
+    wg = _mk(rng, (d, H), dtype) * 0.2 if gated else None
+    nb = H // block
+    keep = jnp.asarray(np.sort(rng.choice(nb, kb, replace=False)), jnp.int32)
+    act = jax.nn.silu
+    cot = _mk(rng, (M, D2), dtype)
+
+    def loss_k(x_, wu_, wd_, wg_):
+        y = ops.fused_pruned_ffn(x_, wu_, wd_, keep, wg_, act, block, 16)
+        return jnp.sum(y.astype(jnp.float32) * cot.astype(jnp.float32))
+
+    def loss_o(x_, wu_, wd_, wg_):
+        y = _ffn_oracle(x_, wu_, wd_, keep, act, wg_, block=block)
+        return jnp.sum(y.astype(jnp.float32) * cot.astype(jnp.float32))
+
+    argnums = (0, 1, 2, 3) if gated else (0, 1, 2)
+    args = (x, wu, wd, wg) if gated else (x, wu, wd, None)
+    gk = jax.grad(loss_k, argnums)(*args)
+    go = jax.grad(loss_o, argnums)(*args)
+    tol = 2e-4 if dtype == jnp.float32 else 4e-2
+    for a, b in zip(gk, go):
+        _assert_close(a, b, tol)
+    # lineage: pruned H-blocks of dWup / dWdown carry exactly zero gradient
+    mask = np.asarray(resizing.keep_mask(keep, nb, block))
+    assert np.all(np.asarray(gk[1], np.float32)[:, ~mask] == 0)
+    assert np.all(np.asarray(gk[2], np.float32)[~mask, :] == 0)
+
+
+def test_fused_ffn_forward_matches_oracle_batched():
+    rng = np.random.default_rng(3)
+    x = _mk(rng, (2, 6, 32), jnp.float32)
+    wu = _mk(rng, (32, 64), jnp.float32) * 0.2
+    wd = _mk(rng, (64, 24), jnp.float32) * 0.2
+    keep = jnp.asarray([1], jnp.int32)
+    y = ops.fused_pruned_ffn(x, wu, wd, keep, None, jax.nn.gelu, 32, 16)
+    y_ref = _ffn_oracle(x, wu, wd, keep, jax.nn.gelu, block=32)
+    assert y.shape == (2, 6, 24)
+    _assert_close(y, y_ref, 1e-4)
+
+
+def test_grads_correct_for_unsorted_keep_idx():
+    """Regression: the backward's inverse order must keep keep_idx in
+    CALLER order — compact hidden slot k pairs with block keep_idx[k].
+    With a sorted-prefix order an unsorted keep_idx scrambled
+    dWup/dWdown across blocks while the forward stayed correct."""
+    rng = np.random.default_rng(42)
+    keep = jnp.asarray([3, 0, 2], jnp.int32)           # deliberately unsorted
+    x = _mk(rng, (10, 32), jnp.float32)
+    wu = _mk(rng, (32, 128), jnp.float32) * 0.2
+    wd = _mk(rng, (128, 24), jnp.float32) * 0.2
+
+    def loss_k(wu_, wd_):
+        return jnp.sum(ops.fused_pruned_ffn(
+            x, wu_, wd_, keep, None, jax.nn.silu, 32, 16) ** 2)
+
+    def loss_o(wu_, wd_):
+        return jnp.sum(_ffn_oracle(x, wu_, wd_, keep, jax.nn.silu,
+                                   block=32) ** 2)
+
+    gk = jax.grad(loss_k, (0, 1))(wu, wd)
+    go = jax.grad(loss_o, (0, 1))(wu, wd)
+    _assert_close(gk[0], go[0], 1e-4)
+    _assert_close(gk[1], go[1], 1e-4)
+
+    # plain pruned matmul too
+    w = _mk(rng, (96, 40), jnp.float32)
+    x2 = _mk(rng, (8, 96), jnp.float32)
+    keep2 = jnp.asarray([2, 0], jnp.int32)
+    gk2 = jax.grad(lambda x_, w_: jnp.sum(
+        ops.block_pruned_matmul(x_, w_, keep2, 32, 8, 16) ** 2), (0, 1))(x2, w)
+    go2 = jax.grad(lambda x_, w_: jnp.sum(
+        resizing.resized_matmul(x_, w_, keep2, block=32) ** 2), (0, 1))(x2, w)
+    _assert_close(gk2[0], go2[0], 1e-4)
+    _assert_close(gk2[1], go2[1], 1e-4)
+
+
+def test_validation_errors_are_actionable():
+    x = jnp.zeros((8, 100))      # K=100 not a multiple of block=32
+    w = jnp.zeros((100, 16))
+    keep = jnp.asarray([0], jnp.int32)
+    with pytest.raises(ValueError, match="not a multiple"):
+        ops.block_pruned_matmul(x, w, keep, 32, 8, 16)
+    x2, w2 = jnp.zeros((8, 64)), jnp.zeros((64, 16))
+    with pytest.raises(ValueError, match="blocks"):
+        ops.block_pruned_matmul(x2, w2, jnp.zeros((5,), jnp.int32), 32, 8, 16)
+    with pytest.raises(ValueError, match="integer"):
+        ops.block_pruned_matmul(x2, w2, jnp.zeros((1,)), 32, 8, 16)
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        ops.block_pruned_matmul(x2, jnp.zeros((32, 16)), keep, 32, 8, 16)

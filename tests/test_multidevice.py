@@ -94,6 +94,30 @@ assert np.allclose(y, ref_sm, atol=1e-4)
 print("ok")
 """)
 
+    def test_kernel_path_matches_xla_inside_shard_map(self):
+        """ISSUE 2: with use_kernel the controlled FFN runs the fused
+        pruned-FFN pallas_call (+ kernel-level backward) inside shard_map;
+        outputs and gradients must match the XLA gather path and the
+        masked oracle — resizing AND migration active together."""
+        run_py(PREAMBLE + """
+import dataclasses
+ctx_x = make_ctx(1, [0,0,0,1,0,0,0,0], 3)
+ctx_k = dataclasses.replace(ctx_x, use_kernel=True)
+y_x = controlled_ffn(x, wu, wd, ctx_x, "ffn", act, w_gate=wg)
+y_k = controlled_ffn(x, wu, wd, ctx_k, "ffn", act, w_gate=wg)
+assert np.allclose(y_k, y_x, atol=1e-4), np.abs(np.array(y_k)-np.array(y_x)).max()
+mask = np.ones(H//block, bool); mask[3*nb_loc+3] = False
+ref_sm = ((act(x @ wg) * (x @ wu)) * np.repeat(mask, block)) @ wd
+assert np.allclose(y_k, ref_sm, atol=1e-4)
+def loss(ctx, wu_, wd_, wg_):
+    return jnp.sum(controlled_ffn(x, wu_, wd_, ctx, "ffn", act, w_gate=wg_)**2)
+gk = jax.grad(lambda *a: loss(ctx_k, *a), (0, 1, 2))(wu, wd, wg)
+gx = jax.grad(lambda *a: loss(ctx_x, *a), (0, 1, 2))(wu, wd, wg)
+for a, b in zip(gk, gx):
+    assert np.allclose(a, b, atol=1e-3), np.abs(np.array(a)-np.array(b)).max()
+print("ok")
+""")
+
     def test_runtime_straggler_retarget_no_recompile(self):
         """Changing mig_src / buckets must hit the jit cache (plan arrays
         are runtime inputs — the controller retargets for free)."""
