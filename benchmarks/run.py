@@ -28,6 +28,7 @@ JOBS = [
     ("fig56", "benchmarks.homo_resizing", True, False),
     ("fig10", "benchmarks.single_straggler", True, False),
     ("fig11", "benchmarks.multi_straggler", False, True),
+    ("serve", "benchmarks.serve_bench", False, True),
     ("ablate", "benchmarks.ablations", True, False),
 ]
 
@@ -36,6 +37,7 @@ JOBS = [
 SUITES = {
     "kernels": {"kernel"},
     "migration": {"fig11", "tab1"},
+    "serve": {"serve"},
     "smoke": {key for key, _, _, smoke in JOBS if smoke},
 }
 

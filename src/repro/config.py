@@ -247,6 +247,12 @@ class WorkloadControlConfig:
     migration_shed_cap: int = 0      # per-source shed-block cap (0 = uncapped)
     # controller
     tavg_refresh_threshold: float = 0.10   # passive T_avg refresh on >10% change
+    # straggler-detection deadband: ranks within this relative margin of
+    # T_ref are NOT stragglers. ±5% multiplicative measurement noise gives
+    # a worst-case min-to-max spread of 1.05/0.95 ≈ 1.11, so 0.12 absorbs
+    # it — plans stop flip-flopping on noise while real stragglers
+    # (χ ≥ 2 in every paper scenario) sit far above the band.
+    straggler_threshold: float = 0.12
     # execution: route controlled matmuls through the Pallas pruned-kernel
     # family (fused FFN + kernel-level backward; interpret-mode off-TPU)
     use_kernel: bool = False

@@ -55,7 +55,18 @@ class CostFunctions:
     phi2_slope: float
 
     def phi1(self, n: float) -> float:
-        return self.phi1_base + self.phi1_slope * max(n, 0.0) if n > 0 else 0.0
+        """Broadcast cost of migrating n columns.
+
+        Φ1(0) = 0 exactly: migrating nothing launches no collective, so
+        the base (launch-latency) term applies only when n > 0. The
+        function is therefore INTENTIONALLY discontinuous at n = 0 by
+        ``phi1_base`` — Eq.(3) relies on this, pricing the first migrated
+        column at the full collective-launch cost (pinned by
+        tests/test_controller_properties.py).
+        """
+        if n <= 0:
+            return 0.0
+        return self.phi1_base + self.phi1_slope * n
 
 
 def pretest_cost_functions(model: IterationModel, L_total: int,
@@ -215,7 +226,11 @@ class SemiController:
         cfg = self.cfg
         t_ref = self._t_ref(times)
         m_i = self.model.matmul_time
-        stragglers = [i for i in range(e) if times[i] > t_ref * (1 + 1e-9)]
+        # deadband: a rank within straggler_threshold of T_ref is noise,
+        # not heterogeneity — reacting would flip plans on every jittered
+        # measurement (the scenario tests pin this stability).
+        band = max(cfg.straggler_threshold, 1e-9)
+        stragglers = [i for i in range(e) if times[i] > t_ref * (1 + band)]
 
         # M_i^j: the straggler's own matmul time this iteration scales with
         # its slowdown — a rank running χ× slow also prunes χ×-cheaper work,

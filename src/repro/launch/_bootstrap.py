@@ -1,0 +1,33 @@
+"""Pre-jax process bootstrap for CLI entry points.
+
+MUST stay importable before (and without) jax: the train/serve `__main__`
+blocks call :func:`ensure_host_devices` before their first jax import so
+the XLA host-device-count flag can still take effect.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def argv_int(flag: str, default: int = 1) -> int:
+    """Parse an int CLI flag from sys.argv, accepting both the
+    space-separated (``--tp 4``) and equals (``--tp=4``) forms."""
+    for i, a in enumerate(sys.argv):
+        try:
+            if a == flag:
+                return int(sys.argv[i + 1])
+            if a.startswith(flag + "="):
+                return int(a.split("=", 1)[1])
+        except (ValueError, IndexError):
+            return default
+    return default
+
+
+def ensure_host_devices(n: int) -> None:
+    """Request n XLA host devices if jax has not been initialized yet
+    (library users set XLA_FLAGS themselves)."""
+    if n > 1 and "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}")

@@ -14,6 +14,8 @@ from __future__ import annotations
 import functools
 from typing import Any, Dict, Optional, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -46,6 +48,38 @@ def make_ctx(mesh: Mesh, static: PlanStatic, plan: Dict[str, Any],
 #   "col": contraction replicated across TP -> global pri [nb]
 #   "row": contraction TP-sharded          -> per-rank pri [tp, nb]
 SCOPE_LAYOUT = {"qkv": "col", "attn_out": "row", "ffn": "row"}
+
+
+def per_rank_pri(global_pri, e: int, nb_loc: int):
+    """Split a GLOBAL keep-first block permutation into per-rank local
+    keep-first lists (rank r owns global blocks [r·nb_loc, (r+1)·nb_loc))."""
+    out = np.zeros((e, nb_loc), np.int32)
+    for r in range(e):
+        lo, hi = r * nb_loc, (r + 1) * nb_loc
+        mine = [g - lo for g in global_pri if lo <= g < hi]
+        out[r] = np.asarray(mine, np.int32)
+    return out
+
+
+def plan_pri_arrays(scopes: Dict[str, int], pri_lists: Dict[str, Any],
+                    tp: int) -> Dict[str, jax.Array]:
+    """Device pri arrays for a plan: the controller's keep-first
+    permutations where available (split per rank for row scopes),
+    identity order otherwise. Shared by the train and serve drivers so
+    priority selection cannot silently diverge between them."""
+    out = {}
+    for name, nb in scopes.items():
+        pri = pri_lists.get(name)
+        if SCOPE_LAYOUT.get(name, "row") == "col":
+            if pri is None or pri.shape[0] != nb:
+                pri = jnp.arange(nb, dtype=jnp.int32)
+            out[name] = jnp.asarray(pri)
+        else:
+            nb_total = nb * tp
+            if pri is None or pri.shape[0] != nb_total:
+                pri = np.arange(nb_total, dtype=np.int32)
+            out[name] = jnp.asarray(per_rank_pri(pri, tp, nb))
+    return out
 
 
 def plan_specs(static: PlanStatic, cfg: ModelConfig, mesh: Mesh,
@@ -276,8 +310,17 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 
 
 def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
-                     dtype=jnp.bfloat16):
-    """One-token decode against a seq_len KV cache."""
+                     dtype=jnp.bfloat16,
+                     control_static: Optional[PlanStatic] = None,
+                     use_kernel: bool = False):
+    """One-token decode against a seq_len KV cache.
+
+    With ``control_static`` the step takes an extra ``plan`` dict (same
+    layout as the train step's) and threads a ControlContext into the
+    model, so the controller can ZERO-resize the TP decode matmuls of a
+    contended rank at serve time without recompiling (signature-keyed
+    executables come from the engine's PlanCompileCache).
+    """
     cfg = specs_lib.effective_model_cfg(cfg, shape)
     api = get_api(cfg)
     rules = specs_lib.rules_for(shape, mesh, cfg)
@@ -289,6 +332,18 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     logits_sh = NamedSharding(mesh, sh.fit_spec_to_shape(
         logits_spec, (shape.global_batch, cfg.vocab_size or 1), mesh))
 
+    scopes = (control_scopes(cfg, control_static)
+              if control_static and cfg.encdec is None else {})
+    if control_static and scopes:
+        import dataclasses as _dc
+        control_static = _dc.replace(
+            control_static,
+            scope_blocks=scope_block_table(cfg, control_static))
+        pl_sds, pl_shards = plan_specs(control_static, cfg, mesh, scopes)
+    else:
+        control_static = None
+        pl_sds = pl_shards = None
+
     if cfg.encdec is not None:
         def serve_step(params, cache, tokens, cur_pos, encoder_out):
             with sh.use_rules(rules):
@@ -298,6 +353,17 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                 d_sds["encoder_out"])
         in_sh = (p_shards, d_shards["cache"], d_shards["tokens"],
                  d_shards["cur_pos"], d_shards["encoder_out"])
+    elif control_static is not None:
+        def serve_step(params, cache, tokens, cur_pos, plan):
+            with sh.use_rules(rules):
+                ctx = make_ctx(mesh, control_static, plan,
+                               use_kernel=use_kernel)
+                return api.decode_step(params, cfg, cache, tokens, cur_pos,
+                                       ctx=ctx)
+        args = (p_sds, d_sds["cache"], d_sds["tokens"], d_sds["cur_pos"],
+                pl_sds)
+        in_sh = (p_shards, d_shards["cache"], d_shards["tokens"],
+                 d_shards["cur_pos"], pl_shards)
     else:
         def serve_step(params, cache, tokens, cur_pos):
             with sh.use_rules(rules):
@@ -315,11 +381,16 @@ def build_step_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                    control_static: Optional[PlanStatic] = None,
                    use_kernel: bool = False):
     """Dispatch on the shape kind: train_4k -> train_step;
-    prefill_32k -> prefill; decode shapes -> serve_step."""
+    prefill_32k -> prefill; decode shapes -> serve_step (controlled when
+    ``control_static`` is given — decode is a control surface since the
+    serve engine). Prefill has no control hook (full-sequence forward is
+    not in the paper's per-iteration balancing loop)."""
     if shape.kind == "train":
         return build_train_step(cfg, shape, mesh, train, control_static,
                                 use_kernel=use_kernel)
     if shape.kind == "prefill":
         return build_prefill_step(cfg, shape, mesh,
                                   jnp.dtype(train.param_dtype))
-    return build_serve_step(cfg, shape, mesh, jnp.dtype(train.param_dtype))
+    return build_serve_step(cfg, shape, mesh, jnp.dtype(train.param_dtype),
+                            control_static=control_static,
+                            use_kernel=use_kernel)

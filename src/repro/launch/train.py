@@ -14,20 +14,10 @@ max over ranks (the real cluster behavior the technique removes).
 from __future__ import annotations
 
 # CLI nicety: when invoked as a script with --tp/--dp > 1, request that many
-# host devices BEFORE jax initializes (library users set XLA_FLAGS themselves).
-import os as _os
-import sys as _sys
+# host devices BEFORE jax initializes (shared jax-free helper).
+from repro.launch._bootstrap import argv_int as _argv_int, ensure_host_devices
 
-if "jax" not in _sys.modules:
-    def _argv_int(flag, default=1):
-        try:
-            return int(_sys.argv[_sys.argv.index(flag) + 1])
-        except (ValueError, IndexError):
-            return default
-    _n = _argv_int("--tp") * _argv_int("--dp")
-    if _n > 1:
-        _os.environ["XLA_FLAGS"] = (_os.environ.get("XLA_FLAGS", "")
-                                    + f" --xla_force_host_platform_device_count={_n}")
+ensure_host_devices(_argv_int("--tp") * _argv_int("--dp"))
 
 import argparse
 import dataclasses
@@ -56,15 +46,9 @@ from repro.optim import adamw
 from repro.sharding import use_mesh
 
 
-def per_rank_pri(global_pri: np.ndarray, e: int, nb_loc: int) -> np.ndarray:
-    """Split a GLOBAL keep-first block permutation into per-rank local
-    keep-first lists (rank r owns global blocks [r·nb_loc, (r+1)·nb_loc))."""
-    out = np.zeros((e, nb_loc), np.int32)
-    for r in range(e):
-        lo, hi = r * nb_loc, (r + 1) * nb_loc
-        mine = [g - lo for g in global_pri if lo <= g < hi]
-        out[r] = np.asarray(mine, np.int32)
-    return out
+# shared with the serve engine (steps.py) so train/serve plan assembly
+# cannot diverge; re-exported here for backwards compatibility
+per_rank_pri = steps_lib.per_rank_pri
 
 
 @dataclasses.dataclass
@@ -239,19 +223,8 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                     plan, report = controller.plan(times)
                 # per-scope priority lists: global keep-first permutations
                 # from the controller's stats, split per rank for row scopes
-                pri_all = {}
-                for name, nb in scopes.items():
-                    pri = plan.dynamic.pri_lists.get(name)
-                    layout = steps_lib.SCOPE_LAYOUT.get(name, "row")
-                    if layout == "col":
-                        if pri is None or pri.shape[0] != nb:
-                            pri = np.arange(nb, dtype=np.int32)
-                        pri_all[name] = jnp.asarray(pri)
-                    else:
-                        nb_total = nb * tp
-                        if pri is None or pri.shape[0] != nb_total:
-                            pri = np.arange(nb_total, dtype=np.int32)
-                        pri_all[name] = jnp.asarray(per_rank_pri(pri, tp, nb))
+                pri_all = steps_lib.plan_pri_arrays(
+                    scopes, plan.dynamic.pri_lists, tp)
                 # pick the executable for this plan's signature: migration
                 # shed counts are static, so multi-straggler replans swap
                 # between cached compiled steps instead of recompiling

@@ -143,11 +143,12 @@ def apply_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
 
     new_cache = None
     if cache is not None and S == 1:
-        # decode: write new K/V at cur_pos, attend over the cache
+        # decode: write new K/V at each row's OWN cur_pos (continuous
+        # batching runs slots at ragged positions), attend over the cache
         kc, vc = cache["k"], cache["v"]
-        idx = cur_pos[0]                               # uniform position
-        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), idx, axis=2)
-        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), idx, axis=2)
+        b_idx = jnp.arange(B)
+        kc = kc.at[b_idx, :, cur_pos, :].set(k[:, :, 0, :].astype(kc.dtype))
+        vc = vc.at[b_idx, :, cur_pos, :].set(v[:, :, 0, :].astype(vc.dtype))
         kc = shard(kc, ("batch", "kv_heads", "decode_seq", None), mesh=mesh)
         vc = shard(vc, ("batch", "kv_heads", "decode_seq", None), mesh=mesh)
         o = attn_lib.decode_attention(q, kc, vc, cur_pos=cur_pos, window=window)
@@ -212,11 +213,12 @@ def _apply_mla(p, x, cfg, *, ctx, positions, cache, cur_pos):
         prefill_cache = None
 
     if cache is not None:
-        idx = cur_pos[0]
-        lc = lax.dynamic_update_slice_in_dim(
-            cache["latent"], latent.astype(cache["latent"].dtype), idx, axis=1)
-        rc = lax.dynamic_update_slice_in_dim(
-            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx, axis=1)
+        # decode: per-row ragged write (see the GQA decode path above)
+        b_idx = jnp.arange(B)
+        lc = cache["latent"].at[b_idx, cur_pos, :].set(
+            latent[:, 0].astype(cache["latent"].dtype))
+        rc = cache["k_rope"].at[b_idx, cur_pos, :].set(
+            k_rope[:, 0].astype(cache["k_rope"].dtype))
         lc = shard(lc, ("batch", "decode_seq", None), mesh=mesh)
         rc = shard(rc, ("batch", "decode_seq", None), mesh=mesh)
         # absorbed decode: q_abs = W_uk^T q_nope per head

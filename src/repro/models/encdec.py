@@ -117,7 +117,10 @@ def decode_step(p: Params, cfg: ModelConfig, cache, tokens: jax.Array,
     mesh = ctx.mesh if ctx else None
     B = tokens.shape[0]
     x = jnp.take(p["embed"], tokens[:, None], axis=0)
-    x = x + sinusoid_positions(1, cfg.d_model, offset=cur_pos[0]).astype(x.dtype)[None]
+    # per-row position offset (continuous batching decodes slots at ragged
+    # positions): [B, 1] offset broadcasts through sinusoid_positions
+    pe = sinusoid_positions(1, cfg.d_model, offset=cur_pos[:, None])
+    x = x + pe.astype(x.dtype)[:, None, :]
     x = shard(x, ("batch", None, "embed"), mesh=mesh)
     x, new_cache, _ = blocks.apply_stack(
         p["decoder"], x, cfg, ctx=ctx, positions=cur_pos[:, None],

@@ -1,0 +1,123 @@
+"""End-to-end tests for the continuous-batching serve engine.
+
+The load-bearing claim: slot recycling is SEMANTICS-PRESERVING — a
+request decoded in a shared, recycled slot produces exactly the tokens it
+would produce running alone through the fixed-batch engine — and the
+jitted decode step never re-traces across arrivals/completions (fixed
+slot count ⇒ fixed shapes).
+"""
+import numpy as np
+import pytest
+
+from repro.launch.serve import (FixedBatchEngine, Request, ServeControlConfig,
+                                ServeEngine, latency_percentiles)
+
+
+def _mk_requests(vocab, specs, seed=0):
+    """specs: list of (prompt_len, gen_len, arrival_step)."""
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, vocab, (p,)).astype(np.int32),
+                    max_new_tokens=g, arrival_step=a)
+            for i, (p, g, a) in enumerate(specs)]
+
+
+def _assert_token_exact(arch, engine, completions):
+    base = FixedBatchEngine(arch, batch=1, max_len=engine.max_len, seed=0)
+    for c in completions:
+        seq = base.generate(c.prompt[None], len(c.tokens))
+        ref = seq[0, len(c.prompt):]
+        np.testing.assert_array_equal(
+            c.tokens, ref,
+            err_msg=f"request {c.uid} (slot {c.slot}) diverged from the "
+                    "single-request fixed-batch baseline")
+
+
+class TestServeEngine:
+    def test_staggered_arrivals_token_exact_and_no_retrace(self):
+        """3 requests with staggered arrivals and unequal lengths through
+        2 slots (forcing recycling): outputs are token-exact vs running
+        each request ALONE through the fixed-batch engine, and the jitted
+        step traced exactly once (jit cache size via the compile counter)."""
+        eng = ServeEngine("yi-6b", num_slots=2, max_len=16, seed=0)
+        reqs = _mk_requests(eng.cfg.vocab_size,
+                            [(5, 6, 0), (7, 4, 2), (4, 5, 6)])
+        comps = eng.run(reqs)
+        assert len(comps) == 3
+        assert [len(c.tokens) for c in comps] == [6, 4, 5]
+        # slot recycling actually happened (3 requests, 2 slots)
+        assert len({c.slot for c in comps}) == 2
+        _assert_token_exact("yi-6b", eng, comps)
+        tc = eng.trace_counts()
+        assert tc["plan_compiles"] == 1          # one executable total
+        assert tc["base_step_traces"] in (1, -1)  # -1: no counter API
+        # per-token latencies were collected for every emitted token
+        stats = latency_percentiles(comps)
+        assert stats["tokens"] == 15
+        assert stats["p50_ms"] > 0
+
+    def test_queue_admission_control(self):
+        """Bounded queue rejects overflow; FIFO order is preserved."""
+        eng = ServeEngine("yi-6b", num_slots=1, max_len=8, seed=0,
+                          max_queue=2)
+        reqs = _mk_requests(eng.cfg.vocab_size,
+                            [(3, 2, 0), (3, 2, 0), (3, 2, 0)])
+        assert eng.submit(reqs[0])
+        assert eng.submit(reqs[1])
+        assert not eng.submit(reqs[2])           # queue full -> rejected
+        while eng.queue or any(s is not None for s in eng.slots):
+            eng.step()
+        done = sorted(c.uid for c in eng.completions)
+        assert done == [0, 1]
+        # FIFO: request 0 finished before request 1 was admitted
+        c0, c1 = sorted(eng.completions, key=lambda c: c.uid)
+        assert c1.admitted_step >= c0.finished_step
+
+
+@pytest.mark.slow
+class TestServeEngineSlow:
+    @pytest.mark.parametrize("arch", ["falcon-mamba-7b", "mixtral-8x7b"])
+    def test_recycling_exact_recurrent_and_moe(self, arch):
+        """Slot recycling must also reset RECURRENT state (SSM h/conv) —
+        zeroed inside the step — and hold for MoE routing."""
+        eng = ServeEngine(arch, num_slots=2, max_len=12, seed=0)
+        reqs = _mk_requests(eng.cfg.vocab_size,
+                            [(4, 5, 0), (6, 3, 1), (3, 4, 5)], seed=1)
+        comps = eng.run(reqs)
+        assert len({c.slot for c in comps}) == 2
+        _assert_token_exact(arch, eng, comps)
+        assert eng.trace_counts()["base_step_traces"] in (1, -1)
+
+    def test_straggler_aware_decode_resizes_and_caches(self):
+        """Contended ranks (χ=4 contention schedule) trigger ZERO-resizing
+        of the decode matmuls: the controlled engine's modeled step times
+        beat dense under the SAME schedule, the plan compile cache builds
+        each signature once, and the controlled step still completes every
+        request."""
+        ctl = ServeControlConfig(mode="zero", hetero_kind="contention",
+                                 chi=4.0, contention_p=0.15, sim_ranks=8,
+                                 seed=3)
+        eng = ServeEngine("yi-6b", num_slots=2, max_len=16, seed=0,
+                          control=ctl)
+        reqs = _mk_requests(eng.cfg.vocab_size,
+                            [(5, 6, 0), (5, 6, 1), (5, 6, 4)], seed=2)
+        comps = eng.run(reqs)
+        assert len(comps) == 3
+        ctrl = sum(h["latency_s"] for h in eng.history)
+        dense = sum(h["dense_latency_s"] for h in eng.history)
+        assert ctrl < dense                      # resizing absorbed stragglers
+        assert any(h.get("max_bucket", 0) > 0 for h in eng.history)
+        tc = eng.trace_counts()
+        assert tc["plan_compiles"] <= 2          # zero mode: one signature
+        assert tc["plan_cache_hits"] >= len(eng.history) - tc["plan_compiles"]
+
+    def test_neutral_control_is_token_exact(self):
+        """With control enabled but NO straggler, every rank keeps its
+        full workload (bucket 0 dense branch) and the controlled step's
+        tokens match the uncontrolled baseline exactly."""
+        ctl = ServeControlConfig(mode="zero", hetero_kind="none")
+        eng = ServeEngine("yi-6b", num_slots=2, max_len=12, seed=0,
+                          control=ctl)
+        reqs = _mk_requests(eng.cfg.vocab_size, [(4, 4, 0), (5, 3, 2)])
+        comps = eng.run(reqs)
+        _assert_token_exact("yi-6b", eng, comps)
