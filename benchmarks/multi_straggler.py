@@ -31,6 +31,7 @@ import numpy as np
 from benchmarks.common import (OUT_DIR, PAPER_E, csv_row, is_dry_run,
                                paper_scale_model, run_subprocess_py,
                                save_bench_json)
+from repro.telemetry import StepSample, TraceWriter
 from repro.core.controller import (eq3_migration_prefix,
                                    pretest_cost_functions, work_fraction)
 from repro.core.workload import (DEFAULT_BUCKETS, PlanDynamic, PlanStatic,
@@ -196,6 +197,26 @@ def real_dataflow_check():
     return payload
 
 
+def emit_trace(table: dict) -> str:
+    """Record the λ-sweep's modeled per-rank times as a replayable
+    telemetry trace (one sample per λ, under that λ's plan)."""
+    m = paper_scale_model()
+    chi = np.ones(PAPER_E)
+    chi[: len(STRAGGLER_CHIS)] = STRAGGLER_CHIS
+    path = os.path.join(OUT_DIR, "traces", "multi_straggler.jsonl")
+    with TraceWriter(path, PAPER_E, matmul_time=m.matmul_time,
+                     other_time=m.other_time,
+                     meta={"bench": "fig11",
+                           "chis": list(STRAGGLER_CHIS)}) as w:
+        for lam in sorted(table):
+            plan, _ = plan_for_lambda(lam)
+            frac = work_fraction(plan, NUM_BLOCKS)
+            w.append(StepSample(step=lam, rank_times=m.times(chi, frac),
+                                plan_signature=plan.static.signature_str(),
+                                work_frac=frac))
+    return path
+
+
 def main() -> list:
     rows = []
     table = {}
@@ -242,11 +263,16 @@ def main() -> list:
                             f"max_err={v['max_err_vs_oracle']:.2e},"
                             f"lossless={v.get('pure_migration_lossless')}"))
 
+    trace_path = emit_trace(table)
+    rows.append(csv_row("fig11_trace", 0.0,
+                        f"trace={os.path.relpath(trace_path, OUT_DIR)}"))
+
     config = {"e": PAPER_E, "chis": list(STRAGGLER_CHIS),
               "num_blocks": NUM_BLOCKS, "lambdas": list(range(5)),
               "dry_run": is_dry_run()}
     metrics = {"sweep": table, "eq3_pick": x, "best_lambda": best_lam,
-               "real_dataflow": real}
+               "real_dataflow": real,
+               "trace": os.path.relpath(trace_path, OUT_DIR)}
     save_bench_json("multi_straggler", config, metrics, trajectory=True)
     return rows
 

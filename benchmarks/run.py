@@ -29,6 +29,7 @@ JOBS = [
     ("fig10", "benchmarks.single_straggler", True, False),
     ("fig11", "benchmarks.multi_straggler", False, True),
     ("serve", "benchmarks.serve_bench", False, True),
+    ("telemetry", "benchmarks.telemetry_bench", False, True),
     ("ablate", "benchmarks.ablations", True, False),
 ]
 
@@ -38,6 +39,7 @@ SUITES = {
     "kernels": {"kernel"},
     "migration": {"fig11", "tab1"},
     "serve": {"serve"},
+    "telemetry": {"telemetry"},
     "smoke": {key for key, _, _, smoke in JOBS if smoke},
 }
 
@@ -46,9 +48,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig56,fig9,tab1,fig10,fig11,"
-                         "kernel,roofline")
+                         "kernel,roofline,serve,telemetry")
     ap.add_argument("--suite", default=None, choices=sorted(SUITES),
-                    help="named subset (CI): kernels | migration | smoke")
+                    help="named subset (CI): kernels | migration | serve "
+                         "| telemetry | smoke")
     ap.add_argument("--fast", action="store_true",
                     help="skip the slow real-training ACC benchmarks")
     ap.add_argument("--dry-run", action="store_true",

@@ -24,9 +24,11 @@ analogue of the kernel-bench regression gate.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
-from benchmarks.common import csv_row, is_dry_run, save_bench_json
+from benchmarks.common import OUT_DIR, csv_row, is_dry_run, save_bench_json
 from repro.launch.serve import (Request, ServeControlConfig, ServeEngine,
                                 latency_percentiles)
 
@@ -51,14 +53,16 @@ def make_trace(vocab: int, n_requests: int, prompt_len: int, gen_len: int,
 
 
 def run_engine(mode: str, *, num_slots: int, max_len: int, trace_args,
-               use_kernel: bool = False, seed: int = 0):
+               use_kernel: bool = False, seed: int = 0,
+               trace_out: str = None):
     control = ServeControlConfig(
         mode=mode, hetero_kind="contention", chi=CHI,
         contention_p=CONTENTION_P, sim_ranks=SIM_RANKS,
-        use_kernel=use_kernel, seed=seed)
+        use_kernel=use_kernel, seed=seed, trace_out=trace_out)
     eng = ServeEngine(ARCH, num_slots=num_slots, max_len=max_len,
                       control=control, seed=seed)
     comps = eng.run(make_trace(eng.cfg.vocab_size, *trace_args))
+    eng.close()
     stats = latency_percentiles(comps, total_time_s=eng.clock)
     stats["steps"] = len(eng.history)
     stats["wall_us_per_step"] = float(
@@ -82,10 +86,15 @@ def main() -> list:
     rows = []
     results = {}
     for key, mode in (("dense", "off"), ("resized", "zero")):
+        # every bench run emits a replayable telemetry trace: a recorded
+        # contention episode is a deterministic regression scenario
+        trace_out = os.path.join(OUT_DIR, "traces", f"serve_{key}.jsonl")
         eng, comps, stats = run_engine(mode, num_slots=num_slots,
                                        max_len=max_len,
-                                       trace_args=trace_args)
+                                       trace_args=trace_args,
+                                       trace_out=trace_out)
         results[key] = stats
+        stats["trace_out"] = os.path.relpath(trace_out, OUT_DIR)
         rows.append(csv_row(
             f"serve_{key}", stats["p95_ms"] * 1e3,
             f"p50={stats['p50_ms']:.3f}ms,p95={stats['p95_ms']:.3f}ms,"

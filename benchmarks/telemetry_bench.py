@@ -1,0 +1,178 @@
+"""Telemetry suite: trace-replay smoke + closed-loop agreement + overhead.
+
+Three checks, all gated (the job FAILS on regression):
+
+* **closed-loop agreement** — the controller driven over the committed
+  bursty-contention fixture in measured mode (estimator reconstructions
+  of mitigated times) must produce the SAME plan-signature set and the
+  SAME number of compiled signatures as modeled mode (the χ-oracle), and
+  agree on >= 80% of per-step decisions (the remainder is the 1-2 step
+  estimation lag at burst edges).
+* **replay determinism** — replaying the fixture twice yields identical
+  decision streams (traces are regression scenarios, so replay must be
+  bit-stable).
+* **telemetry overhead** — the measured per-step host cost of the whole
+  telemetry path (simulated measurement + estimator update + trace
+  append) must stay under 2% of the dense baseline step at paper scale
+  (the deployment claim: closing the loop is free relative to a real
+  training step).
+
+Emits stable-schema ``telemetry.json`` (experiments/bench/).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import (ROOT, csv_row, is_dry_run, paper_scale_model,
+                               save_bench_json)
+from repro.config import WorkloadControlConfig
+from repro.core.controller import SemiController, decision_key, work_fraction
+from repro.core.hetero import IterationModel
+from repro.core.workload import PlanCompileCache
+from repro.telemetry import (EstimatorConfig, StepSample, StragglerEstimator,
+                             TraceReader, TraceWriter, schedule_from_trace)
+
+FIXTURE = os.path.join(ROOT, "examples", "traces", "bursty_contention.jsonl")
+NUM_BLOCKS = 64
+
+
+def drive(measured: bool, steps: int, trace_out: str = None):
+    """One closed control loop over the replayed fixture."""
+    reader = TraceReader(FIXTURE)
+    model = IterationModel(reader.matmul_time, reader.other_time)
+    sched = schedule_from_trace(FIXTURE)
+    e = reader.num_ranks
+    cfg = WorkloadControlConfig(enabled=True, mode="semi", block_size=8,
+                                max_migration_sources=3,
+                                times="measured" if measured else "modeled")
+    ctl = SemiController(cfg, e, model, num_blocks=NUM_BLOCKS, seed=0)
+    est = (StragglerEstimator(model, e, EstimatorConfig.from_control(cfg))
+           if measured else None)
+    cache = PlanCompileCache(lambda s: object())
+    writer = (TraceWriter(trace_out, e, matmul_time=model.matmul_time,
+                          other_time=model.other_time,
+                          meta={"bench": "telemetry", "measured": measured})
+              if trace_out else None)
+    keys, sigs = [], []
+    for t in range(steps):
+        chi = sched.chi(t)
+        if measured:
+            times = est.full_times() if est.ready else est.nominal_times()
+        else:
+            times = model.times(chi, np.ones(e))
+        plan, rep = ctl.plan(times)
+        cache.get(plan.static.signature())
+        frac = work_fraction(plan, NUM_BLOCKS)
+        meas = model.times(chi, frac)
+        if measured:
+            est.update(meas, frac)
+        if writer:
+            writer.append(StepSample(step=t, rank_times=meas,
+                                     plan_signature=plan.static.signature_str(),
+                                     work_frac=frac))
+        keys.append(decision_key(rep))
+        sigs.append(plan.static.signature_str())
+    if writer:
+        writer.close()
+    return keys, sigs, cache
+
+
+def overhead_us_per_step(steps: int = 200) -> float:
+    """Host cost of the full per-step telemetry path, min-of-repeats."""
+    reader = TraceReader(FIXTURE)
+    model = IterationModel(reader.matmul_time, reader.other_time)
+    e = reader.num_ranks
+    chi = np.ones(e)
+    chi[0] = 4.0
+    frac = np.ones(e)
+    best = float("inf")
+    with tempfile.TemporaryDirectory() as d:
+        for _ in range(3):
+            est = StragglerEstimator(model, e)
+            writer = TraceWriter(os.path.join(d, "t.jsonl"), e,
+                                 matmul_time=model.matmul_time,
+                                 other_time=model.other_time)
+            t0 = time.perf_counter()
+            for t in range(steps):
+                meas = model.times(chi, frac)
+                est.update(meas, frac)
+                writer.append(StepSample(step=t, rank_times=meas,
+                                         plan_signature="tp8b8shed[]",
+                                         work_frac=frac))
+            dt = time.perf_counter() - t0
+            writer.close()
+            best = min(best, dt / steps * 1e6)
+    return best
+
+
+def main() -> list:
+    dry = is_dry_run()
+    steps = 60 if dry else 200
+    rows = []
+
+    # -- closed-loop agreement: measured vs modeled plan decisions --------
+    out_dir = os.path.join(ROOT, "experiments", "bench", "traces")
+    km, sm, cm = drive(False, steps,
+                       trace_out=os.path.join(out_dir, "telemetry_modeled.jsonl"))
+    ke, se, ce = drive(True, steps,
+                       trace_out=os.path.join(out_dir, "telemetry_measured.jsonl"))
+    exact = sum(1 for a, b in zip(km, ke) if a == b)
+    agree_frac = exact / steps
+    rows.append(csv_row(
+        "telemetry_agreement", 0.0,
+        f"exact={exact}/{steps},sigs_modeled={len(set(sm))},"
+        f"sigs_measured={len(set(se))},compiles={cm.compile_count}/"
+        f"{ce.compile_count}"))
+    if set(se) != set(sm):
+        raise RuntimeError(
+            f"telemetry regression: measured-mode signature set {set(se)} "
+            f"!= modeled {set(sm)}")
+    if ce.compile_count != cm.compile_count:
+        raise RuntimeError(
+            f"telemetry regression: measured mode compiled "
+            f"{ce.compile_count} signatures, modeled {cm.compile_count} — "
+            "the closed loop must not cause extra recompiles")
+    if agree_frac < 0.8:
+        raise RuntimeError(
+            f"telemetry regression: measured-mode decisions agree with "
+            f"modeled on only {agree_frac:.0%} of steps (< 80%)")
+
+    # -- replay determinism ----------------------------------------------
+    ke2, se2, _ = drive(True, steps)
+    if ke2 != ke:
+        raise RuntimeError("telemetry regression: fixture replay is not "
+                           "deterministic")
+    rows.append(csv_row("telemetry_replay_deterministic", 0.0, "ok=True"))
+
+    # -- overhead vs the dense baseline step ------------------------------
+    oh_us = overhead_us_per_step(steps=60 if dry else 200)
+    dense_us = paper_scale_model().step_time(np.ones(8), np.ones(8)) * 1e6
+    ratio = oh_us / dense_us
+    rows.append(csv_row("telemetry_overhead", oh_us,
+                        f"dense_step_us={dense_us:.0f},ratio={ratio:.4f}"))
+    if ratio >= 0.02:
+        raise RuntimeError(
+            f"telemetry regression: per-step telemetry cost {oh_us:.0f}us "
+            f"is {ratio:.1%} of the dense baseline step ({dense_us:.0f}us) "
+            "— must stay under 2%")
+
+    config = {"fixture": os.path.relpath(FIXTURE, ROOT), "steps": steps,
+              "num_blocks": NUM_BLOCKS, "dry_run": dry}
+    metrics = {"exact_agreement": exact, "steps": steps,
+               "agreement_frac": agree_frac,
+               "signatures_modeled": sorted(set(sm)),
+               "signatures_measured": sorted(set(se)),
+               "compiles_modeled": cm.compile_count,
+               "compiles_measured": ce.compile_count,
+               "overhead_us_per_step": oh_us,
+               "dense_step_us": dense_us, "overhead_ratio": ratio}
+    save_bench_json("telemetry", config, metrics)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

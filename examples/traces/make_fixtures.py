@@ -1,0 +1,85 @@
+"""Regenerate the committed telemetry trace fixtures (deterministic).
+
+    PYTHONPATH=src python examples/traces/make_fixtures.py
+
+Three canonical heterogeneity episodes, recorded as DENSE runs (no plan
+active, work_frac = 1) of an 8-rank TP group with the reference model
+constants M = 10 ms, C = 1.5 ms and ±3% multiplicative measurement
+noise:
+
+* ``static_skew.jsonl``       — rank 0 χ=4 and rank 1 χ=2, 60 steps (a
+  permanently slower device pair, the paper's static heterogeneity).
+* ``round_robin.jsonl``       — a χ=4 straggler rotating over ranks
+  0..3 every 30 steps, 120 steps (Sec. V-B's dynamic schedule).
+* ``bursty_contention.jsonl`` — 200 steps; every 25 steps a burst of
+  contention hits 1-2 random ranks (χ=4) for 12 steps, then releases.
+  Bursts PERSIST across steps — unlike iid per-step contention — so a
+  closed measurement loop can lock on within its regime-change window
+  (the e2e telemetry tests replay this one).
+
+Every recorded contention episode is a deterministic regression
+scenario: replay with  ``--hetero trace --trace-in <fixture>``.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import numpy as np                                    # noqa: E402
+
+from repro.telemetry import StepSample, TraceWriter   # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RANKS = 8
+M, C = 0.010, 0.0015                 # reference IterationModel constants
+NOISE = 0.03
+
+
+def record(name: str, chi_rows: np.ndarray, meta: dict, seed: int) -> str:
+    rng = np.random.default_rng(np.random.SeedSequence((0xF1C, seed)))
+    path = os.path.join(HERE, f"{name}.jsonl")
+    with TraceWriter(path, RANKS, matmul_time=M, other_time=C,
+                     meta={"fixture": name, **meta}) as w:
+        for step, chi in enumerate(chi_rows):
+            t = (M * chi + C) * (1.0 + rng.uniform(-NOISE, NOISE, RANKS))
+            w.append(StepSample(step=step, rank_times=t,
+                                work_frac=np.ones(RANKS)))
+    return path
+
+
+def static_skew(steps: int = 60) -> np.ndarray:
+    chi = np.ones((steps, RANKS))
+    chi[:, 0] = 4.0
+    chi[:, 1] = 2.0
+    return chi
+
+
+def round_robin(steps: int = 120, period: int = 30) -> np.ndarray:
+    chi = np.ones((steps, RANKS))
+    for s in range(steps):
+        chi[s, (s // period) % 4] = 4.0
+    return chi
+
+
+def bursty_contention(steps: int = 200, every: int = 25,
+                      burst_len: int = 12) -> np.ndarray:
+    rng = np.random.default_rng(np.random.SeedSequence((0xF1C, 99)))
+    chi = np.ones((steps, RANKS))
+    for start in range(0, steps, every):
+        hit = rng.choice(RANKS, size=int(rng.integers(1, 3)), replace=False)
+        chi[start:start + burst_len, hit] = 4.0
+    return chi
+
+
+def main():
+    for seed, (name, rows, meta) in enumerate((
+            ("static_skew", static_skew(), {"chis": [4.0, 2.0]}),
+            ("round_robin", round_robin(), {"chi": 4.0, "period": 30}),
+            ("bursty_contention", bursty_contention(),
+             {"chi": 4.0, "burst_every": 25, "burst_len": 12}))):
+        path = record(name, rows, meta, seed)
+        print(f"wrote {path}: {len(rows)} steps x {RANKS} ranks")
+
+
+if __name__ == "__main__":
+    main()

@@ -256,6 +256,15 @@ class WorkloadControlConfig:
     # execution: route controlled matmuls through the Pallas pruned-kernel
     # family (fused FFN + kernel-level backward; interpret-mode off-TPU)
     use_kernel: bool = False
+    # telemetry / closed-loop measured mode (DESIGN_TELEMETRY.md):
+    # where the controller's per-rank times come from. "modeled" reads the
+    # χ-oracle straight from the simulated schedule; "measured" consumes
+    # StragglerEstimator reconstructions of measured (mitigated) times.
+    times: str = "modeled"           # modeled | measured
+    ewma_alpha: float = 0.4          # estimator EWMA weight (newest sample)
+    estimator_warmup: int = 3        # samples before the warmup gate opens
+    outlier_nmad: float = 4.0        # median/MAD spike-rejection threshold
+    measure_interval: int = 1        # steps between in-graph rank gathers
 
 
 @dataclass(frozen=True)

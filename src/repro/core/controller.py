@@ -354,6 +354,32 @@ class SemiController:
         return WorkloadPlan(static, dynamic), report
 
 
+def decision_key(report: ControllerReport) -> tuple:
+    """Hashable summary of WHAT the controller decided: the per-rank
+    resize buckets plus the (source, shed) migration set. Two plans with
+    the same key drive identical compiled branches."""
+    return (tuple(int(b) for b in report.bucket_by_rank),
+            tuple(sorted(zip(map(int, report.mig_srcs),
+                             map(int, report.mig_shed)))))
+
+
+def reports_agree(a: ControllerReport, b: ControllerReport,
+                  bucket_slack: int = 1) -> bool:
+    """Deadband-aware agreement between two controller decisions.
+
+    Used by the telemetry suite to compare measured-mode against
+    modeled-mode runs: the measured path sees EWMA-smoothed estimates, so
+    a γ sitting near a bucket boundary may land one bucket away from the
+    oracle's choice — that is measurement jitter inside the controller's
+    own ``straggler_threshold`` deadband (one bucket = 0.125 ≈ the 0.12
+    deadband), not a different decision. Migration source/shed sets must
+    match exactly (they change the compiled signature)."""
+    ka, kb = decision_key(a), decision_key(b)
+    if ka[1] != kb[1]:
+        return False
+    return all(abs(x - y) <= bucket_slack for x, y in zip(ka[0], kb[0]))
+
+
 def work_fraction(plan: WorkloadPlan, num_blocks: int) -> np.ndarray:
     """Retained matmul-work fraction per rank implied by a plan (for the
     iteration model / benchmarks). Handles concurrent multi-source

@@ -25,12 +25,15 @@ class HeteroSchedule:
     """χ_i(step) generator."""
 
     num_ranks: int
-    kind: str = "none"                 # none | static | round_robin | contention
+    kind: str = "none"       # none | static | round_robin | contention | trace
     chis: Sequence[float] = ()         # static per-rank χ, or χ values to rotate
     period: int = 100                  # steps between round-robin moves
     contention_p: float = 0.15         # P(rank is contended at a step)
     contention_chi: float = 4.0
     seed: int = 0
+    # kind="trace": per-step χ rows replayed from a recorded telemetry
+    # trace (telemetry.trace.schedule_from_trace); wraps past the end
+    trace_chis: "tuple[tuple[float, ...], ...]" = ()
 
     def chi(self, step: int) -> np.ndarray:
         x = np.ones((self.num_ranks,), np.float64)
@@ -46,9 +49,23 @@ class HeteroSchedule:
             x[(step // self.period) % self.num_ranks] = chi
             return x
         if self.kind == "contention":
-            rng = np.random.default_rng(self.seed + step)
+            # per-step stream derived from the (seed, step) PAIR: a plain
+            # seed+step sum aliases across schedules (seed=0/step=5 would
+            # replay seed=5/step=0 exactly — pinned by tests/test_telemetry)
+            rng = np.random.default_rng(np.random.SeedSequence(
+                (int(self.seed), int(step))))
             hit = rng.random(self.num_ranks) < self.contention_p
             x[hit] = self.contention_chi
+            return x
+        if self.kind == "trace":
+            if not self.trace_chis:
+                raise ValueError(
+                    "kind='trace' needs trace_chis — build the schedule "
+                    "via repro.telemetry.trace.schedule_from_trace")
+            row = np.asarray(self.trace_chis[step % len(self.trace_chis)],
+                             np.float64)
+            n = min(len(row), self.num_ranks)
+            x[:n] = row[:n]
             return x
         raise ValueError(f"unknown hetero kind {self.kind!r}")
 

@@ -141,6 +141,15 @@ class PlanStatic:
         """Alias of :meth:`canonical` — the hashable plan signature."""
         return self.canonical()
 
+    def signature_str(self) -> str:
+        """Compact string form of the canonical signature, used by the
+        telemetry traces (StepSample.plan_signature) and run histories.
+        Stable across processes — unlike hash() — so trace files can be
+        diffed and compared between runs."""
+        c = self.canonical()
+        shed = ",".join(str(m) for m in c.mig_shed)
+        return f"tp{c.tp_size}b{c.block_size}shed[{shed}]"
+
 
 @dataclasses.dataclass
 class PlanDynamic:

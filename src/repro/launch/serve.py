@@ -62,6 +62,9 @@ from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_small_mesh
 from repro.models import get_api
 from repro.sharding import use_mesh
+from repro.telemetry import (EstimatorConfig, RankTimer, StragglerEstimator,
+                             TraceWriter, capture_sample, measurement_rng,
+                             schedule_from_trace)
 
 
 # ---------------------------------------------------------------------------
@@ -125,7 +128,7 @@ class ServeControlConfig:
     """
 
     mode: str = "off"                  # off | zero | semi
-    hetero_kind: str = "none"          # none | static | round_robin | contention
+    hetero_kind: str = "none"    # none | static | round_robin | contention | trace
     chi: float = 4.0
     contention_p: float = 0.15
     period: int = 10
@@ -136,6 +139,12 @@ class ServeControlConfig:
     seed: int = 0
     peak_flops: float = 5e9            # latency-model calibration (host CPU)
     mfu: float = 1.0
+    # telemetry (DESIGN_TELEMETRY.md): controller input source, trace
+    # replay (hetero_kind="trace") and replayable trace capture
+    times: str = "modeled"             # modeled | measured
+    trace_in: Optional[str] = None
+    trace_out: Optional[str] = None
+    measure_noise: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -172,7 +181,7 @@ class ServeEngine:
             mode=c.mode if c.mode != "off" else "zero",
             block_size=c.block_size,
             max_migration_sources=c.max_sources if c.mode == "semi" else 0,
-            use_kernel=c.use_kernel)
+            use_kernel=c.use_kernel, times=c.times)
         self._wc = wc
         control_static = None
         if wc.enabled:
@@ -254,7 +263,13 @@ class ServeEngine:
         self.it_model = hetero_lib.iteration_model(
             self.cfg, ShapeConfig("serve_model", 1, num_slots, "decode"),
             max(self.sim_ranks, 1), peak_flops=c.peak_flops, mfu=c.mfu)
-        if c.hetero_kind != "none":
+        if c.hetero_kind == "trace":
+            if not c.trace_in:
+                raise ValueError("hetero_kind='trace' needs trace_in "
+                                 "(a telemetry trace to replay)")
+            self.schedule = schedule_from_trace(c.trace_in,
+                                                num_ranks=self.sim_ranks)
+        elif c.hetero_kind != "none":
             self.schedule = hetero_lib.HeteroSchedule(
                 num_ranks=self.sim_ranks, kind=c.hetero_kind,
                 chis=(c.chi,) if c.hetero_kind in ("static", "round_robin")
@@ -274,6 +289,24 @@ class ServeEngine:
             # order is the common case — build those arrays once
             self._identity_pri = steps_lib.plan_pri_arrays(self._scopes,
                                                            {}, tp)
+
+        # ---- telemetry: measurement -> estimation -> trace capture -------
+        # (sim_ranks scale: the measurement backend simulates what each
+        # TP rank of the modeled group would locally observe)
+        self._estimator = (StragglerEstimator(
+            self.it_model, self.sim_ranks, EstimatorConfig.from_control(wc))
+            if self.controller is not None and wc.times == "measured"
+            else None)
+        self._timer = RankTimer(mesh=self.mesh if tp > 1 else None,
+                                interval=wc.measure_interval)
+        self._trace_writer = (TraceWriter(
+            c.trace_out, self.sim_ranks,
+            matmul_time=self.it_model.matmul_time,
+            other_time=self.it_model.other_time,
+            meta={"arch": arch, "engine": "serve", "mode": c.mode,
+                  "hetero": c.hetero_kind, "seed": c.seed})
+            if c.trace_out else None)
+        self._measure_rng = measurement_rng(c.seed)
 
         # ---- host-side state ---------------------------------------------
         self.queue: collections.deque = collections.deque()
@@ -370,14 +403,24 @@ class ServeEngine:
                 pos[i] = s.pos
 
         # -- straggler model + plan selection -----------------------------
-        chis = (self.schedule.chi(self.step_count) if self.schedule
+        step_idx = self.step_count
+        chis = (self.schedule.chi(step_idx) if self.schedule
                 else np.ones((self.sim_ranks,)))
         dense_latency = self.it_model.step_time(chis, np.ones(self.sim_ranks))
         plan_report = None
+        plan = None
+        frac = np.ones(self.sim_ranks)
         if self.controller is not None:
             # full-workload-equivalent times (as in train.py): Eq.(1)
             # measures the heterogeneity degree, not the mitigated runtime
-            times = self.it_model.times(chis, np.ones(self.sim_ranks))
+            if self._estimator is not None:
+                # closed loop: reconstruction from measured (mitigated)
+                # times of previous decode steps; neutral until warmed up
+                times = (self._estimator.full_times()
+                         if self._estimator.ready
+                         else self._estimator.nominal_times())
+            else:
+                times = self.it_model.times(chis, np.ones(self.sim_ranks))
             plan, plan_report = self.controller.plan(times)
             step_fn, plan_arrays = self._plan_arrays(plan)
             frac = work_fraction(plan, self._sim_nb)
@@ -386,17 +429,31 @@ class ServeEngine:
             step_fn, plan_arrays = self._base_step, None
             latency = dense_latency
 
-        t0 = time.perf_counter()
+        self._timer.start()
         with use_mesh(self.mesh):
             args = (self.params, self.cache, jnp.asarray(tokens),
                     jnp.asarray(pos), jnp.asarray(clear))
             if plan_arrays is not None:
                 args = args + (plan_arrays,)
             tok_ids, self.cache = step_fn(*args)
+        wall = self._timer.stop(tok_ids)
         nxt = np.asarray(jax.device_get(tok_ids))
-        wall = time.perf_counter() - t0
         if self.schedule is None:
             latency = dense_latency = wall       # no simulation: real time
+
+        # -- telemetry: what each simulated rank measured THIS step -------
+        if self._estimator is not None or self._trace_writer is not None:
+            # the in-graph gather only applies when the measurement vector
+            # is rank-aligned with the real mesh (sim group == real tp)
+            sample = capture_sample(
+                self.it_model, chis, frac, step=step_idx, plan=plan,
+                wall=wall, rng=self._measure_rng,
+                noise=self.control.measure_noise,
+                timer=self._timer if self.sim_ranks == self.tp else None)
+            if self._estimator is not None:
+                self._estimator.observe(sample)
+            if self._trace_writer is not None:
+                self._trace_writer.append(sample)
 
         self.clock += latency
         self.step_count += 1
@@ -468,15 +525,24 @@ class ServeEngine:
             self.step()
         return sorted(self.completions, key=lambda c: c.uid)
 
+    def close(self) -> None:
+        """Flush/close the telemetry trace (safe to call repeatedly)."""
+        if self._trace_writer is not None:
+            self._trace_writer.close()
+
     # -- introspection (tests / benchmarks) ----------------------------------
     def trace_counts(self) -> Dict[str, int]:
         """Executable-build telemetry: plan signatures compiled vs reused,
         and the base jitted step's trace-cache size (1 = never re-traced
         across arrivals/completions/recycling)."""
-        return {"plan_compiles": self._step_cache.compile_count,
-                "plan_cache_hits": self._step_cache.hit_count,
-                "base_step_traces": self._base_step._cache_size()
-                if hasattr(self._base_step, "_cache_size") else -1}
+        out = {"plan_compiles": self._step_cache.compile_count,
+               "plan_cache_hits": self._step_cache.hit_count,
+               "base_step_traces": self._base_step._cache_size()
+               if hasattr(self._base_step, "_cache_size") else -1}
+        if self._estimator is not None:
+            out["estimator_updates"] = self._estimator.updates
+            out["estimator_rejected"] = self._estimator.rejected_total
+        return out
 
 
 def latency_percentiles(completions: List[Completion],
@@ -574,16 +640,26 @@ def main():
     ap.add_argument("--control", default="off",
                     choices=["off", "zero", "semi"])
     ap.add_argument("--hetero", default="none",
-                    choices=["none", "static", "round_robin", "contention"])
+                    choices=["none", "static", "round_robin", "contention",
+                             "trace"])
     ap.add_argument("--chi", type=float, default=4.0)
     ap.add_argument("--sim-ranks", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--times", default="modeled",
+                    choices=["modeled", "measured"],
+                    help="controller input: χ-oracle or the online "
+                         "StragglerEstimator over measured decode times")
+    ap.add_argument("--trace-in", default=None,
+                    help="telemetry trace to replay (with --hetero trace)")
+    ap.add_argument("--trace-out", default=None,
+                    help="record a replayable telemetry trace here (JSONL)")
     args = ap.parse_args()
 
     control = ServeControlConfig(
         mode=args.control, hetero_kind=args.hetero, chi=args.chi,
-        sim_ranks=args.sim_ranks, use_kernel=args.use_kernel)
+        sim_ranks=args.sim_ranks, use_kernel=args.use_kernel,
+        times=args.times, trace_in=args.trace_in, trace_out=args.trace_out)
     eng = ServeEngine(args.arch, num_slots=args.slots,
                       max_len=args.prompt_len + args.gen_len, tp=args.tp,
                       ckpt_dir=args.ckpt_dir, control=control)
@@ -596,6 +672,7 @@ def main():
             for i in range(args.requests)]
     t0 = time.time()
     comps = eng.run(reqs)
+    eng.close()
     wall = time.time() - t0
     stats = latency_percentiles(comps, total_time_s=eng.clock)
     for c in comps[:4]:

@@ -174,6 +174,30 @@ def control_block_size(cfg: ModelConfig, static: PlanStatic) -> int:
     return 0
 
 
+def build_rank_time_gather(mesh: Mesh, axis: str = "model"):
+    """Jitted all-gather of per-rank local clocks (telemetry measurement).
+
+    Input: [e] float32 sharded over ``axis`` — entry r is rank r's locally
+    measured segment time (on the single-host simulator the vector comes
+    from the simulated measurement backend; on a real cluster each rank
+    contributes its own slice). Output: the replicated [e] vector, so
+    EVERY host sees ALL TP ranks' times. Run once per control interval by
+    telemetry.RankTimer — not every iteration — per the paper's passive
+    T_avg refresh discipline (Sec. III-A).
+    """
+    e = mesh.shape[axis]
+
+    def local_gather(x):                      # x: [1] this rank's clock
+        return jax.lax.all_gather(x, axis, tiled=True)
+
+    gathered = sh.shard_map(local_gather, mesh=mesh, in_specs=P(axis),
+                            out_specs=P())
+    return jax.jit(gathered,
+                   in_shardings=NamedSharding(mesh, P(axis)),
+                   out_shardings=_replicated(mesh)) if e > 1 else \
+        jax.jit(lambda x: x)
+
+
 # ---------------------------------------------------------------------------
 # train step
 # ---------------------------------------------------------------------------

@@ -23,7 +23,6 @@ import argparse
 import dataclasses
 import json
 import os
-import time
 from typing import Dict, Optional
 
 import numpy as np
@@ -44,6 +43,9 @@ from repro.launch.mesh import make_small_mesh
 from repro.models import get_api
 from repro.optim import adamw
 from repro.sharding import use_mesh
+from repro.telemetry import (EstimatorConfig, RankTimer, StragglerEstimator,
+                             TraceWriter, capture_sample, measurement_rng,
+                             schedule_from_trace)
 
 
 # shared with the serve engine (steps.py) so train/serve plan assembly
@@ -69,7 +71,11 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                  eval_every: int = 0, quiet: bool = False,
                  force_gamma: Optional[float] = None,
                  data_noise: float = 0.35,
-                 use_kernel: bool = False) -> Dict:
+                 use_kernel: bool = False,
+                 times: str = "modeled",
+                 trace_in: Optional[str] = None,
+                 trace_out: Optional[str] = None,
+                 measure_noise: float = 0.0) -> Dict:
     """Returns a summary dict (loss/acc curves, modeled step times)."""
     cfg = smoke_variant(get_config(arch))
     api = get_api(cfg)
@@ -85,7 +91,7 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
         # legacy CLI contract: --mig-blocks 0 disables migration entirely;
         # otherwise it caps the per-source shed count
         max_migration_sources=max_sources if mig_blocks > 0 else 0,
-        migration_shed_cap=mig_blocks, use_kernel=use_kernel)
+        migration_shed_cap=mig_blocks, use_kernel=use_kernel, times=times)
     control_static = None
     if control_cfg.enabled:
         control_static = PlanStatic(
@@ -157,19 +163,44 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
             if control_static else {}
         it_model = hetero_lib.iteration_model(cfg, shape, max(tp, 1),
                                               peak_flops=5e9, mfu=1.0)
-        schedule = hetero_lib.HeteroSchedule(
-            num_ranks=tp, kind=hetero_kind,
-            chis=(chi,) if hetero_kind in ("static", "round_robin") else (),
-            period=hetero_period, contention_chi=chi, seed=seed)
+        if hetero_kind == "trace":
+            if not trace_in:
+                raise ValueError("--hetero trace needs --trace-in PATH "
+                                 "(a telemetry trace to replay)")
+            schedule = schedule_from_trace(trace_in, num_ranks=tp)
+        else:
+            schedule = hetero_lib.HeteroSchedule(
+                num_ranks=tp, kind=hetero_kind,
+                chis=(chi,) if hetero_kind in ("static", "round_robin") else (),
+                period=hetero_period, contention_chi=chi, seed=seed)
         controller = (SemiController(control_cfg, tp, it_model,
                                      list(scopes.values())[0] * tp
                                      if scopes else 1, seed=seed)
                       if control_cfg.enabled and scopes else None)
 
+        # -- telemetry: measurement -> estimation -> trace capture --------
+        # (DESIGN_TELEMETRY.md; the closed loop that replaces the χ-oracle)
+        measured_mode = (controller is not None
+                         and control_cfg.times == "measured")
+        estimator = (StragglerEstimator(it_model, tp,
+                                        EstimatorConfig.from_control(
+                                            control_cfg))
+                     if measured_mode else None)
+        timer = RankTimer(mesh=mesh if tp > 1 else None,
+                          interval=control_cfg.measure_interval)
+        writer = (TraceWriter(trace_out, tp,
+                              matmul_time=it_model.matmul_time,
+                              other_time=it_model.other_time,
+                              meta={"arch": arch, "hetero": hetero_kind,
+                                    "control": control_mode, "seed": seed})
+                  if trace_out else None)
+        measure_rng = measurement_rng(seed)
+
         nb_loc = list(scopes.values())[0] if scopes else 0
         work_frac = np.ones((tp,))
         history = {"loss": [], "acc": [], "modeled_step_s": [],
-                   "gammas": [], "mig": [], "mig_shed": []}
+                   "gammas": [], "mig": [], "mig_shed": [],
+                   "buckets": [], "signatures": [], "wall_s": []}
 
         def scope_stats():
             """Mean-over-layers weight matrices per controlled scope:
@@ -219,7 +250,15 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                     # stop looking slow and oscillate prune/unprune (the
                     # paper's Eq. 1 measures the heterogeneity degree, not
                     # the already-mitigated runtime)
-                    times = it_model.times(chis, np.ones(tp))
+                    if estimator is not None:
+                        # closed loop: the estimator's reconstruction from
+                        # MEASURED (mitigated) times of previous steps; the
+                        # warmup gate holds the plan neutral until the
+                        # estimate is trustworthy
+                        times = (estimator.full_times() if estimator.ready
+                                 else estimator.nominal_times())
+                    else:
+                        times = it_model.times(chis, np.ones(tp))
                     plan, report = controller.plan(times)
                 # per-scope priority lists: global keep-first permutations
                 # from the controller's stats, split per rank for row scopes
@@ -241,18 +280,35 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
 
             b = make_batch()
             b = {k: jnp.asarray(v) for k, v in b.items()}
-            t0 = time.time()
+            timer.start()
             if plan_arrays is not None:
                 params, opt, metrics = step_fn(params, opt, b, plan_arrays)
             else:
                 params, opt, metrics = step_fn(params, opt, b)
+            wall = timer.stop(metrics)
             metrics = jax.device_get(metrics)
-            wall = time.time() - t0
 
             # modeled bulk-synchronous step time (the paper's RT metric)
             modeled = it_model.step_time(chis, work_frac)
+
+            # -- measurement: what a real cluster would observe THIS step —
+            # per-rank times under the ACTIVE plan (mitigated), gathered
+            # across ranks once per control interval; feeds the estimator
+            # and the trace
+            if estimator is not None or writer is not None:
+                sample = capture_sample(
+                    it_model, chis, work_frac, step=it,
+                    plan=(plan if controller is not None else None),
+                    wall=wall, rng=measure_rng, noise=measure_noise,
+                    timer=timer)
+                if estimator is not None:
+                    estimator.observe(sample)
+                if writer is not None:
+                    writer.append(sample)
+
             history["loss"].append(float(metrics["loss"]))
             history["modeled_step_s"].append(modeled)
+            history["wall_s"].append(wall)
             if report is not None:
                 history["gammas"].append(
                     {int(k): float(v) for k, v in report.gammas.items()})
@@ -260,6 +316,9 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                 history["mig_shed"].append(
                     [list(map(int, report.mig_srcs)),
                      list(map(int, report.mig_shed))])
+                history["buckets"].append(
+                    [int(x) for x in report.bucket_by_rank])
+                history["signatures"].append(plan.static.signature_str())
 
             if controller is not None and (it + 1) % 10 == 0:
                 stats = scope_stats()
@@ -285,12 +344,21 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
 
         if ckpt_dir:
             ckpt_store.save(ckpt_dir, steps, params)
+        if writer is not None:
+            writer.close()
         history["final_loss"] = history["loss"][-1] if history["loss"] else None
         history["mean_modeled_step_s"] = float(
             np.mean(history["modeled_step_s"])) if history["modeled_step_s"] else 0
         # compile-cache telemetry: distinct plan signatures built vs reused
         history["plan_compiles"] = step_cache.compile_count
         history["plan_cache_hits"] = step_cache.hit_count
+        history["times_mode"] = control_cfg.times if control_cfg.enabled else "modeled"
+        if estimator is not None:
+            history["chi_hat"] = [float(c) for c in estimator.chi_hat]
+            history["estimator_rejected"] = estimator.rejected_total
+            history["rank_gathers"] = timer.gather_count
+        if writer is not None:
+            history["trace_out"] = trace_out
         return history
 
 
@@ -303,8 +371,20 @@ def main():
     ap.add_argument("--control", default="off",
                     choices=["off", "zero", "mig", "semi"])
     ap.add_argument("--hetero", default="none",
-                    choices=["none", "static", "round_robin", "contention"])
+                    choices=["none", "static", "round_robin", "contention",
+                             "trace"])
     ap.add_argument("--chi", type=float, default=2.0)
+    ap.add_argument("--times", default="modeled",
+                    choices=["modeled", "measured"],
+                    help="controller input: modeled χ-oracle, or measured "
+                         "times through the online StragglerEstimator "
+                         "(DESIGN_TELEMETRY.md)")
+    ap.add_argument("--trace-in", default=None,
+                    help="telemetry trace to replay (with --hetero trace)")
+    ap.add_argument("--trace-out", default=None,
+                    help="record a replayable telemetry trace here (JSONL)")
+    ap.add_argument("--measure-noise", type=float, default=0.0,
+                    help="multiplicative noise on simulated measurements")
     ap.add_argument("--mig-blocks", type=int, default=0,
                     help="per-source migration shed cap; 0 disables migration")
     ap.add_argument("--max-sources", type=int, default=3,
@@ -333,7 +413,9 @@ def main():
         ckpt_dir=args.ckpt_dir, resume=args.resume,
         imputation=args.imputation, selection=args.selection,
         mig_blocks=args.mig_blocks, max_sources=args.max_sources,
-        eval_every=args.eval_every, use_kernel=args.use_kernel)
+        eval_every=args.eval_every, use_kernel=args.use_kernel,
+        times=args.times, trace_in=args.trace_in, trace_out=args.trace_out,
+        measure_noise=args.measure_noise)
     print(f"final loss: {hist['final_loss']:.4f}  "
           f"mean modeled step: {hist['mean_modeled_step_s']*1e3:.2f} ms")
     if args.out:

@@ -1,0 +1,249 @@
+"""Unit tests for the telemetry subsystem (DESIGN_TELEMETRY.md).
+
+Covers the satellite checklist: the contention RNG de-aliasing with
+pinned trajectories, estimator behavior (EWMA convergence under ±5%
+multiplicative noise, single-spike rejection, regime-change re-lock,
+warmup gating, mitigation-blindness), and the trace write→read round
+trip including the schema-version check.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.hetero import HeteroSchedule, IterationModel
+from repro.telemetry import (EstimatorConfig, StepSample, StragglerEstimator,
+                             TraceFormatError, TraceReader, TraceWriter,
+                             schedule_from_trace)
+
+TRACES_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "..", "examples", "traces")
+
+
+# ---------------------------------------------------------------------------
+# HeteroSchedule contention RNG (satellite: SeedSequence de-aliasing)
+# ---------------------------------------------------------------------------
+
+
+class TestContentionRng:
+    def _hits(self, seed, steps, p=0.5):
+        s = HeteroSchedule(num_ranks=8, kind="contention", seed=seed,
+                           contention_p=p, contention_chi=4.0)
+        return np.stack([(s.chi(t) > 1).astype(int) for t in steps])
+
+    def test_seed_step_streams_do_not_alias(self):
+        """default_rng(seed + step) made (seed=0, step=5) replay
+        (seed=5, step=0) exactly; SeedSequence((seed, step)) keys the
+        stream on the PAIR, so shifted schedules diverge."""
+        a = self._hits(0, range(5, 37))
+        b = self._hits(5, range(0, 32))
+        assert not np.array_equal(a, b)
+        # and distinct seeds produce distinct trajectories at equal steps
+        assert not np.array_equal(self._hits(0, range(32)),
+                                  self._hits(1, range(32)))
+
+    def test_pinned_trajectories(self):
+        """The new per-step streams are part of the trace/replay contract:
+        pin them so an RNG change cannot silently invalidate committed
+        fixtures and benchmark trajectories."""
+        expect0 = np.array([[0, 1, 1, 1, 0, 0, 0, 0],
+                            [0, 0, 0, 0, 1, 1, 0, 1],
+                            [1, 1, 0, 1, 1, 1, 1, 1],
+                            [0, 0, 1, 1, 1, 0, 1, 0]])
+        expect5 = np.array([[0, 0, 0, 1, 1, 1, 1, 1],
+                            [0, 1, 0, 0, 0, 0, 1, 1],
+                            [1, 1, 0, 0, 1, 1, 1, 1],
+                            [0, 1, 0, 1, 1, 1, 0, 0]])
+        np.testing.assert_array_equal(self._hits(0, range(4)), expect0)
+        np.testing.assert_array_equal(self._hits(5, range(4)), expect5)
+
+    def test_determinism_per_step(self):
+        s = HeteroSchedule(num_ranks=8, kind="contention", seed=3)
+        np.testing.assert_array_equal(s.chi(7), s.chi(7))
+
+
+# ---------------------------------------------------------------------------
+# StragglerEstimator
+# ---------------------------------------------------------------------------
+
+
+MODEL = IterationModel(matmul_time=0.010, other_time=0.0015)
+
+
+def _feed(est, chi, frac, steps, noise=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        t = MODEL.times(np.asarray(chi), np.asarray(frac))
+        if noise:
+            t = t * (1.0 + rng.uniform(-noise, noise, len(chi)))
+        est.update(t, np.asarray(frac))
+
+
+class TestEstimator:
+    def test_ewma_converges_under_noise(self):
+        """±5% multiplicative noise on the measured times: χ̂ converges to
+        the true χ within a few percent and stays there."""
+        est = StragglerEstimator(MODEL, 4)
+        chi = [4.0, 2.0, 1.0, 1.0]
+        _feed(est, chi, [0.25, 0.5, 1.0, 1.0], steps=80, noise=0.05)
+        np.testing.assert_allclose(est.chi_hat, chi, rtol=0.05)
+        # full-workload-equivalent reconstruction matches the oracle
+        np.testing.assert_allclose(est.full_times(),
+                                   MODEL.times(np.asarray(chi), np.ones(4)),
+                                   rtol=0.05)
+
+    def test_not_fooled_by_mitigation(self):
+        """The closed-loop property: a rank the plan already pruned to
+        1/8 of its workload still reports its FULL χ — the estimator
+        divides the mitigation back out, so the controller keeps seeing
+        the heterogeneity degree (paper Eq. 1), not the mitigated time."""
+        est = StragglerEstimator(MODEL, 2)
+        _feed(est, [4.0, 1.0], [0.125, 1.0], steps=20)
+        # measured time of the pruned straggler is BELOW the helper's ...
+        t_mitigated = MODEL.times(np.array([4.0, 1.0]), np.array([0.125, 1.0]))
+        assert t_mitigated[0] < t_mitigated[1]
+        # ... yet the reconstruction still ranks it 4x slower
+        np.testing.assert_allclose(est.chi_hat, [4.0, 1.0], rtol=1e-6)
+
+    def test_single_spike_rejected(self):
+        """One spiked sample (GC pause / page fault) is dropped by the
+        median/MAD gate: χ̂ of the spiked rank does not move."""
+        est = StragglerEstimator(MODEL, 4)
+        chi = [2.0, 1.0, 1.0, 1.0]
+        frac = [0.5, 1.0, 1.0, 1.0]
+        _feed(est, chi, frac, steps=30, noise=0.03)
+        before = est.chi_hat.copy()
+        spiked = MODEL.times(np.asarray(chi), np.asarray(frac))
+        spiked[0] *= 10.0
+        est.update(spiked, np.asarray(frac))
+        assert est.chi_hat[0] == pytest.approx(before[0])
+        assert est.rejected_total >= 1
+        # the stream recovers: the next clean sample is accepted again
+        rej = est.rejected_total
+        _feed(est, chi, frac, steps=1)
+        assert est.rejected_total == rej
+        np.testing.assert_allclose(est.chi_hat, chi, rtol=0.05)
+
+    def test_regime_change_relocks(self):
+        """`regime_steps` consecutive out-of-band samples are a burst
+        start, not noise: the window flushes and χ̂ re-locks immediately."""
+        cfg = EstimatorConfig(regime_steps=2)
+        est = StragglerEstimator(MODEL, 2, cfg)
+        _feed(est, [1.0, 1.0], [1.0, 1.0], steps=20, noise=0.03)
+        assert est.chi_hat[0] == pytest.approx(1.0, rel=0.03)
+        _feed(est, [4.0, 1.0], [1.0, 1.0], steps=cfg.regime_steps)
+        assert est.relocks == 1
+        assert est.chi_hat[0] == pytest.approx(4.0, rel=1e-6)
+        # hold the burst long enough for the flushed window to mature
+        # (shorter than warmup_steps and the MAD gate cannot re-arm),
+        # then release: the estimator re-locks back to χ=1
+        _feed(est, [4.0, 1.0], [1.0, 1.0], steps=cfg.warmup_steps + 2)
+        _feed(est, [1.0, 1.0], [1.0, 1.0], steps=cfg.regime_steps)
+        assert est.relocks == 2
+        assert est.chi_hat[0] == pytest.approx(1.0, rel=1e-6)
+
+    def test_warmup_gate(self):
+        cfg = EstimatorConfig(warmup_steps=5)
+        est = StragglerEstimator(MODEL, 2, cfg)
+        for k in range(cfg.warmup_steps):
+            assert not est.ready
+            est.update(MODEL.times(np.array([2.0, 1.0]), np.ones(2)))
+        assert est.ready
+        # nominal_times (the warmup fallback) is homogeneous -> the
+        # controller's deadband keeps the plan neutral
+        nom = est.nominal_times()
+        assert np.all(nom == nom[0])
+
+
+# ---------------------------------------------------------------------------
+# Trace write -> read round trip + replay
+# ---------------------------------------------------------------------------
+
+
+class TestTraceRoundTrip:
+    def _write(self, path, n=6):
+        frac = np.array([0.25, 1.0, 1.0, 1.0])
+        with TraceWriter(path, 4, matmul_time=MODEL.matmul_time,
+                         other_time=MODEL.other_time,
+                         meta={"fixture": "unit"}) as w:
+            for t in range(n):
+                w.append(StepSample(
+                    step=t,
+                    rank_times=MODEL.times(np.array([4.0, 1.0, 1.0, 1.0]),
+                                           frac),
+                    plan_signature="tp4b8shed[]", work_frac=frac,
+                    wall_s=0.001 * t))
+        return frac
+
+    def test_round_trip(self, tmp_path):
+        p = str(tmp_path / "t.jsonl")
+        frac = self._write(p)
+        r = TraceReader(p)
+        assert r.num_ranks == 4
+        assert r.matmul_time == MODEL.matmul_time
+        assert r.meta["fixture"] == "unit"
+        ss = r.samples()
+        assert [s.step for s in ss] == list(range(6))
+        np.testing.assert_allclose(ss[0].work_frac, frac)
+        assert ss[0].plan_signature == "tp4b8shed[]"
+        assert ss[3].wall_s == pytest.approx(0.003)
+
+    def test_schema_version_check(self, tmp_path):
+        p = str(tmp_path / "t.jsonl")
+        self._write(p)
+        lines = open(p).read().splitlines()
+        hdr = json.loads(lines[0])
+        hdr["version"] = 99
+        bad = str(tmp_path / "bad.jsonl")
+        with open(bad, "w") as f:
+            f.write("\n".join([json.dumps(hdr)] + lines[1:]))
+        with pytest.raises(TraceFormatError, match="version"):
+            TraceReader(bad)
+        hdr["version"] = 1
+        hdr["schema"] = "something.else"
+        with open(bad, "w") as f:
+            f.write("\n".join([json.dumps(hdr)] + lines[1:]))
+        with pytest.raises(TraceFormatError, match="schema"):
+            TraceReader(bad)
+
+    def test_rank_count_mismatch_rejected(self, tmp_path):
+        p = str(tmp_path / "t.jsonl")
+        self._write(p)
+        with open(p, "a") as f:
+            f.write(json.dumps({"kind": "sample", "step": 6,
+                                "rank_times": [0.1, 0.2]}) + "\n")
+        with pytest.raises(TraceFormatError, match="rank times"):
+            TraceReader(p).samples()
+
+    def test_replay_reconstructs_full_chi(self, tmp_path):
+        """kind="trace" replay: recorded MITIGATED times come back as
+        full-workload-equivalent χ (the recorded work_frac divides out)."""
+        p = str(tmp_path / "t.jsonl")
+        self._write(p)
+        sched = schedule_from_trace(p)
+        assert sched.kind == "trace"
+        np.testing.assert_allclose(sched.chi(0), [4.0, 1.0, 1.0, 1.0],
+                                   rtol=1e-9)
+        # wrap-around past the end
+        np.testing.assert_allclose(sched.chi(6), sched.chi(0))
+        # rank-count override pads with 1.0
+        wide = schedule_from_trace(p, num_ranks=6)
+        assert wide.chi(0).shape == (6,)
+        assert wide.chi(0)[4] == 1.0
+
+    def test_committed_fixtures_load(self):
+        """The committed fixture library replays (header constants pinned
+        by make_fixtures.py)."""
+        for name, steps in (("static_skew", 60), ("round_robin", 120),
+                            ("bursty_contention", 200)):
+            path = os.path.join(TRACES_DIR, f"{name}.jsonl")
+            r = TraceReader(path)
+            assert r.num_ranks == 8
+            assert len(r.samples()) == steps
+            sched = schedule_from_trace(path)
+            chis = np.stack([sched.chi(t) for t in range(steps)])
+            # every fixture contains real straggling episodes (χ≈4 after
+            # noise) and quiet ranks near χ=1
+            assert chis.max() > 3.5
+            assert np.percentile(chis, 10) < 1.2

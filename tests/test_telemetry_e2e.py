@@ -1,0 +1,136 @@
+"""End-to-end closed-loop scenario tests (DESIGN_TELEMETRY.md §4).
+
+The acceptance claim: a 200-step contention run in MEASURED mode — the
+controller fed only StragglerEstimator reconstructions of mitigated
+measured times — converges to the same plan signatures as MODELED mode
+(the χ-oracle), within the straggler_threshold deadband, with no extra
+recompiles (compile-cache size pinned equal).
+
+The fast tier drives the controller directly over the committed
+bursty-contention fixture; the slow tier runs the REAL train driver
+(`run_training`, tp=4 subprocess) in both modes on the same replayed
+trace and compares histories.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.config import WorkloadControlConfig
+from repro.core.controller import (SemiController, decision_key,
+                                   reports_agree, work_fraction)
+from repro.core.hetero import IterationModel
+from repro.core.workload import PlanCompileCache
+from repro.telemetry import (EstimatorConfig, StragglerEstimator, TraceReader,
+                             schedule_from_trace)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURE = os.path.join(ROOT, "examples", "traces", "bursty_contention.jsonl")
+
+
+def drive_mode(measured: bool, mode: str = "semi", steps: int = 200):
+    """Closed control loop over the replayed fixture: schedule -> (oracle
+    | measurement->estimator) -> controller -> plan -> next measurement."""
+    reader = TraceReader(FIXTURE)
+    model = IterationModel(reader.matmul_time, reader.other_time)
+    sched = schedule_from_trace(FIXTURE)
+    e = reader.num_ranks
+    cfg = WorkloadControlConfig(enabled=True, mode=mode, block_size=8,
+                                max_migration_sources=3,
+                                times="measured" if measured else "modeled")
+    ctl = SemiController(cfg, e, model, num_blocks=64, seed=0)
+    est = (StragglerEstimator(model, e, EstimatorConfig.from_control(cfg))
+           if measured else None)
+    cache = PlanCompileCache(lambda s: object())
+    reports, sigs = [], []
+    for t in range(steps):
+        chi = sched.chi(t)
+        if measured:
+            times = est.full_times() if est.ready else est.nominal_times()
+        else:
+            times = model.times(chi, np.ones(e))
+        plan, rep = ctl.plan(times)
+        cache.get(plan.static.signature())
+        frac = work_fraction(plan, 64)
+        if measured:
+            # the closed loop only ever observes the MITIGATED runtime
+            est.update(model.times(chi, frac), frac)
+        reports.append(rep)
+        sigs.append(plan.static.signature_str())
+    return reports, sigs, cache
+
+
+class TestClosedLoop200:
+    @pytest.mark.parametrize("mode", ["semi", "zero"])
+    def test_measured_converges_to_modeled_plans(self, mode):
+        rm, sm, cm = drive_mode(False, mode)
+        re_, se, ce = drive_mode(True, mode)
+        # same plan-signature set: the measured loop discovers exactly the
+        # plans the oracle picks — no phantom signatures from estimation
+        # transients
+        assert set(se) == set(sm)
+        # no extra recompiles: compile-cache size pinned equal
+        assert ce.compile_count == cm.compile_count
+        assert len(ce) == len(cm)
+        # per-step decisions agree on >= 80% of steps (disagreements are
+        # the 1-2 step estimation lag at each burst start/end — 16 bursts
+        # in the fixture), and within the deadband everywhere they agree
+        exact = sum(1 for a, b in zip(rm, re_)
+                    if decision_key(a) == decision_key(b))
+        band = sum(1 for a, b in zip(rm, re_) if reports_agree(a, b))
+        assert exact >= 160, f"only {exact}/200 steps agree exactly"
+        assert band >= exact
+        # steady state: the fixture's last burst ends by step 187; in the
+        # quiet tail both modes settle on the identical neutral plan
+        for a, b in zip(rm[-8:], re_[-8:]):
+            assert decision_key(a) == decision_key(b)
+
+    def test_warmup_holds_plan_neutral(self):
+        """Until the warmup gate opens the measured loop must not react,
+        even though the fixture starts mid-burst."""
+        re_, se, _ = drive_mode(True, "semi", steps=3)
+        assert all(not r.stragglers for r in re_)
+        assert all(s.endswith("shed[]") for s in se)
+
+
+@pytest.mark.slow
+class TestTrainDriverClosedLoop:
+    def test_train_measured_matches_modeled_on_replay(self, tmp_path):
+        """The real trainer (jitted steps, PlanCompileCache, tp=4) in both
+        modes on the replayed contention fixture: same signature set,
+        same number of plan-signature compiles, >= 75% per-step bucket
+        agreement (tp=4 truncates the 8-rank fixture to its first 4
+        ranks; the lag steps at burst edges are the only divergence)."""
+        code = textwrap.dedent(f"""
+            import json
+            from repro.launch.train import run_training
+            out = {{}}
+            for times in ("modeled", "measured"):
+                h = run_training("vit-1b", steps=40, tp=4, batch=4, seq=16,
+                                 quiet=True, control_mode="semi",
+                                 hetero_kind="trace",
+                                 trace_in={FIXTURE!r},
+                                 mig_blocks=8, max_sources=2, times=times)
+                out[times] = {{"buckets": h["buckets"],
+                              "signatures": h["signatures"],
+                              "plan_compiles": h["plan_compiles"]}}
+            print("RESULT" + json.dumps(out))
+        """)
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        env["PYTHONPATH"] = os.path.join(ROOT, "src")
+        res = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, env=env,
+                             timeout=1200)
+        assert res.returncode == 0, res.stderr[-2000:]
+        out = json.loads(res.stdout.split("RESULT", 1)[1])
+        mod, mea = out["modeled"], out["measured"]
+        assert set(mea["signatures"]) == set(mod["signatures"])
+        assert mea["plan_compiles"] == mod["plan_compiles"]
+        agree = sum(1 for a, b in zip(mod["buckets"], mea["buckets"])
+                    if a == b)
+        assert agree >= int(0.75 * len(mod["buckets"]))
