@@ -84,13 +84,18 @@ def save_bench_json(name: str, config: dict, metrics: dict,
     return path
 
 
-def run_subprocess_py(code: str, devices: int = 8, timeout: int = 1200) -> str:
-    """Run a snippet under N host devices; returns stdout."""
+def run_subprocess_py(code: str, devices: int = 8, timeout: int = 1200,
+                      with_bench_path: bool = False) -> str:
+    """Run a snippet under N host devices; returns stdout.
+
+    ``with_bench_path`` adds the repo root to PYTHONPATH so the snippet
+    can import the ``benchmarks`` package itself."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    path = [os.path.join(ROOT, "src")] + ([ROOT] if with_bench_path else [])
+    env["PYTHONPATH"] = os.pathsep.join(path)
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
+                         capture_output=True, text=True, env=env, cwd=ROOT,
                          timeout=timeout)
     if out.returncode != 0:
         raise RuntimeError(f"bench subprocess failed:\n{out.stdout}\n{out.stderr}")

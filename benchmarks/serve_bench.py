@@ -1,9 +1,9 @@
-"""Serving benchmark: continuous-batching decode under contention,
-dense vs. straggler-aware (ZERO-resized) — per-token latency percentiles
-and throughput.
+"""Serving benchmark: continuous-batching decode under contention —
+dense vs. ZERO-resized vs. full SEMI (lossless migration) — per-token
+latency percentiles and throughput.
 
 Replays ONE staggered request trace through the :class:`ServeEngine`
-twice under the SAME contention schedule (χ = 4, p = 0.15 — the paper's
+under the SAME contention schedule (χ = 4, p = 0.15 — the paper's
 contention-driven straggling regime at serve time):
 
 * ``dense``   — control off: every decode step takes as long as the
@@ -11,29 +11,40 @@ contention-driven straggling regime at serve time):
 * ``resized`` — the SemiController ZERO-resizes the contended rank's TP
   decode matmuls each step (plan-signature compile caching keeps the
   executable set tiny), and the REAL controlled step executes the pruned
-  branch.
+  branch (fast but LOSSY: pruned weights change logits);
+* ``semi``    — the paper's adaptive solution through the unified control
+  plane: Eq.(3)-selected stragglers MIGRATE their shed blocks to helper
+  ranks (multi-source, reduce-merged, β-policy "lossless"). Runs in a
+  4-device subprocess (real TP migration dataflow, sim_ranks = 8 folded
+  onto the mesh via the plan projection) and is gated on BOTH latency
+  (beats contended dense p95) and losslessness (token-exact vs. the
+  uncontended dense baseline at the same tp).
 
 Latency epistemics match the rest of the bench suite: per-step times come
 from the calibrated iteration model over the simulated rank group (the
 paper itself simulates heterogeneity), while the decode dataflow runs for
-real — slots, recycling, prefill-on-admit, plan dispatch.
+real — slots, recycling, prefill-on-admit, plan dispatch, migration
+collectives.
 
 Emits stable-schema ``BENCH_serve.json`` (trajectory point) and FAILS if
-resized decode does not beat dense p95 per-token latency — the serving
-analogue of the kernel-bench regression gate.
+resized decode does not beat dense p95, if SEMI decode does not beat
+dense p95, or if SEMI decode is not token-exact.
 """
 from __future__ import annotations
 
+import json
 import os
 
 import numpy as np
 
-from benchmarks.common import OUT_DIR, csv_row, is_dry_run, save_bench_json
+from benchmarks.common import (OUT_DIR, csv_row, is_dry_run,
+                               run_subprocess_py, save_bench_json)
 from repro.launch.serve import (Request, ServeControlConfig, ServeEngine,
                                 latency_percentiles)
 
 ARCH = "yi-6b"
 SIM_RANKS = 8                     # paper-scale TP group for the χ schedule
+SEMI_TP = 4                       # real mesh for the semi-migration run
 CHI = 4.0
 CONTENTION_P = 0.15
 
@@ -73,6 +84,63 @@ def run_engine(mode: str, *, num_slots: int, max_len: int, trace_args,
     return eng, comps, stats
 
 
+_SEMI_CHILD = """
+import json
+import numpy as np
+from repro.launch.serve import (Request, ServeControlConfig, ServeEngine,
+                                latency_percentiles)
+from benchmarks.serve_bench import (ARCH, CHI, CONTENTION_P, SEMI_TP,
+                                    SIM_RANKS, make_trace)
+
+p = json.loads(__SEMI_PARAMS__)
+
+def run(mode, hetero):
+    control = ServeControlConfig(
+        mode=mode, hetero_kind=hetero, chi=CHI, contention_p=CONTENTION_P,
+        sim_ranks=SIM_RANKS, max_sources=SIM_RANKS - 1, seed=p["seed"])
+    eng = ServeEngine(ARCH, num_slots=p["num_slots"], max_len=p["max_len"],
+                      tp=SEMI_TP, control=control, seed=p["seed"])
+    comps = eng.run(make_trace(eng.cfg.vocab_size, *p["trace_args"]))
+    eng.close()
+    stats = latency_percentiles(comps, total_time_s=eng.clock)
+    stats.update(eng.trace_counts())
+    return eng, comps, stats
+
+# uncontended dense baseline at the SAME tp: the token-exactness reference
+ref_eng, ref, ref_stats = run("off", "none")
+eng, comps, stats = run("semi", "contention")
+tok_ref = {c.uid: c.tokens for c in ref}
+exact = all(np.array_equal(c.tokens, tok_ref[c.uid]) for c in comps)
+out = {
+    "semi": stats,
+    "dense_ref": ref_stats,
+    "token_exact": bool(exact),
+    "migrated_steps": sum(1 for h in eng.history if h.get("mig_srcs")),
+    "resize_steps": sum(1 for h in eng.history
+                        if h.get("max_bucket", 0) > 0),
+    "straggler_steps": sum(1 for h in eng.history if h.get("stragglers")),
+}
+print("SEMI_JSON:" + json.dumps(out))
+"""
+
+
+def run_semi_subprocess(*, num_slots, max_len, trace_args, seed=0) -> dict:
+    """Run the SEMI-migration leg on a real SEMI_TP-rank host mesh.
+
+    A subprocess (the shared bench harness) is required because the XLA
+    host-device-count flag must be set before jax initializes — the
+    parent process is already running single-device legs."""
+    params = json.dumps({"num_slots": num_slots, "max_len": max_len,
+                         "trace_args": list(trace_args), "seed": seed})
+    code = _SEMI_CHILD.replace("__SEMI_PARAMS__", repr(params))
+    stdout = run_subprocess_py(code, devices=SEMI_TP, timeout=1800,
+                               with_bench_path=True)
+    for line in stdout.splitlines():
+        if line.startswith("SEMI_JSON:"):
+            return json.loads(line[len("SEMI_JSON:"):])
+    raise RuntimeError(f"semi serve subprocess emitted no result:\n{stdout}")
+
+
 def main() -> list:
     dry = is_dry_run()
     num_slots = 2 if dry else 4
@@ -101,28 +169,56 @@ def main() -> list:
             f"p99={stats['p99_ms']:.3f}ms,tok_s={stats['tok_per_s']:.1f},"
             f"compiles={stats['plan_compiles']}"))
 
+    # -- SEMI leg: lossless migration on a real 4-rank mesh ---------------
+    semi = run_semi_subprocess(num_slots=num_slots, max_len=max_len,
+                               trace_args=trace_args)
+    s = semi["semi"]
+    rows.append(csv_row(
+        "serve_semi", s["p95_ms"] * 1e3,
+        f"p50={s['p50_ms']:.3f}ms,p95={s['p95_ms']:.3f}ms,"
+        f"tok_s={s['tok_per_s']:.1f},mig_steps={semi['migrated_steps']},"
+        f"token_exact={semi['token_exact']}"))
+
     d, r = results["dense"], results["resized"]
     speedup_p95 = d["p95_ms"] / max(r["p95_ms"], 1e-12)
     speedup_tput = r["tok_per_s"] / max(d["tok_per_s"], 1e-12)
+    semi_speedup_p95 = d["p95_ms"] / max(s["p95_ms"], 1e-12)
     rows.append(csv_row(
         "serve_speedup", 0.0,
         f"p95_speedup={speedup_p95:.2f}x,tput_speedup={speedup_tput:.2f}x,"
+        f"semi_p95_speedup={semi_speedup_p95:.2f}x,"
         f"chi={CHI},p={CONTENTION_P}"))
 
     config = {"arch": ARCH, "sim_ranks": SIM_RANKS, "chi": CHI,
               "contention_p": CONTENTION_P, "num_slots": num_slots,
               "n_requests": n_requests, "prompt_len": prompt_len,
               "gen_len": gen_len, "arrival_every": arrival_every,
-              "dry_run": dry}
+              "semi_tp": SEMI_TP, "dry_run": dry}
     metrics = {"dense": results["dense"], "resized": results["resized"],
-               "p95_speedup": speedup_p95, "tput_speedup": speedup_tput}
+               "semi": s, "semi_dense_ref": semi["dense_ref"],
+               "semi_token_exact": semi["token_exact"],
+               "semi_migrated_steps": semi["migrated_steps"],
+               "semi_resize_steps": semi["resize_steps"],
+               "p95_speedup": speedup_p95, "tput_speedup": speedup_tput,
+               "semi_p95_speedup": semi_speedup_p95}
     save_bench_json("serve", config, metrics, trajectory=True)
 
-    # regression gate (serving analogue of the kernel-bench ratio gate):
+    # regression gates (serving analogue of the kernel-bench ratio gate):
     # under χ=4 / p=0.15 contention, resized decode must beat dense p95
     if r["p95_ms"] >= d["p95_ms"]:
         raise RuntimeError(
             f"serve bench regression: resized p95 {r['p95_ms']:.3f}ms did "
+            f"not beat dense p95 {d['p95_ms']:.3f}ms under contention")
+    # ... SEMI must ALSO beat it while staying lossless (migration only
+    # redistributes the shed blocks; it must not change a single token)
+    if not semi["token_exact"]:
+        raise RuntimeError(
+            "serve bench regression: semi-mode decode under contention "
+            "diverged from the uncontended dense baseline — migration is "
+            "supposed to be lossless")
+    if s["p95_ms"] >= d["p95_ms"]:
+        raise RuntimeError(
+            f"serve bench regression: semi p95 {s['p95_ms']:.3f}ms did "
             f"not beat dense p95 {d['p95_ms']:.3f}ms under contention")
     return rows
 

@@ -4,15 +4,41 @@ Single-file npz per step plus a JSON manifest describing the pytree
 structure and logical shardings, so a checkpoint written under one mesh
 restores under another (values are saved unsharded; the launcher re-shards
 on restore via device_put with the target NamedShardings).
+
+Durability contract (crash-safe by construction):
+
+* both files are written to a temp path in the same directory and moved
+  into place with ``os.replace`` (atomic on POSIX) — a crash mid-write
+  leaves a ``.tmp`` orphan, never a torn checkpoint;
+* the manifest is written AFTER the npz and acts as the commit marker:
+  :func:`latest_step` only counts steps whose npz **and** manifest both
+  exist, so a crash between the two renames leaves an ignorable orphan
+  npz rather than a corrupt "latest" checkpoint;
+* :func:`restore` validates dtypes/shapes against the manifest before
+  touching the model and always closes the npz handle.
+
+Flat keys join pytree path components with ``/``; literal ``/`` (and
+``\\``) inside dict keys are escaped so distinct paths can never collide
+on the same flat key (round-trip pinned by tests/test_checkpoint.py).
+
+The full-train-state layout (params + optimizer moments + control-plane
+state in one tree, step/data-position/RNG streams in the manifest
+``extra``) is assembled by the trainer; :func:`restore`'s ``prefix``
+selects one subtree of it, and :func:`load_params` transparently loads
+either that layout or a legacy params-only checkpoint.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Optional
+import tempfile
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+# manifest "extra" layout tag for full-train-state checkpoints
+TRAIN_STATE_LAYOUT = "train_state_v1"
 
 
 def _flatten_with_paths(tree):
@@ -24,19 +50,83 @@ def _flatten_with_paths(tree):
     return out
 
 
+def _escape(component: str) -> str:
+    """Escape the path separator inside a single key component, so a dict
+    key containing ``/`` cannot collide with genuine nesting
+    ({"a/b": x} vs {"a": {"b": x}})."""
+    return component.replace("\\", "\\\\").replace("/", "\\/")
+
+
+def _split_key(key: str) -> list:
+    """Split a flat key on UNESCAPED ``/`` and unescape the components."""
+    parts, cur, i = [], [], 0
+    while i < len(key):
+        c = key[i]
+        if c == "\\" and i + 1 < len(key):
+            cur.append(key[i + 1])
+            i += 2
+            continue
+        if c == "/":
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(c)
+        i += 1
+    parts.append("".join(cur))
+    return parts
+
+
 def _path_str(p) -> str:
     if hasattr(p, "key"):
-        return str(p.key)
+        return _escape(str(p.key))
     if hasattr(p, "idx"):
         return str(p.idx)
-    return str(p)
+    if hasattr(p, "name"):
+        return _escape(str(p.name))
+    return _escape(str(p))
+
+
+def _npz_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.npz")
+
+
+def _manifest_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.json")
+
+
+def _atomic_write(path: str, write_fn) -> None:
+    """Write via a same-directory temp file + ``os.replace`` so readers
+    never observe a partially written checkpoint file."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
     os.makedirs(directory, exist_ok=True)
     flat = _flatten_with_paths(tree)
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **flat)
+    path = _npz_path(directory, step)
+    # OVERWRITING a step: retract the old commit marker first, so a crash
+    # between the new npz landing and its new manifest landing leaves a
+    # manifest-less orphan (correctly skipped) — never a new npz silently
+    # paired with the previous save's manifest/extra state.
+    try:
+        os.unlink(_manifest_path(directory, step))
+    except FileNotFoundError:
+        pass
+    _atomic_write(path, lambda f: np.savez(f, **flat))
     manifest = {
         "step": step,
         "keys": sorted(flat.keys()),
@@ -44,34 +134,117 @@ def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None) -> 
         "dtypes": {k: str(v.dtype) for k, v in flat.items()},
         "extra": extra or {},
     }
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    # the manifest commits the checkpoint: written (atomically) only after
+    # the npz is durably in place, and required by latest_step/restore
+    _atomic_write(_manifest_path(directory, step),
+                  lambda f: f.write(json.dumps(manifest, indent=1)
+                                    .encode("utf-8")))
     return path
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Newest COMMITTED step: an npz without its manifest is a torn write
+    (crash between the data and the commit marker) and is skipped."""
     if not os.path.isdir(directory):
         return None
     steps = [int(f[5:13]) for f in os.listdir(directory)
-             if f.startswith("ckpt_") and f.endswith(".npz")]
+             if f.startswith("ckpt_") and f.endswith(".npz")
+             and os.path.exists(_manifest_path(directory, int(f[5:13])))]
     return max(steps) if steps else None
 
 
-def restore(directory: str, step: int, like: Any, shardings: Any = None) -> Any:
-    """Restore into the structure of `like` (a pytree of arrays/ShapeDtype)."""
-    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+def read_manifest(directory: str, step: int) -> dict:
+    path = _manifest_path(directory, step)
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"checkpoint step {step} in {directory} has no manifest — "
+            "either it predates the manifest format or its write was "
+            "interrupted; re-save or delete the orphan npz")
+    with open(path) as f:
+        return json.load(f)
+
+
+def restore(directory: str, step: int, like: Any, shardings: Any = None,
+            *, prefix: Optional[str] = None) -> Any:
+    """Restore into the structure of `like` (a pytree of arrays/ShapeDtype).
+
+    Validates every leaf against the manifest (key present, dtype and
+    shape match what was written) before materializing, so a truncated or
+    mismatched checkpoint fails with an actionable error instead of
+    feeding garbage into the model. ``prefix`` selects a subtree of a
+    larger saved tree (e.g. ``"params"`` of a full-train-state
+    checkpoint).
+    """
+    manifest = read_manifest(directory, step)
+    m_shapes, m_dtypes = manifest["shapes"], manifest["dtypes"]
     flat_like = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
+    want = []
     for path, leaf in flat_like[0]:
         key = "/".join(_path_str(p) for p in path)
-        if key not in data:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = data[key]
-        if tuple(arr.shape) != tuple(leaf.shape):
+        if prefix:
+            key = f"{_escape(prefix)}/{key}" if key else _escape(prefix)
+        if key not in m_shapes:
+            raise KeyError(
+                f"checkpoint {directory} step {step} missing leaf {key!r} "
+                f"(manifest has {len(m_shapes)} keys"
+                + (f" under a different layout; prefix={prefix!r}" if prefix
+                   else "") + ")")
+        if tuple(m_shapes[key]) != tuple(leaf.shape):
             raise ValueError(
-                f"shape mismatch for {key}: ckpt {arr.shape} vs model {leaf.shape}")
-        leaves.append(arr.astype(leaf.dtype))
+                f"shape mismatch for {key}: ckpt {tuple(m_shapes[key])} vs "
+                f"model {tuple(leaf.shape)} — architecture/shape config "
+                "changed since this checkpoint was written")
+        want.append((key, leaf))
+
+    leaves = []
+    with np.load(_npz_path(directory, step)) as data:
+        for key, leaf in want:
+            if key not in data:
+                raise KeyError(
+                    f"checkpoint npz missing leaf {key!r} declared by its "
+                    "manifest — the npz is truncated/corrupt; restore from "
+                    "an earlier step")
+            arr = data[key]
+            if str(arr.dtype) != m_dtypes[key]:
+                raise ValueError(
+                    f"dtype mismatch for {key}: npz {arr.dtype} vs manifest "
+                    f"{m_dtypes[key]} — the checkpoint pair is inconsistent")
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs model "
+                    f"{leaf.shape}")
+            leaves.append(arr.astype(leaf.dtype))
     tree = jax.tree_util.tree_unflatten(flat_like[1], leaves)
     if shardings is not None:
         tree = jax.device_put(tree, shardings)
     return tree
+
+
+def load_arrays(directory: str, step: int,
+                prefix: Optional[str] = None) -> Dict[str, Any]:
+    """Load a (sub)tree of a checkpoint as a NESTED dict of numpy arrays,
+    without a ``like`` template — used for control-plane state, whose
+    structure (e.g. which priority scopes exist) is data-dependent."""
+    esc = _escape(prefix) + "/" if prefix else ""
+    out: Dict[str, Any] = {}
+    with np.load(_npz_path(directory, step)) as data:
+        for key in data.files:
+            if prefix and not key.startswith(esc):
+                continue
+            parts = _split_key(key[len(esc):])
+            node = out
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = np.asarray(data[key])
+    return out
+
+
+def load_params(directory: str, step: int, like: Any,
+                shardings: Any = None) -> Any:
+    """Restore model params from either layout: a full-train-state
+    checkpoint (params live under the ``params/`` subtree) or a legacy
+    params-only checkpoint."""
+    manifest = read_manifest(directory, step)
+    full = manifest.get("extra", {}).get("layout") == TRAIN_STATE_LAYOUT
+    return restore(directory, step, like, shardings,
+                   prefix="params" if full else None)

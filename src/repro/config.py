@@ -245,6 +245,12 @@ class WorkloadControlConfig:
     migration_block: int = 128    # migrated-column granularity
     max_migration_sources: int = 3   # concurrent straggler slots (0 = no mig)
     migration_shed_cap: int = 0      # per-source shed-block cap (0 = uncapped)
+    # β source for SEMI's per-source mission split (Eq. 2): "eq2" balances
+    # migration vs. resize cost (training default); "lossless" forces
+    # β = 1 for every Eq.(3)-selected source — the whole offset volume
+    # migrates, so the plan changes no outputs (the serve engine's
+    # default: decode quality must not silently degrade under contention)
+    beta_policy: str = "eq2"         # eq2 | lossless
     # controller
     tavg_refresh_threshold: float = 0.10   # passive T_avg refresh on >10% change
     # straggler-detection deadband: ranks within this relative margin of
@@ -265,6 +271,15 @@ class WorkloadControlConfig:
     estimator_warmup: int = 3        # samples before the warmup gate opens
     outlier_nmad: float = 4.0        # median/MAD spike-rejection threshold
     measure_interval: int = 1        # steps between in-graph rank gathers
+
+    def __post_init__(self):
+        # a typo'd beta_policy would silently fall through to the LOSSY
+        # eq2 split — the exact silent quality degradation the lossless
+        # policy exists to prevent — so reject unknown values loudly
+        if self.beta_policy not in ("eq2", "lossless"):
+            raise ValueError(
+                f"beta_policy {self.beta_policy!r} is not one of "
+                "('eq2', 'lossless')")
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,318 @@
+"""The unified control plane shared by the train and serve drivers.
+
+Before this module existed, ``launch/train.py`` and ``launch/serve.py``
+each carried their own copy of the same loop: build the static plan
+skeleton, key executables on the plan signature in a
+:class:`PlanCompileCache`, instantiate the :class:`SemiController` and the
+telemetry stack (estimator / timer / trace writer), and — every iteration
+— turn the controller's :class:`WorkloadPlan` into the device arrays +
+compiled step the runtime actually executes. The two copies had already
+diverged once (the serve copy dropped migration whenever the simulated
+rank group differed from the real mesh); this class is the single
+implementation both drivers now share.
+
+Responsibilities:
+
+* **plan skeleton** — derive the real-mesh :class:`PlanStatic` from a
+  :class:`WorkloadControlConfig` and null it when the architecture has no
+  prunable scope at this TP degree.
+* **compile cache** — own the signature-keyed executable cache; the
+  caller supplies a ``builder(static_or_none) -> (step_fn, n_slots,
+  aux)`` and the plane guarantees each canonical signature builds once.
+* **controller** — the sim-scale :class:`SemiController` (Eq. 1–3), fed
+  either the χ-oracle or the closed telemetry loop (``times=measured``).
+* **dispatch** — :meth:`dispatch` projects a (possibly sim-scale) plan
+  onto the real mesh (:func:`repro.control.projection.project_plan` —
+  resize buckets *and* multi-source migration slots, the full SEMI
+  mitigation space), picks the executable for the projected signature,
+  and assembles the dynamic plan arrays.
+* **telemetry** — measurement capture, online estimation, and replayable
+  trace output, identical for both drivers.
+* **checkpoint** — :meth:`state_arrays` / :meth:`state_meta` /
+  :meth:`load_state` round-trip the controller's T_avg bookkeeping,
+  priority statistics, estimator window and every host RNG stream, so a
+  crash-interrupted run resumes with the exact control trajectory of an
+  uninterrupted one (see DESIGN_CONTROL.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, WorkloadControlConfig
+from repro.control import scopes as scopes_lib
+from repro.control.projection import project_plan
+from repro.core import hetero as hetero_lib
+from repro.core.controller import SemiController, work_fraction
+from repro.core.workload import PlanCompileCache, PlanStatic, WorkloadPlan
+from repro.telemetry import (EstimatorConfig, RankTimer, StragglerEstimator,
+                             TraceWriter, capture_sample, measurement_rng,
+                             schedule_from_trace)
+
+
+def make_schedule(kind: str, num_ranks: int, *, chi: float = 2.0,
+                  period: int = 10, contention_p: float = 0.15,
+                  seed: int = 0, trace_in: Optional[str] = None):
+    """χ-schedule factory shared by the drivers (``None`` = homogeneous).
+
+    ``kind="trace"`` replays a recorded telemetry trace (``trace_in``);
+    the other kinds are the paper's Sec. V-A simulation regimes.
+    """
+    if kind == "trace":
+        if not trace_in:
+            raise ValueError("hetero kind 'trace' needs trace_in "
+                             "(a telemetry trace to replay)")
+        return schedule_from_trace(trace_in, num_ranks=num_ranks)
+    if kind == "none":
+        return None
+    return hetero_lib.HeteroSchedule(
+        num_ranks=num_ranks, kind=kind,
+        chis=(chi,) if kind in ("static", "round_robin") else (),
+        period=period, contention_p=contention_p, contention_chi=chi,
+        seed=seed)
+
+
+class ControlPlane:
+    """Plan assembly, compile caching, mitigation dispatch and telemetry.
+
+    ``builder(static_or_none)`` must return ``(step_fn, n_plan_slots,
+    aux)`` — the jitted executable for that plan signature, the number of
+    migration-source slots its plan input carries, and any caller-private
+    extra (the drivers stash input shardings there).
+
+    ``controller_blocks`` picks the block-count convention the controller
+    reasons in: ``"global"`` (whole-scope blocks, the training drivers'
+    historical convention — its pinned trajectories depend on it) or
+    ``"local"`` (per-rank shard blocks — the paper's L_i, which sizes
+    migration sheds so they actually fit a source's local shard; the
+    serve engine uses this).
+
+    ``clamp_sheds`` additionally clamps projected shed counts to the real
+    FFN shard (source keeps >= 1 block). The serve engine enables it —
+    plans there may be sized at sim scale; the trainer keeps the loud
+    ValueError contract of its ``--mig-blocks`` cap instead.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, wc: WorkloadControlConfig, *,
+                 mesh, tp: int,
+                 builder: Callable[[Optional[PlanStatic]], Any],
+                 it_model: hetero_lib.IterationModel,
+                 sim_ranks: int = 0, controller_blocks: str = "local",
+                 clamp_sheds: bool = False,
+                 hetero_kind: str = "none", chi: float = 2.0,
+                 period: int = 10, contention_p: float = 0.15,
+                 seed: int = 0, trace_in: Optional[str] = None,
+                 trace_out: Optional[str] = None,
+                 trace_meta: Optional[Dict[str, Any]] = None,
+                 measure_noise: float = 0.0):
+        self.wc = wc
+        self.tp = tp
+        self.mesh = mesh
+        self.it_model = it_model
+        self.sim_ranks = sim_ranks or tp
+        self.clamp_sheds = clamp_sheds
+        self.measure_noise = measure_noise
+
+        # -- plan skeleton (real mesh scale) -------------------------------
+        static = None
+        if wc.enabled:
+            static = PlanStatic(
+                buckets=wc.gamma_buckets, block_size=wc.block_size,
+                tp_size=tp, imputation=wc.imputation)
+            if not scopes_lib.control_scopes(model_cfg, static):
+                static = None               # arch exempt at this tp
+        self.static = static
+        self.scopes = (scopes_lib.control_scopes(model_cfg, static)
+                       if static is not None else {})
+        self.identity_pri = (scopes_lib.plan_pri_arrays(self.scopes, {}, tp)
+                            if static is not None else {})
+
+        # -- executable cache ----------------------------------------------
+        self.cache = PlanCompileCache(builder)
+        self.base = self.cache.get(static)
+
+        # -- controller at the simulated group scale -----------------------
+        if static is not None and self.sim_ranks != tp:
+            sim_static = dataclasses.replace(static, tp_size=self.sim_ranks)
+            sim_scopes = scopes_lib.control_scopes(model_cfg, sim_static)
+        else:
+            sim_scopes = self.scopes
+        self.sim_nb = next(iter(sim_scopes.values()), 1)
+        self.controller: Optional[SemiController] = None
+        if wc.enabled and static is not None:
+            n_blocks = (self.sim_nb * self.sim_ranks
+                        if controller_blocks == "global" else self.sim_nb)
+            self.controller = SemiController(wc, self.sim_ranks, it_model,
+                                             n_blocks, seed=seed)
+
+        # -- χ schedule + telemetry ----------------------------------------
+        self.schedule = make_schedule(
+            hetero_kind, self.sim_ranks, chi=chi, period=period,
+            contention_p=contention_p, seed=seed, trace_in=trace_in)
+        measured = self.controller is not None and wc.times == "measured"
+        self.estimator = (StragglerEstimator(
+            it_model, self.sim_ranks, EstimatorConfig.from_control(wc))
+            if measured else None)
+        self.timer = RankTimer(mesh=mesh if tp > 1 else None,
+                               interval=wc.measure_interval)
+        self.writer = (TraceWriter(
+            trace_out, self.sim_ranks,
+            matmul_time=it_model.matmul_time,
+            other_time=it_model.other_time, meta=trace_meta or {})
+            if trace_out else None)
+        self.measure_rng = measurement_rng(seed)
+
+    # -- per-iteration loop ---------------------------------------------------
+    def chis(self, step: int) -> np.ndarray:
+        """Simulated per-rank χ for this step (ones when homogeneous)."""
+        if self.schedule is not None:
+            return self.schedule.chi(step)
+        return np.ones((self.sim_ranks,))
+
+    def controller_times(self, chis: np.ndarray) -> np.ndarray:
+        """Per-rank FULL-workload-equivalent times for the controller.
+
+        Measured mode consumes the estimator's reconstruction (neutral
+        nominal times until the warmup gate opens); modeled mode reads the
+        χ-oracle through the iteration model — Eq.(1) measures the
+        heterogeneity degree, never the already-mitigated runtime.
+        """
+        if self.estimator is not None:
+            return (self.estimator.full_times() if self.estimator.ready
+                    else self.estimator.nominal_times())
+        return self.it_model.times(np.asarray(chis, np.float64),
+                                   np.ones(self.sim_ranks))
+
+    def decide(self, times: np.ndarray):
+        """Run the controller (Alg. 2) on per-rank times."""
+        return self.controller.plan(times)
+
+    def dispatch(self, plan: WorkloadPlan):
+        """Executable + dynamic plan arrays for a plan, on the real mesh.
+
+        Projects the (possibly sim-scale) plan onto the real TP group —
+        resize buckets and multi-source migration slots both — then picks
+        the compiled step for the projected signature and pads the
+        dynamic source vector to its slot count.
+
+        Returns ``(step_fn, plan_arrays, projected)`` — ``projected`` is
+        the :class:`ProjectedPlan` that actually EXECUTES (drivers report
+        it, not the sim-scale plan, as the migration ground truth).
+        """
+        real_ffn_nb = self.scopes.get("ffn", 0) if self.clamp_sheds else 0
+        proj = project_plan(plan, sim_ranks=self.sim_ranks, tp=self.tp,
+                            real_nb=real_ffn_nb)
+        st_iter = dataclasses.replace(self.static, mig_shed=proj.mig_sheds,
+                                      mig_blocks=0)
+        step_fn, n_slots, _ = self.cache.get(st_iter)
+        pri = (scopes_lib.plan_pri_arrays(self.scopes,
+                                          plan.dynamic.pri_lists, self.tp)
+               if plan.dynamic.pri_lists else self.identity_pri)
+        srcs = np.full((max(n_slots, 1),), -1, np.int32)
+        k = min(len(proj.mig_srcs), srcs.shape[0])
+        srcs[:k] = np.asarray(proj.mig_srcs[:k], np.int32)
+        arrays = {"bucket_by_rank": jnp.asarray(proj.bucket_by_rank),
+                  "mig_src": jnp.asarray(srcs), "pri": pri}
+        return step_fn, arrays, proj
+
+    def work_frac(self, plan: WorkloadPlan) -> np.ndarray:
+        """Retained-work fraction per simulated rank implied by a plan."""
+        return work_fraction(plan, self.sim_nb)
+
+    def capture(self, chis, work_frac, *, step: int, plan, wall: float):
+        """Simulated-measurement capture: feed the estimator + the trace.
+
+        The in-graph rank gather only applies when the measurement vector
+        is rank-aligned with the real mesh (sim group == real tp)."""
+        if self.estimator is None and self.writer is None:
+            return None
+        sample = capture_sample(
+            self.it_model, chis, work_frac, step=step, plan=plan, wall=wall,
+            rng=self.measure_rng, noise=self.measure_noise,
+            timer=self.timer if self.sim_ranks == self.tp else None)
+        if self.estimator is not None:
+            self.estimator.observe(sample)
+        if self.writer is not None:
+            self.writer.append(sample)
+        return sample
+
+    def close(self) -> None:
+        """Flush/close the telemetry trace (safe to call repeatedly)."""
+        if self.writer is not None:
+            self.writer.close()
+
+    def counts(self) -> Dict[str, int]:
+        """Compile-cache + estimator telemetry for histories/benchmarks."""
+        out = {"plan_compiles": self.cache.compile_count,
+               "plan_cache_hits": self.cache.hit_count}
+        if self.estimator is not None:
+            out["estimator_updates"] = self.estimator.updates
+            out["estimator_rejected"] = self.estimator.rejected_total
+        return out
+
+    # -- checkpoint / resume --------------------------------------------------
+    def state_arrays(self) -> Dict[str, Any]:
+        """Numeric control-plane state as a pytree of numpy arrays
+        (checkpointed alongside params/opt in the same npz)."""
+        out: Dict[str, Any] = {}
+        if self.controller is not None:
+            c = self.controller.state_arrays()
+            if c:
+                out["controller"] = c
+        if self.estimator is not None:
+            out["estimator"] = self.estimator.state_arrays()
+        return out
+
+    def state_meta(self) -> Dict[str, Any]:
+        """JSON-able control-plane state (host RNG streams: their 128-bit
+        PCG64 state words don't fit numpy dtypes)."""
+        meta: Dict[str, Any] = {
+            "measure_rng": self.measure_rng.bit_generator.state}
+        if self.controller is not None:
+            meta["controller_rng"] = self.controller.rng.bit_generator.state
+        return meta
+
+    def load_state(self, arrays: Optional[Dict[str, Any]],
+                   meta: Optional[Dict[str, Any]]) -> None:
+        """Restore :meth:`state_arrays` + :meth:`state_meta` output.
+
+        Missing keys keep the fresh-start default (old checkpoints stay
+        loadable). The converse — checkpointed state the CURRENT config
+        cannot host (e.g. estimator state resumed without
+        ``times=measured``) — voids the bit-identical-resume contract,
+        so it warns loudly instead of being dropped in silence."""
+        import warnings
+        arrays = arrays or {}
+        meta = meta or {}
+        if "controller" in arrays:
+            if self.controller is not None:
+                self.controller.load_state_arrays(arrays["controller"])
+            else:
+                warnings.warn(
+                    "checkpoint carries controller state but workload "
+                    "control is disabled in this run — the control "
+                    "trajectory will NOT match the interrupted run",
+                    stacklevel=2)
+        if "estimator" in arrays:
+            if self.estimator is not None:
+                self.estimator.load_state_arrays(arrays["estimator"])
+            else:
+                warnings.warn(
+                    "checkpoint carries estimator state but this run is "
+                    "not in times='measured' mode — the control "
+                    "trajectory will NOT match the interrupted run",
+                    stacklevel=2)
+        if "measure_rng" in meta:
+            self.measure_rng.bit_generator.state = meta["measure_rng"]
+        if "controller_rng" in meta:
+            if self.controller is not None:
+                self.controller.rng.bit_generator.state = \
+                    meta["controller_rng"]
+            elif "controller" not in arrays:
+                warnings.warn(
+                    "checkpoint carries controller RNG state but workload "
+                    "control is disabled in this run", stacklevel=2)

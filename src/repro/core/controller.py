@@ -208,6 +208,46 @@ class SemiController:
                                      else "priority")
                 for name, st in self.priority.items()}
 
+    # -- checkpoint / resume ----------------------------------------------
+    def state_arrays(self) -> Dict[str, object]:
+        """Numeric controller state as a pytree of numpy arrays: the
+        passive T_avg bookkeeping plus the per-scope priority statistics.
+        (The host RNG stream is 128-bit PCG64 state — checkpointed
+        separately as JSON by the control plane.)"""
+        out: Dict[str, object] = {}
+        if self._t_avg is not None:
+            out["t_avg"] = np.asarray(self._t_avg, np.float64)
+        if self._t_at_refresh is not None:
+            out["t_at_refresh"] = np.asarray(self._t_at_refresh, np.float64)
+        pri = {}
+        for name, st in self.priority.items():
+            d = {"w_var": np.asarray(st.w_var, np.float64),
+                 "pruned_last": np.asarray(st.pruned_last, bool)}
+            if st.snapshot is not None:
+                d["snapshot"] = np.asarray(st.snapshot)
+            pri[name] = d
+        if pri:
+            out["pri"] = pri
+        return out
+
+    def load_state_arrays(self, arrays: Dict[str, object]) -> None:
+        """Restore :meth:`state_arrays` output (missing keys keep the
+        fresh-start default, so old checkpoints stay loadable)."""
+        t_avg = arrays.get("t_avg")
+        self._t_avg = float(np.asarray(t_avg)) if t_avg is not None else None
+        t_ref = arrays.get("t_at_refresh")
+        self._t_at_refresh = (np.asarray(t_ref, np.float64).copy()
+                              if t_ref is not None else None)
+        self.priority = {}
+        for name, d in (arrays.get("pri") or {}).items():
+            w_var = np.asarray(d["w_var"], np.float64)
+            snap = d.get("snapshot")
+            self.priority[name] = PriorityState(
+                num_blocks=int(w_var.shape[0]), w_var=w_var.copy(),
+                pruned_last=np.asarray(d["pruned_last"], bool).copy(),
+                snapshot=np.asarray(snap).copy() if snap is not None
+                else None)
+
     # -- T_avg maintenance (Sec. III-A) ----------------------------------
     def _t_ref(self, times: np.ndarray) -> float:
         if self.cfg.mode in ("semi", "mig"):
@@ -284,7 +324,12 @@ class SemiController:
                 g = gammas.get(i, 0.0)
                 L_gamma = g * self.num_blocks
                 # helpers shrink as the source set grows: e' − 1 = e − x
-                b_k = eq2_beta(L_gamma, self.costs, max(e - x_mig + 1, 2))
+                # "lossless" β-policy: every Eq.(3)-selected source sheds
+                # its FULL offset volume, so the residual resize bucket is
+                # 0 and the plan is output-preserving (serve default)
+                b_k = (1.0 if cfg.beta_policy == "lossless"
+                       else eq2_beta(L_gamma, self.costs,
+                                     max(e - x_mig + 1, 2)))
                 m_q = _quantized_shed(L_gamma * b_k)
                 # fit check: the source must KEEP >= 1 block after both its
                 # residual-resize bucket and the migrated shed — otherwise

@@ -79,6 +79,19 @@ class PatternImageStream:
             yield {"images": imgs, "labels": labels.astype(np.int32)}
 
 
+def skip_batches(stream_iter: Iterator[dict], n: int) -> Iterator[dict]:
+    """Fast-forward a stream iterator past its first ``n`` batches.
+
+    The streams are seeded and draw a fixed number of RNG variates per
+    batch, so discarding ``n`` draws reproduces EXACTLY the generator
+    state an uninterrupted run would have after ``n`` batches — this is
+    how a resumed trainer re-aligns its data position with the checkpoint
+    (cheap: the data is synthetic)."""
+    for _ in range(n):
+        next(stream_iter)
+    return stream_iter
+
+
 def patchify(images: np.ndarray, patch: int = 4) -> np.ndarray:
     """[B,H,W,C] -> [B, (H/p)*(W/p), p*p*C] patch embedding input."""
     b, h, w, c = images.shape

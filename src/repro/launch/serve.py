@@ -22,15 +22,24 @@ techniques run outside the training loop:
   a newly admitted request prefills while other slots keep decoding.
 * **Straggler-aware decode** — a χ-schedule (paper Sec. V-A) feeds the
   iteration-time model; measured-style per-rank decode times drive the
-  :class:`SemiController`, and a contended rank's γ-bucket ZERO-resizes
-  the TP decode matmuls via the controlled serve step (same
-  ``ControlContext`` machinery as training, including the Pallas
-  pruned-kernel family under ``use_kernel``). Executables are keyed by
-  plan signature in a :class:`PlanCompileCache`, so replanning swaps
-  between compiled steps instead of recompiling.
+  :class:`SemiController` through the unified
+  :class:`repro.control.ControlPlane` (the same plan-assembly /
+  compile-cache / dispatch implementation the trainer uses —
+  DESIGN_CONTROL.md). ``--control zero`` ZERO-resizes a contended rank's
+  TP decode matmuls (fast, lossy); ``--control semi`` opens the paper's
+  FULL mitigation space at serve time — Eq.(3) picks the straggler prefix
+  that migrates (multi-source, reduce-merged, **lossless**: decode
+  outputs are token-exact) and only the remainder resizes. Serving
+  defaults to the ``lossless`` β-policy, so a SEMI plan that fits entirely
+  in migration changes no tokens. Plans sized on a simulated group larger
+  than the real mesh are *projected* (``repro.control.projection``):
+  migration slots fold onto real ranks, resize buckets keep the
+  critical-path branch. Executables are keyed by the full plan signature
+  (shed counts included) in a :class:`PlanCompileCache`, so replanning
+  swaps between compiled steps instead of recompiling.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --slots 4 \
-        --requests 8 --prompt-len 8 --gen-len 24 [--control zero \
+        --requests 8 --prompt-len 8 --gen-len 24 [--control semi \
         --hetero contention --chi 4 --tp 4]
 """
 from __future__ import annotations
@@ -55,16 +64,12 @@ import jax.numpy as jnp
 from repro.checkpoint import store as ckpt_store
 from repro.config import (ShapeConfig, WorkloadControlConfig, get_config,
                           smoke_variant)
+from repro.control import ControlPlane
 from repro.core import hetero as hetero_lib
-from repro.core.controller import SemiController, work_fraction
-from repro.core.workload import PlanCompileCache, PlanStatic
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_small_mesh
 from repro.models import get_api
 from repro.sharding import use_mesh
-from repro.telemetry import (EstimatorConfig, RankTimer, StragglerEstimator,
-                             TraceWriter, capture_sample, measurement_rng,
-                             schedule_from_trace)
 
 
 # ---------------------------------------------------------------------------
@@ -121,10 +126,15 @@ class ServeControlConfig:
     """Workload control + straggler simulation knobs for the serve loop.
 
     mode "off" serves dense; "zero"/"semi" run the controller each decode
-    step on modeled per-rank times. ``sim_ranks`` sizes the simulated TP
-    group for the latency model (defaults to the real ``tp``); when it
-    differs from the real mesh, the straggler's γ-bucket is broadcast to
-    the real ranks (pure ZERO-resizing — migration needs sim == real).
+    step on modeled (or measured — ``times``) per-rank times. "semi"
+    emits the paper's full mitigation space: Eq.(3) selects the straggler
+    prefix that migrates losslessly (``max_sources`` concurrent slots,
+    ``beta_policy="lossless"`` so a fitting plan changes NO tokens) and
+    the rest ZERO-resizes. ``sim_ranks`` sizes the simulated TP group for
+    the latency model (defaults to the real ``tp``); when it differs from
+    the real mesh the plan is *projected* — migration slots fold onto
+    real ranks, resize buckets broadcast the critical-path branch
+    (repro.control.projection).
     """
 
     mode: str = "off"                  # off | zero | semi
@@ -134,7 +144,8 @@ class ServeControlConfig:
     period: int = 10
     sim_ranks: int = 0                 # 0 => real tp
     block_size: int = 8
-    max_sources: int = 0               # migration slots (semi mode only)
+    max_sources: int = 3               # migration slots (semi mode only)
+    beta_policy: str = "lossless"      # lossless | eq2 (semi mission split)
     use_kernel: bool = False
     seed: int = 0
     peak_flops: float = 5e9            # latency-model calibration (host CPU)
@@ -174,23 +185,16 @@ class ServeEngine:
         self.max_queue = max_queue
         dtype = jnp.dtype(param_dtype)
 
-        # ---- workload control wiring (mirrors launch/train.py) ----------
+        # ---- workload control wiring (the unified control plane) --------
         c = self.control
         wc = WorkloadControlConfig(
             enabled=c.mode != "off",
             mode=c.mode if c.mode != "off" else "zero",
             block_size=c.block_size,
             max_migration_sources=c.max_sources if c.mode == "semi" else 0,
+            beta_policy=c.beta_policy,
             use_kernel=c.use_kernel, times=c.times)
         self._wc = wc
-        control_static = None
-        if wc.enabled:
-            control_static = PlanStatic(
-                buckets=wc.gamma_buckets, block_size=wc.block_size,
-                tp_size=tp, imputation=wc.imputation)
-            if not steps_lib.control_scopes(self.cfg, control_static):
-                control_static = None          # arch exempt at this tp
-        self._control_static = control_static
 
         # slot clearing runs INSIDE the jitted step (clear is a regular
         # [num_slots] input, zeros on non-admission steps): recycled
@@ -241,72 +245,40 @@ class ServeEngine:
                             if static is not None else 0)
             return jitted, n_plan_slots, in_sh
 
-        self._step_cache = PlanCompileCache(_build)
-        self._base_step, self._base_plan_slots, in_sh = \
-            self._step_cache.get(control_static)
+        # ---- unified control plane (compile cache + controller +
+        # telemetry + sim->real dispatch; shared with launch/train.py) ----
+        self.sim_ranks = c.sim_ranks or tp
+        self.it_model = hetero_lib.iteration_model(
+            self.cfg, ShapeConfig("serve_model", 1, num_slots, "decode"),
+            max(self.sim_ranks, 1), peak_flops=c.peak_flops, mfu=c.mfu)
+        self.plane = ControlPlane(
+            self.cfg, wc, mesh=self.mesh, tp=tp, builder=_build,
+            it_model=self.it_model, sim_ranks=self.sim_ranks,
+            # the controller reasons in per-rank shard blocks (the paper's
+            # L_i) so migration sheds are sized to FIT a source's local
+            # shard; projected sheds are additionally clamped to the real
+            # mesh's shard when sim_ranks != tp
+            controller_blocks="local", clamp_sheds=True,
+            hetero_kind=c.hetero_kind, chi=c.chi, period=c.period,
+            contention_p=c.contention_p, seed=c.seed,
+            trace_in=c.trace_in, trace_out=c.trace_out,
+            trace_meta={"arch": arch, "engine": "serve", "mode": c.mode,
+                        "hetero": c.hetero_kind, "seed": c.seed},
+            measure_noise=c.measure_noise)
+        self._base_step, self._base_plan_slots, in_sh = self.plane.base
+        self.schedule = self.plane.schedule
+        self.controller = self.plane.controller
 
         # ---- params + slot cache ----------------------------------------
         params, _ = self.api.init(jax.random.PRNGKey(seed), self.cfg, dtype)
         if ckpt_dir:
             last = ckpt_store.latest_step(ckpt_dir)
             if last is not None:
-                params = ckpt_store.restore(ckpt_dir, last, params)
+                params = ckpt_store.load_params(ckpt_dir, last, params)
         self.params = jax.device_put(params, in_sh[0])
         self.cache = jax.device_put(
             self.api.init_cache(self.cfg, num_slots, max_len, dtype),
             in_sh[1])
-
-        # ---- straggler simulation + controller ---------------------------
-        self.sim_ranks = c.sim_ranks or tp
-        self.schedule = None
-        self.controller = None
-        self.it_model = hetero_lib.iteration_model(
-            self.cfg, ShapeConfig("serve_model", 1, num_slots, "decode"),
-            max(self.sim_ranks, 1), peak_flops=c.peak_flops, mfu=c.mfu)
-        if c.hetero_kind == "trace":
-            if not c.trace_in:
-                raise ValueError("hetero_kind='trace' needs trace_in "
-                                 "(a telemetry trace to replay)")
-            self.schedule = schedule_from_trace(c.trace_in,
-                                                num_ranks=self.sim_ranks)
-        elif c.hetero_kind != "none":
-            self.schedule = hetero_lib.HeteroSchedule(
-                num_ranks=self.sim_ranks, kind=c.hetero_kind,
-                chis=(c.chi,) if c.hetero_kind in ("static", "round_robin")
-                else (), period=c.period, contention_p=c.contention_p,
-                contention_chi=c.chi, seed=c.seed)
-        if control_static is not None:
-            sim_static = dataclasses.replace(control_static,
-                                             tp_size=self.sim_ranks)
-            sim_scopes = steps_lib.control_scopes(self.cfg, sim_static)
-            self._sim_nb = (list(sim_scopes.values())[0]
-                            if sim_scopes else 1)
-            self.controller = SemiController(
-                wc, self.sim_ranks, self.it_model,
-                self._sim_nb * self.sim_ranks, seed=c.seed)
-            self._scopes = steps_lib.control_scopes(self.cfg, control_static)
-            # serve never observes weight stats, so the identity keep-first
-            # order is the common case — build those arrays once
-            self._identity_pri = steps_lib.plan_pri_arrays(self._scopes,
-                                                           {}, tp)
-
-        # ---- telemetry: measurement -> estimation -> trace capture -------
-        # (sim_ranks scale: the measurement backend simulates what each
-        # TP rank of the modeled group would locally observe)
-        self._estimator = (StragglerEstimator(
-            self.it_model, self.sim_ranks, EstimatorConfig.from_control(wc))
-            if self.controller is not None and wc.times == "measured"
-            else None)
-        self._timer = RankTimer(mesh=self.mesh if tp > 1 else None,
-                                interval=wc.measure_interval)
-        self._trace_writer = (TraceWriter(
-            c.trace_out, self.sim_ranks,
-            matmul_time=self.it_model.matmul_time,
-            other_time=self.it_model.other_time,
-            meta={"arch": arch, "engine": "serve", "mode": c.mode,
-                  "hetero": c.hetero_kind, "seed": c.seed})
-            if c.trace_out else None)
-        self._measure_rng = measurement_rng(c.seed)
 
         # ---- host-side state ---------------------------------------------
         self.queue: collections.deque = collections.deque()
@@ -368,29 +340,6 @@ class ServeEngine:
         return admitted, clear
 
     # -- one decode step -----------------------------------------------------
-    def _plan_arrays(self, plan):
-        """Map a (possibly sim-scale) plan onto the real-mesh plan arrays."""
-        buckets = np.asarray(plan.dynamic.bucket_by_rank, np.int32)
-        sim_scale = self.sim_ranks != self.tp
-        if sim_scale:
-            # pure ZERO on the real ranks: the straggler's bucket IS the
-            # bulk-synchronous critical path, so execute its branch
-            buckets = np.full((self.tp,), int(buckets.max()), np.int32)
-            sheds = ()
-        else:
-            sheds = plan.static.mig_sheds
-        st_iter = dataclasses.replace(
-            self._control_static, mig_shed=tuple(sheds), mig_blocks=0)
-        step_fn, n_plan_slots, _ = self._step_cache.get(st_iter)
-        pri = (steps_lib.plan_pri_arrays(self._scopes,
-                                         plan.dynamic.pri_lists, self.tp)
-               if plan.dynamic.pri_lists else self._identity_pri)
-        mig = (np.full((max(n_plan_slots, 1),), -1, np.int32) if sim_scale
-               else plan.dynamic.mig_srcs(max(n_plan_slots, 1)))
-        arrays = {"bucket_by_rank": jnp.asarray(buckets),
-                  "mig_src": jnp.asarray(mig), "pri": pri}
-        return step_fn, arrays
-
     def step(self) -> Dict:
         """Admit, run one jitted decode step over all slots, harvest."""
         admitted, clear = self._admit()
@@ -404,56 +353,42 @@ class ServeEngine:
 
         # -- straggler model + plan selection -----------------------------
         step_idx = self.step_count
-        chis = (self.schedule.chi(step_idx) if self.schedule
-                else np.ones((self.sim_ranks,)))
+        chis = self.plane.chis(step_idx)
         dense_latency = self.it_model.step_time(chis, np.ones(self.sim_ranks))
         plan_report = None
         plan = None
+        proj = None
         frac = np.ones(self.sim_ranks)
         if self.controller is not None:
-            # full-workload-equivalent times (as in train.py): Eq.(1)
+            # full-workload-equivalent times (χ-oracle, or the estimator's
+            # closed-loop reconstruction in measured mode): Eq.(1)
             # measures the heterogeneity degree, not the mitigated runtime
-            if self._estimator is not None:
-                # closed loop: reconstruction from measured (mitigated)
-                # times of previous decode steps; neutral until warmed up
-                times = (self._estimator.full_times()
-                         if self._estimator.ready
-                         else self._estimator.nominal_times())
-            else:
-                times = self.it_model.times(chis, np.ones(self.sim_ranks))
-            plan, plan_report = self.controller.plan(times)
-            step_fn, plan_arrays = self._plan_arrays(plan)
-            frac = work_fraction(plan, self._sim_nb)
+            times = self.plane.controller_times(chis)
+            plan, plan_report = self.plane.decide(times)
+            # full SEMI dispatch: the projected plan carries resize
+            # buckets AND multi-source migration slots; the executable is
+            # keyed on the projected signature in the compile cache
+            step_fn, plan_arrays, proj = self.plane.dispatch(plan)
+            frac = self.plane.work_frac(plan)
             latency = self.it_model.step_time(chis, frac)
         else:
             step_fn, plan_arrays = self._base_step, None
             latency = dense_latency
 
-        self._timer.start()
+        self.plane.timer.start()
         with use_mesh(self.mesh):
             args = (self.params, self.cache, jnp.asarray(tokens),
                     jnp.asarray(pos), jnp.asarray(clear))
             if plan_arrays is not None:
                 args = args + (plan_arrays,)
             tok_ids, self.cache = step_fn(*args)
-        wall = self._timer.stop(tok_ids)
+        wall = self.plane.timer.stop(tok_ids)
         nxt = np.asarray(jax.device_get(tok_ids))
         if self.schedule is None:
             latency = dense_latency = wall       # no simulation: real time
 
         # -- telemetry: what each simulated rank measured THIS step -------
-        if self._estimator is not None or self._trace_writer is not None:
-            # the in-graph gather only applies when the measurement vector
-            # is rank-aligned with the real mesh (sim group == real tp)
-            sample = capture_sample(
-                self.it_model, chis, frac, step=step_idx, plan=plan,
-                wall=wall, rng=self._measure_rng,
-                noise=self.control.measure_noise,
-                timer=self._timer if self.sim_ranks == self.tp else None)
-            if self._estimator is not None:
-                self._estimator.observe(sample)
-            if self._trace_writer is not None:
-                self._trace_writer.append(sample)
+        self.plane.capture(chis, frac, step=step_idx, plan=plan, wall=wall)
 
         self.clock += latency
         self.step_count += 1
@@ -496,6 +431,17 @@ class ServeEngine:
         if plan_report is not None:
             report["stragglers"] = list(plan_report.stragglers)
             report["max_bucket"] = int(plan_report.bucket_by_rank.max())
+            # mig_srcs/mig_shed record what EXECUTED on the real mesh
+            # (post-projection); the controller's sim-scale intent lands
+            # under planned_* — at tp=1 the two legitimately differ
+            if proj is not None and proj.mig_srcs:
+                report["mig_srcs"] = [int(s) for s in proj.mig_srcs]
+                report["mig_shed"] = [int(m) for m in proj.mig_sheds]
+            if plan_report.mig_srcs:
+                report["planned_mig_srcs"] = [int(s)
+                                              for s in plan_report.mig_srcs]
+                report["planned_mig_shed"] = [int(m)
+                                              for m in plan_report.mig_shed]
         self.history.append(report)
         return report
 
@@ -527,21 +473,17 @@ class ServeEngine:
 
     def close(self) -> None:
         """Flush/close the telemetry trace (safe to call repeatedly)."""
-        if self._trace_writer is not None:
-            self._trace_writer.close()
+        self.plane.close()
 
     # -- introspection (tests / benchmarks) ----------------------------------
     def trace_counts(self) -> Dict[str, int]:
         """Executable-build telemetry: plan signatures compiled vs reused,
         and the base jitted step's trace-cache size (1 = never re-traced
         across arrivals/completions/recycling)."""
-        out = {"plan_compiles": self._step_cache.compile_count,
-               "plan_cache_hits": self._step_cache.hit_count,
-               "base_step_traces": self._base_step._cache_size()
-               if hasattr(self._base_step, "_cache_size") else -1}
-        if self._estimator is not None:
-            out["estimator_updates"] = self._estimator.updates
-            out["estimator_rejected"] = self._estimator.rejected_total
+        out = dict(self.plane.counts())
+        out["base_step_traces"] = (self._base_step._cache_size()
+                                   if hasattr(self._base_step, "_cache_size")
+                                   else -1)
         return out
 
 
@@ -587,7 +529,7 @@ class FixedBatchEngine:
         if ckpt_dir:
             last = ckpt_store.latest_step(ckpt_dir)
             if last is not None:
-                params = ckpt_store.restore(ckpt_dir, last, params)
+                params = ckpt_store.load_params(ckpt_dir, last, params)
         self.params = params
         self._step = jax.jit(
             lambda p, c, t, pos: self.api.decode_step(p, self.cfg, c, t, pos),
@@ -644,6 +586,13 @@ def main():
                              "trace"])
     ap.add_argument("--chi", type=float, default=4.0)
     ap.add_argument("--sim-ranks", type=int, default=0)
+    ap.add_argument("--max-sources", type=int, default=3,
+                    help="concurrent migration slots (semi mode)")
+    ap.add_argument("--beta-policy", default="lossless",
+                    choices=["lossless", "eq2"],
+                    help="semi mission split: lossless migrates the full "
+                         "offset volume (token-exact); eq2 balances "
+                         "migration vs resize cost per Eq.(2)")
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--times", default="modeled",
@@ -658,7 +607,8 @@ def main():
 
     control = ServeControlConfig(
         mode=args.control, hetero_kind=args.hetero, chi=args.chi,
-        sim_ranks=args.sim_ranks, use_kernel=args.use_kernel,
+        sim_ranks=args.sim_ranks, max_sources=args.max_sources,
+        beta_policy=args.beta_policy, use_kernel=args.use_kernel,
         times=args.times, trace_in=args.trace_in, trace_out=args.trace_out)
     eng = ServeEngine(args.arch, num_slots=args.slots,
                       max_len=args.prompt_len + args.gen_len, tp=args.tp,

@@ -8,6 +8,18 @@ the iteration-time model, whose per-rank times drive the controller; the
 *measured* wall-clock of the bulk-synchronous step is then modeled as the
 max over ranks (the real cluster behavior the technique removes).
 
+Control threading (plan assembly, signature-keyed compile cache,
+mitigation dispatch, telemetry) lives in the unified
+:class:`repro.control.ControlPlane` shared with the serve engine
+(DESIGN_CONTROL.md) — this driver owns only what is train-specific: the
+optimizer, the data pipeline, weight-statistics observation and the
+full-state checkpoint.
+
+Checkpoints carry the COMPLETE train state — params, AdamW moments +
+step, controller/estimator state and the data-pipeline position — so a
+crash-interrupted run resumed with ``--resume`` is bit-identical to an
+uninterrupted one (pinned by tests/test_system.py).
+
     PYTHONPATH=src python -m repro.launch.train --arch yi-6b --steps 50 \
         --tp 4 --control semi --hetero round_robin --chi 4
 """
@@ -30,26 +42,23 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro import checkpoint
 from repro.checkpoint import store as ckpt_store
 from repro.config import (ShapeConfig, TrainConfig, WorkloadControlConfig,
                           get_config, smoke_variant)
+from repro.control import ControlPlane
 from repro.core import hetero as hetero_lib
-from repro.core.controller import SemiController, work_fraction
-from repro.core.workload import PlanCompileCache, PlanStatic, WorkloadPlan
-from repro.data.pipeline import PatternImageStream, TokenTaskStream, patchify
+from repro.core.workload import WorkloadPlan
+from repro.data.pipeline import (PatternImageStream, TokenTaskStream,
+                                 patchify, skip_batches)
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_small_mesh
 from repro.models import get_api
 from repro.optim import adamw
 from repro.sharding import use_mesh
-from repro.telemetry import (EstimatorConfig, RankTimer, StragglerEstimator,
-                             TraceWriter, capture_sample, measurement_rng,
-                             schedule_from_trace)
 
 
-# shared with the serve engine (steps.py) so train/serve plan assembly
-# cannot diverge; re-exported here for backwards compatibility
+# shared with the serve engine (repro.control.scopes) so train/serve plan
+# assembly cannot diverge; re-exported here for backwards compatibility
 per_rank_pri = steps_lib.per_rank_pri
 
 
@@ -58,6 +67,12 @@ class TrainerState:
     params: object
     opt: object
     step: int = 0
+
+
+# batches eval_accuracy consumes per eval event — shared by the eval call
+# and the resume fast-forward, which must skip exactly this many per past
+# event for a resumed run to stay equivalent to an uninterrupted one
+EVAL_BATCHES = 4
 
 
 def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
@@ -75,7 +90,8 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                  times: str = "modeled",
                  trace_in: Optional[str] = None,
                  trace_out: Optional[str] = None,
-                 measure_noise: float = 0.0) -> Dict:
+                 measure_noise: float = 0.0,
+                 ckpt_every: int = 50) -> Dict:
     """Returns a summary dict (loss/acc curves, modeled step times)."""
     cfg = smoke_variant(get_config(arch))
     api = get_api(cfg)
@@ -92,12 +108,6 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
         # otherwise it caps the per-source shed count
         max_migration_sources=max_sources if mig_blocks > 0 else 0,
         migration_shed_cap=mig_blocks, use_kernel=use_kernel, times=times)
-    control_static = None
-    if control_cfg.enabled:
-        control_static = PlanStatic(
-            buckets=control_cfg.gamma_buckets,
-            block_size=control_cfg.block_size,
-            tp_size=tp, imputation=imputation)
 
     with use_mesh(mesh):
         # Plan-signature compile cache: the controller's multi-straggler
@@ -112,8 +122,21 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
             n_slots = max(1, static.num_sources) if static is not None else 0
             return jitted, n_slots, in_sh_
 
-        step_cache = PlanCompileCache(_build_step)
-        step_jit, plan_slots, in_sh = step_cache.get(control_static)
+        # -- unified control plane (plan assembly / compile cache /
+        # mitigation dispatch / telemetry, shared with the serve engine) --
+        it_model = hetero_lib.iteration_model(cfg, shape, max(tp, 1),
+                                              peak_flops=5e9, mfu=1.0)
+        plane = ControlPlane(
+            cfg, control_cfg, mesh=mesh, tp=tp, builder=_build_step,
+            it_model=it_model, controller_blocks="global",
+            hetero_kind=hetero_kind, chi=chi, period=hetero_period,
+            seed=seed, trace_in=trace_in, trace_out=trace_out,
+            trace_meta={"arch": arch, "hetero": hetero_kind,
+                        "control": control_mode, "seed": seed},
+            measure_noise=measure_noise)
+        step_jit, plan_slots, in_sh = plane.base
+        controller = plane.controller
+        scopes = plane.scopes
 
         # real init
         box = {}
@@ -125,12 +148,44 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
         params = jax.jit(init_fn, out_shardings=in_sh[0])()
         opt = jax.device_put(adamw.init(params), in_sh[1])
 
+        # -- resume: restore the FULL train state (params + optimizer
+        # moments/step + control-plane state + data position), so the
+        # resumed run is equivalent to never having stopped. Legacy
+        # params-only checkpoints restore what they have.
         start_step = 0
+        batches_drawn = 0
         if ckpt_dir and resume:
             last = ckpt_store.latest_step(ckpt_dir)
             if last is not None:
-                params = ckpt_store.restore(ckpt_dir, last, params, in_sh[0])
-                start_step = last
+                man = ckpt_store.read_manifest(ckpt_dir, last)
+                extra = man.get("extra", {})
+                if extra.get("layout") == ckpt_store.TRAIN_STATE_LAYOUT:
+                    params = ckpt_store.restore(ckpt_dir, last, params,
+                                                in_sh[0], prefix="params")
+                    opt = ckpt_store.restore(ckpt_dir, last, opt, in_sh[1],
+                                             prefix="opt")
+                    plane.load_state(
+                        ckpt_store.load_arrays(ckpt_dir, last, "plane"),
+                        extra.get("plane"))
+                    start_step = int(extra.get("train_step", last))
+                    batches_drawn = int(extra.get("data_batches", start_step))
+                else:
+                    params = ckpt_store.restore(ckpt_dir, last, params,
+                                                in_sh[0])
+                    start_step = last
+                    batches_drawn = last
+
+        def save_ckpt(step_now: int) -> None:
+            tree = {"params": params, "opt": opt}
+            plane_arrays = plane.state_arrays()
+            if plane_arrays:
+                tree["plane"] = plane_arrays
+            ckpt_store.save(ckpt_dir, step_now, tree, extra={
+                "layout": ckpt_store.TRAIN_STATE_LAYOUT,
+                "train_step": step_now,
+                "data_batches": batches_drawn,
+                "plane": plane.state_meta(),
+                "arch": arch, "tp": tp, "dp": dp, "seed": seed})
 
         # data
         if cfg.num_classes:
@@ -143,6 +198,12 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
             stream = iter(TokenTaskStream(cfg.vocab_size, seq, batch,
                                           seed=seed))
             eval_stream = None
+        if batches_drawn:
+            # re-align the synthetic streams with the checkpointed position
+            skip_batches(stream, batches_drawn)
+            if eval_stream is not None and eval_every:
+                skip_batches(eval_stream,
+                             EVAL_BATCHES * (start_step // eval_every))
 
         def make_batch():
             b = next(stream)
@@ -158,45 +219,6 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                         np.float32) * 0.02
             return b
 
-        # controller machinery
-        scopes = steps_lib.control_scopes(cfg, control_static) \
-            if control_static else {}
-        it_model = hetero_lib.iteration_model(cfg, shape, max(tp, 1),
-                                              peak_flops=5e9, mfu=1.0)
-        if hetero_kind == "trace":
-            if not trace_in:
-                raise ValueError("--hetero trace needs --trace-in PATH "
-                                 "(a telemetry trace to replay)")
-            schedule = schedule_from_trace(trace_in, num_ranks=tp)
-        else:
-            schedule = hetero_lib.HeteroSchedule(
-                num_ranks=tp, kind=hetero_kind,
-                chis=(chi,) if hetero_kind in ("static", "round_robin") else (),
-                period=hetero_period, contention_chi=chi, seed=seed)
-        controller = (SemiController(control_cfg, tp, it_model,
-                                     list(scopes.values())[0] * tp
-                                     if scopes else 1, seed=seed)
-                      if control_cfg.enabled and scopes else None)
-
-        # -- telemetry: measurement -> estimation -> trace capture --------
-        # (DESIGN_TELEMETRY.md; the closed loop that replaces the χ-oracle)
-        measured_mode = (controller is not None
-                         and control_cfg.times == "measured")
-        estimator = (StragglerEstimator(it_model, tp,
-                                        EstimatorConfig.from_control(
-                                            control_cfg))
-                     if measured_mode else None)
-        timer = RankTimer(mesh=mesh if tp > 1 else None,
-                          interval=control_cfg.measure_interval)
-        writer = (TraceWriter(trace_out, tp,
-                              matmul_time=it_model.matmul_time,
-                              other_time=it_model.other_time,
-                              meta={"arch": arch, "hetero": hetero_kind,
-                                    "control": control_mode, "seed": seed})
-                  if trace_out else None)
-        measure_rng = measurement_rng(seed)
-
-        nb_loc = list(scopes.values())[0] if scopes else 0
         work_frac = np.ones((tp,))
         history = {"loss": [], "acc": [], "modeled_step_s": [],
                    "gammas": [], "mig": [], "mig_shed": [],
@@ -226,11 +248,13 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                             jax.device_get(grp["attn"]["wo"])).mean(axis=0)
             return out
 
+        plan = None
         for it in range(start_step, steps):
-            chis = schedule.chi(it)
+            chis = plane.chis(it)
             plan_arrays = None
             report = None
-            step_fn, n_slots = step_jit, plan_slots
+            plan = None
+            step_fn = step_jit
             if controller is not None:
                 if force_gamma is not None:
                     # Figs. 5/6: force a uniform γ on EVERY rank
@@ -238,54 +262,35 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                                                      bucket_for_gamma)
                     b = bucket_for_gamma(force_gamma, control_cfg.gamma_buckets)
                     plan = WorkloadPlan(
-                        control_static,
+                        plane.static,
                         PlanDynamic(
                             bucket_by_rank=np.full((tp,), b, np.int32),
                             mig_src=np.array(-1, np.int32),
                             pri_lists=controller.pri_lists()))
                     report = None
                 else:
-                    # feed the controller FULL-workload-equivalent times:
-                    # a rank whose last iteration ran pruned would otherwise
-                    # stop looking slow and oscillate prune/unprune (the
-                    # paper's Eq. 1 measures the heterogeneity degree, not
-                    # the already-mitigated runtime)
-                    if estimator is not None:
-                        # closed loop: the estimator's reconstruction from
-                        # MEASURED (mitigated) times of previous steps; the
-                        # warmup gate holds the plan neutral until the
-                        # estimate is trustworthy
-                        times = (estimator.full_times() if estimator.ready
-                                 else estimator.nominal_times())
-                    else:
-                        times = it_model.times(chis, np.ones(tp))
-                    plan, report = controller.plan(times)
-                # per-scope priority lists: global keep-first permutations
-                # from the controller's stats, split per rank for row scopes
-                pri_all = steps_lib.plan_pri_arrays(
-                    scopes, plan.dynamic.pri_lists, tp)
-                # pick the executable for this plan's signature: migration
-                # shed counts are static, so multi-straggler replans swap
-                # between cached compiled steps instead of recompiling
-                st_iter = dataclasses.replace(
-                    control_static, mig_shed=plan.static.mig_sheds,
-                    mig_blocks=0)
-                step_fn, n_slots, _ = step_cache.get(st_iter)
-                plan_arrays = {
-                    "bucket_by_rank": jnp.asarray(plan.dynamic.bucket_by_rank),
-                    "mig_src": jnp.asarray(plan.dynamic.mig_srcs(n_slots)),
-                    "pri": pri_all,
-                }
-                work_frac = work_fraction(plan, nb_loc)
+                    # the controller consumes FULL-workload-equivalent
+                    # times — from the χ-oracle, or (measured mode) the
+                    # estimator's reconstruction of measured (mitigated)
+                    # times of previous steps (Eq. 1 measures the
+                    # heterogeneity degree, not the mitigated runtime)
+                    times = plane.controller_times(chis)
+                    plan, report = plane.decide(times)
+                # pick the executable for this plan's signature and
+                # assemble the dynamic plan arrays (projection is the
+                # identity here: the trainer simulates at real-mesh scale)
+                step_fn, plan_arrays, _ = plane.dispatch(plan)
+                work_frac = plane.work_frac(plan)
 
             b = make_batch()
+            batches_drawn += 1
             b = {k: jnp.asarray(v) for k, v in b.items()}
-            timer.start()
+            plane.timer.start()
             if plan_arrays is not None:
                 params, opt, metrics = step_fn(params, opt, b, plan_arrays)
             else:
                 params, opt, metrics = step_fn(params, opt, b)
-            wall = timer.stop(metrics)
+            wall = plane.timer.stop(metrics)
             metrics = jax.device_get(metrics)
 
             # modeled bulk-synchronous step time (the paper's RT metric)
@@ -295,16 +300,7 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
             # per-rank times under the ACTIVE plan (mitigated), gathered
             # across ranks once per control interval; feeds the estimator
             # and the trace
-            if estimator is not None or writer is not None:
-                sample = capture_sample(
-                    it_model, chis, work_frac, step=it,
-                    plan=(plan if controller is not None else None),
-                    wall=wall, rng=measure_rng, noise=measure_noise,
-                    timer=timer)
-                if estimator is not None:
-                    estimator.observe(sample)
-                if writer is not None:
-                    writer.append(sample)
+            plane.capture(chis, work_frac, step=it, plan=plan, wall=wall)
 
             history["loss"].append(float(metrics["loss"]))
             history["modeled_step_s"].append(modeled)
@@ -330,7 +326,7 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                 def predict(bb):
                     return api.forward(params, cfg,
                                        jnp.asarray(patchify(bb["images"])))
-                acc = eval_accuracy(predict, eval_stream, 4)
+                acc = eval_accuracy(predict, eval_stream, EVAL_BATCHES)
                 history["acc"].append(acc)
                 if not quiet:
                     print(f"  step {it+1}: eval acc {acc:.3f}")
@@ -339,25 +335,25 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                 print(f"step {it+1:4d} loss={metrics['loss']:.4f} "
                       f"wall={wall*1e3:.0f}ms modeled={modeled*1e3:.1f}ms")
 
-            if ckpt_dir and (it + 1) % 50 == 0:
-                ckpt_store.save(ckpt_dir, it + 1, params)
+            if ckpt_dir and (it + 1) % max(ckpt_every, 1) == 0 \
+                    and (it + 1) < steps:
+                save_ckpt(it + 1)
 
         if ckpt_dir:
-            ckpt_store.save(ckpt_dir, steps, params)
-        if writer is not None:
-            writer.close()
+            save_ckpt(steps)
+        plane.close()
         history["final_loss"] = history["loss"][-1] if history["loss"] else None
         history["mean_modeled_step_s"] = float(
             np.mean(history["modeled_step_s"])) if history["modeled_step_s"] else 0
         # compile-cache telemetry: distinct plan signatures built vs reused
-        history["plan_compiles"] = step_cache.compile_count
-        history["plan_cache_hits"] = step_cache.hit_count
+        history["plan_compiles"] = plane.cache.compile_count
+        history["plan_cache_hits"] = plane.cache.hit_count
         history["times_mode"] = control_cfg.times if control_cfg.enabled else "modeled"
-        if estimator is not None:
-            history["chi_hat"] = [float(c) for c in estimator.chi_hat]
-            history["estimator_rejected"] = estimator.rejected_total
-            history["rank_gathers"] = timer.gather_count
-        if writer is not None:
+        if plane.estimator is not None:
+            history["chi_hat"] = [float(c) for c in plane.estimator.chi_hat]
+            history["estimator_rejected"] = plane.estimator.rejected_total
+            history["rank_gathers"] = plane.timer.gather_count
+        if plane.writer is not None:
             history["trace_out"] = trace_out
         return history
 
@@ -398,6 +394,8 @@ def main():
     ap.add_argument("--selection", default="priority",
                     choices=["random", "priority", "priority_diff"])
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="steps between mid-run full-state checkpoints")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true",
@@ -415,7 +413,7 @@ def main():
         mig_blocks=args.mig_blocks, max_sources=args.max_sources,
         eval_every=args.eval_every, use_kernel=args.use_kernel,
         times=args.times, trace_in=args.trace_in, trace_out=args.trace_out,
-        measure_noise=args.measure_noise)
+        measure_noise=args.measure_noise, ckpt_every=args.ckpt_every)
     print(f"final loss: {hist['final_loss']:.4f}  "
           f"mean modeled step: {hist['mean_modeled_step_s']*1e3:.2f} ms")
     if args.out:

@@ -134,6 +134,33 @@ class StragglerEstimator:
         """Ingest a :class:`StepSample` (rank_times + its work_frac)."""
         return self.update(sample.rank_times, sample.work_frac)
 
+    # -- checkpoint / resume ------------------------------------------------
+    def state_arrays(self) -> dict:
+        """Full estimator state as numpy arrays, so a resumed run's χ̂
+        stream is bit-identical to an uninterrupted one."""
+        return {"buf": self._buf.copy(), "ptr": self._ptr.copy(),
+                "count": self._count.copy(), "rejects": self._rejects.copy(),
+                "chi_hat": self.chi_hat.copy(),
+                "counters": np.asarray([self.updates, self.rejected_total,
+                                        self.relocks], np.int64)}
+
+    def load_state_arrays(self, arrays: dict) -> None:
+        """Restore :meth:`state_arrays` output (shape-checked)."""
+        buf = np.asarray(arrays["buf"], np.float64)
+        if buf.shape != self._buf.shape:
+            raise ValueError(
+                f"estimator checkpoint window {buf.shape} does not match "
+                f"the configured ({self.num_ranks}, {self.cfg.window})")
+        self._buf = buf.copy()
+        self._ptr = np.asarray(arrays["ptr"], np.int64).copy()
+        self._count = np.asarray(arrays["count"], np.int64).copy()
+        self._rejects = np.asarray(arrays["rejects"], np.int64).copy()
+        self.chi_hat = np.asarray(arrays["chi_hat"], np.float64).copy()
+        updates, rejected, relocks = np.asarray(arrays["counters"], np.int64)
+        self.updates = int(updates)
+        self.rejected_total = int(rejected)
+        self.relocks = int(relocks)
+
     # -- what the controller consumes --------------------------------------
     @property
     def ready(self) -> bool:

@@ -1,0 +1,176 @@
+"""Checkpoint-store correctness: crash-safe writes, manifest validation,
+separator-safe flat keys, and the full-train-state layout helpers.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+
+def _tree():
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "nested": {"b": np.ones((4,), np.int32)}}
+
+
+class TestRoundTrip:
+    def test_basic_round_trip(self, tmp_path):
+        d = str(tmp_path)
+        tree = _tree()
+        store.save(d, 3, tree)
+        assert store.latest_step(d) == 3
+        like = {"w": np.zeros((2, 3), np.float32),
+                "nested": {"b": np.zeros((4,), np.int32)}}
+        out = store.restore(d, 3, like)
+        np.testing.assert_array_equal(out["w"], tree["w"])
+        np.testing.assert_array_equal(out["nested"]["b"], tree["nested"]["b"])
+
+    def test_slash_in_dict_key_round_trips(self, tmp_path):
+        """A dict key containing the path separator must survive save →
+        restore bit-exactly (the flat key escapes it)."""
+        d = str(tmp_path)
+        tree = {"scan/layer": {"w/down": np.full((3,), 7.0, np.float32)},
+                "back\\slash": np.full((2,), 3.0, np.float32)}
+        store.save(d, 1, tree)
+        like = {"scan/layer": {"w/down": np.zeros((3,), np.float32)},
+                "back\\slash": np.zeros((2,), np.float32)}
+        out = store.restore(d, 1, like)
+        np.testing.assert_array_equal(out["scan/layer"]["w/down"],
+                                      tree["scan/layer"]["w/down"])
+        np.testing.assert_array_equal(out["back\\slash"], tree["back\\slash"])
+
+    def test_slash_keys_do_not_collide(self, tmp_path):
+        """{"a": {"b/c": x}} and {"a/b": {"c": y}} are DIFFERENT pytrees:
+        unescaped joining would flatten both to the key "a/b/c" and one
+        leaf would silently overwrite the other."""
+        d = str(tmp_path)
+        tree = {"a": {"b/c": np.asarray([1.0], np.float32)},
+                "a/b": {"c": np.asarray([2.0], np.float32)}}
+        store.save(d, 1, tree)
+        man = store.read_manifest(d, 1)
+        assert len(man["keys"]) == 2           # no collision
+        out = store.restore(d, 1, {"a": {"b/c": np.zeros(1, np.float32)},
+                                   "a/b": {"c": np.zeros(1, np.float32)}})
+        assert float(out["a"]["b/c"][0]) == 1.0
+        assert float(out["a/b"]["c"][0]) == 2.0
+
+    def test_load_arrays_nested(self, tmp_path):
+        d = str(tmp_path)
+        store.save(d, 1, {"plane": {"est": {"chi": np.ones(4)}},
+                          "params": {"w": np.zeros(2)}})
+        out = store.load_arrays(d, 1, prefix="plane")
+        np.testing.assert_array_equal(out["est"]["chi"], np.ones(4))
+        assert "params" not in out
+
+
+class TestCrashSafety:
+    def test_latest_step_skips_manifestless_npz(self, tmp_path):
+        """An npz whose manifest never landed is a torn write — it must
+        not be selected as the resume point."""
+        d = str(tmp_path)
+        store.save(d, 1, _tree())
+        store.save(d, 5, _tree())
+        os.unlink(os.path.join(d, "ckpt_00000005.json"))  # simulate crash
+        assert store.latest_step(d) == 1
+
+    def test_no_tmp_litter_and_no_partial_files(self, tmp_path):
+        d = str(tmp_path)
+        store.save(d, 2, _tree())
+        names = sorted(os.listdir(d))
+        assert names == ["ckpt_00000002.json", "ckpt_00000002.npz"]
+
+    def test_overwrite_crash_cannot_pair_new_npz_with_old_manifest(
+            self, tmp_path, monkeypatch):
+        """Re-saving an existing step retracts the old commit marker
+        FIRST: a crash after the new npz lands but before its manifest
+        must leave a skipped orphan, never run B's arrays silently paired
+        with run A's manifest/extra state."""
+        d = str(tmp_path)
+        store.save(d, 1, {"w": np.zeros((2,), np.float32)},
+                   extra={"run": "A"})
+        orig = store._atomic_write
+
+        def crash_on_manifest(path, fn):
+            if path.endswith(".json"):
+                raise RuntimeError("crash before manifest commit")
+            return orig(path, fn)
+
+        monkeypatch.setattr(store, "_atomic_write", crash_on_manifest)
+        with pytest.raises(RuntimeError, match="crash"):
+            store.save(d, 1, {"w": np.ones((2,), np.float32)},
+                       extra={"run": "B"})
+        assert store.latest_step(d) is None     # torn write, not run A's
+
+    def test_restore_closes_npz_handle(self, tmp_path):
+        """restore() must not leak the npz file handle."""
+        d = str(tmp_path)
+        store.save(d, 1, _tree())
+        like = {"w": np.zeros((2, 3), np.float32),
+                "nested": {"b": np.zeros((4,), np.int32)}}
+        fd_dir = "/proc/self/fd"
+        if not os.path.isdir(fd_dir):
+            pytest.skip("no /proc fd introspection on this platform")
+        before = len(os.listdir(fd_dir))
+        for _ in range(5):
+            store.restore(d, 1, like)
+        assert len(os.listdir(fd_dir)) <= before + 1
+
+
+class TestValidation:
+    def test_missing_leaf_is_actionable(self, tmp_path):
+        d = str(tmp_path)
+        store.save(d, 1, {"w": np.zeros((2,), np.float32)})
+        with pytest.raises(KeyError, match="missing leaf"):
+            store.restore(d, 1, {"w": np.zeros((2,), np.float32),
+                                 "extra": np.zeros((1,), np.float32)})
+
+    def test_shape_mismatch_is_actionable(self, tmp_path):
+        d = str(tmp_path)
+        store.save(d, 1, {"w": np.zeros((2, 3), np.float32)})
+        with pytest.raises(ValueError, match="shape mismatch"):
+            store.restore(d, 1, {"w": np.zeros((3, 2), np.float32)})
+
+    def test_manifest_npz_dtype_disagreement(self, tmp_path):
+        """A checkpoint pair whose manifest and npz disagree is corrupt
+        and must be rejected, not silently cast."""
+        d = str(tmp_path)
+        store.save(d, 1, {"w": np.zeros((2,), np.float32)})
+        mpath = os.path.join(d, "ckpt_00000001.json")
+        man = json.load(open(mpath))
+        man["dtypes"]["w"] = "float64"
+        with open(mpath, "w") as f:
+            json.dump(man, f)
+        with pytest.raises(ValueError, match="dtype mismatch"):
+            store.restore(d, 1, {"w": np.zeros((2,), np.float32)})
+
+    def test_missing_manifest_is_actionable(self, tmp_path):
+        d = str(tmp_path)
+        store.save(d, 1, _tree())
+        os.unlink(os.path.join(d, "ckpt_00000001.json"))
+        with pytest.raises(FileNotFoundError, match="no manifest"):
+            store.restore(d, 1, _tree())
+
+
+class TestTrainStateLayout:
+    def test_prefix_restore_and_load_params(self, tmp_path):
+        d = str(tmp_path)
+        params = {"w": np.full((2,), 5.0, np.float32)}
+        opt = {"mu": {"w": np.full((2,), 0.5, np.float32)}}
+        store.save(d, 7, {"params": params, "opt": opt},
+                   extra={"layout": store.TRAIN_STATE_LAYOUT,
+                          "train_step": 7})
+        like = {"w": np.zeros((2,), np.float32)}
+        out = store.restore(d, 7, like, prefix="params")
+        np.testing.assert_array_equal(out["w"], params["w"])
+        # load_params dispatches on the manifest layout tag
+        out2 = store.load_params(d, 7, like)
+        np.testing.assert_array_equal(out2["w"], params["w"])
+
+    def test_load_params_legacy_layout(self, tmp_path):
+        d = str(tmp_path)
+        params = {"w": np.full((3,), 2.0, np.float32)}
+        store.save(d, 2, params)                 # params-only, no layout tag
+        out = store.load_params(d, 2, {"w": np.zeros((3,), np.float32)})
+        np.testing.assert_array_equal(out["w"], params["w"])

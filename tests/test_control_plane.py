@@ -1,0 +1,178 @@
+"""Unit tests for the unified control plane (repro.control).
+
+Covers: sim→real plan projection (the removal of the serve engine's
+"migration needs sim == real" restriction), the lossless β-policy, and
+the control-plane checkpoint state round-trip that backs crash-safe
+resume.
+"""
+import numpy as np
+import pytest
+
+from repro.config import WorkloadControlConfig, get_config, smoke_variant
+from repro.control import ControlPlane, make_schedule, project_plan
+from repro.core.controller import SemiController
+from repro.core.hetero import IterationModel
+from repro.core.workload import PlanDynamic, PlanStatic, WorkloadPlan
+from repro.launch.mesh import make_small_mesh
+
+
+def _plan(tp, buckets, srcs, sheds):
+    static = PlanStatic(tp_size=tp, block_size=8, mig_shed=tuple(sheds))
+    dyn = PlanDynamic(
+        bucket_by_rank=np.asarray(buckets, np.int32),
+        mig_src=(np.asarray(srcs, np.int32) if len(srcs)
+                 else np.array(-1, np.int32)))
+    return WorkloadPlan(static, dyn)
+
+
+class TestProjection:
+    def test_identity_when_sim_equals_real(self):
+        plan = _plan(4, [0, 2, 0, 0], [1], [6])
+        proj = project_plan(plan, sim_ranks=4, tp=4)
+        assert not proj.folded
+        np.testing.assert_array_equal(proj.bucket_by_rank, [0, 2, 0, 0])
+        assert proj.mig_srcs == (1,)
+        assert proj.mig_sheds == (6,)
+
+    def test_folded_buckets_broadcast_critical_path(self):
+        """Resize buckets keep the previous sim-scale semantics: every
+        real rank executes the slowest sim rank's branch."""
+        plan = _plan(8, [0, 0, 3, 0, 1, 0, 0, 0], [], [])
+        proj = project_plan(plan, sim_ranks=8, tp=4)
+        assert proj.folded
+        np.testing.assert_array_equal(proj.bucket_by_rank, [3, 3, 3, 3])
+        assert proj.mig_sheds == ()
+
+    def test_folded_migration_slots_map_mod_tp(self):
+        """Sim source 6 folds onto real rank 6 % 4 = 2; the shed count
+        survives (this is the restriction removal)."""
+        plan = _plan(8, [0] * 8, [6], [5])
+        proj = project_plan(plan, sim_ranks=8, tp=4)
+        assert proj.mig_srcs == (2,)
+        assert proj.mig_sheds == (5,)
+        np.testing.assert_array_equal(proj.bucket_by_rank, [0, 0, 0, 0])
+
+    def test_folded_collisions_keep_heaviest(self):
+        """Two sim sources folding onto the same real rank keep only the
+        first (canonical shed-descending order = heaviest)."""
+        plan = _plan(8, [0] * 8, [1, 5, 2], [7, 6, 4])   # 1%4 == 5%4 == 1
+        proj = project_plan(plan, sim_ranks=8, tp=4)
+        assert proj.mig_srcs == (1, 2)
+        assert proj.mig_sheds == (7, 4)
+
+    def test_folded_keeps_at_least_one_helper(self):
+        plan = _plan(8, [0] * 8, [0, 1, 2, 3], [4, 4, 4, 4])
+        proj = project_plan(plan, sim_ranks=8, tp=4)
+        assert len(proj.mig_srcs) <= 3               # tp - 1 helpers floor
+
+    def test_tp1_folds_to_no_migration(self):
+        plan = _plan(8, [0] * 8, [3], [5])
+        proj = project_plan(plan, sim_ranks=8, tp=1)
+        assert proj.mig_srcs == ()
+        assert proj.mig_sheds == ()
+
+    def test_shed_clamped_to_real_shard(self):
+        """A sim-scale shed larger than the real local shard is clamped so
+        the source keeps >= 1 block."""
+        plan = _plan(8, [0] * 8, [5], [14])
+        proj = project_plan(plan, sim_ranks=8, tp=4, real_nb=8)
+        assert proj.mig_sheds == (7,)
+
+
+class TestLosslessBetaPolicy:
+    def _controller(self, policy):
+        cfg = WorkloadControlConfig(enabled=True, mode="semi", block_size=8,
+                                    max_migration_sources=3,
+                                    beta_policy=policy)
+        model = IterationModel(matmul_time=1.0, other_time=0.15)
+        return SemiController(cfg, 8, model, num_blocks=16, seed=0)
+
+    def test_lossless_single_straggler_pure_migration(self):
+        """With β forced to 1, the Eq.(3)-selected straggler sheds its
+        FULL offset volume: residual resize bucket 0 ⇒ output-preserving
+        plan."""
+        ctl = self._controller("lossless")
+        times = np.array([4.15] + [1.15] * 7)
+        plan, rep = ctl.plan(times)
+        assert rep.mig_srcs == (0,)
+        assert rep.betas == (1.0,)
+        assert int(plan.dynamic.bucket_by_rank.max()) == 0   # no resize
+        assert sum(rep.mig_shed) > 0
+
+    def test_unknown_beta_policy_rejected(self):
+        """A typo'd policy must fail loudly, not silently fall through to
+        the lossy eq2 split."""
+        with pytest.raises(ValueError, match="beta_policy"):
+            WorkloadControlConfig(beta_policy="loss-less")
+
+    def test_eq2_default_unchanged(self):
+        """The training default still splits per Eq.(2) (β < 1 leaves a
+        residual resize bucket when migration is not free)."""
+        ctl = self._controller("eq2")
+        times = np.array([4.15] + [1.15] * 7)
+        _, rep = ctl.plan(times)
+        assert rep.betas and rep.betas[0] <= 1.0
+
+
+class TestControlPlaneState:
+    def _plane(self, seed=0):
+        cfg = smoke_variant(get_config("yi-6b"))
+        wc = WorkloadControlConfig(enabled=True, mode="semi", block_size=8,
+                                   max_migration_sources=3,
+                                   times="measured")
+        mesh = make_small_mesh(1, 1)
+        model = IterationModel(matmul_time=1.0, other_time=0.15)
+        builder = (lambda static:
+                   (object(),
+                    max(1, static.num_sources) if static is not None else 0,
+                    None))
+        return ControlPlane(cfg, wc, mesh=mesh, tp=1, builder=builder,
+                            it_model=model, sim_ranks=8,
+                            hetero_kind="contention", chi=4.0, seed=seed)
+
+    def test_state_round_trip_resumes_identically(self):
+        """Drive a plane N steps, checkpoint, restore into a FRESH plane,
+        and verify the next decisions + estimator state are identical to
+        continuing uninterrupted."""
+        a = self._plane()
+        for step in range(6):
+            chis = a.chis(step)
+            plan, _ = a.decide(a.controller_times(chis))
+            a.capture(chis, a.work_frac(plan), step=step, plan=plan,
+                      wall=0.0)
+        arrays, meta = a.state_arrays(), a.state_meta()
+
+        b = self._plane()
+        b.load_state(arrays, meta)
+        np.testing.assert_array_equal(a.estimator.chi_hat,
+                                      b.estimator.chi_hat)
+        assert a.estimator.updates == b.estimator.updates
+        for step in range(6, 12):
+            chis_a, chis_b = a.chis(step), b.chis(step)
+            np.testing.assert_array_equal(chis_a, chis_b)
+            plan_a, rep_a = a.decide(a.controller_times(chis_a))
+            plan_b, rep_b = b.decide(b.controller_times(chis_b))
+            assert plan_a.static.signature_str() == \
+                plan_b.static.signature_str()
+            np.testing.assert_array_equal(plan_a.dynamic.bucket_by_rank,
+                                          plan_b.dynamic.bucket_by_rank)
+            assert rep_a.mig_srcs == rep_b.mig_srcs
+            a.capture(chis_a, a.work_frac(plan_a), step=step, plan=plan_a,
+                      wall=0.0)
+            b.capture(chis_b, b.work_frac(plan_b), step=step, plan=plan_b,
+                      wall=0.0)
+
+    def test_state_meta_is_json_round_trippable(self):
+        import json
+        a = self._plane()
+        meta = json.loads(json.dumps(a.state_meta()))
+        b = self._plane(seed=1)
+        b.load_state({}, meta)
+        # RNG streams now aligned with plane a
+        assert (b.measure_rng.bit_generator.state
+                == a.measure_rng.bit_generator.state)
+
+    def test_make_schedule_none_and_trace_error(self):
+        assert make_schedule("none", 4) is None
+        with pytest.raises(ValueError, match="trace_in"):
+            make_schedule("trace", 4)

@@ -47,6 +47,46 @@ def test_trainer_checkpoint_resume(tmp_path):
     assert len(hist["loss"]) == 2    # resumed from step 4
 
 
+def test_trainer_resume_equivalence(tmp_path):
+    """Crash-safe full-state checkpointing: train N steps uninterrupted
+    vs. train k, 'crash', restore, train N−k — the resumed run must be
+    BIT-IDENTICAL (loss trajectory, plan signatures, estimator state),
+    which requires params + AdamW moments/step + controller/estimator
+    state + the data-pipeline position to all round-trip."""
+    from repro.launch.train import run_training
+    kw = dict(tp=1, batch=2, seq=16, control_mode="zero",
+              hetero_kind="static", chi=4.0, times="measured",
+              quiet=True, log_every=1000)
+    d = str(tmp_path / "ck")
+    full = run_training("yi-6b", steps=8, **kw)
+    run_training("yi-6b", steps=4, ckpt_dir=d, **kw)
+    resumed = run_training("yi-6b", steps=8, ckpt_dir=d, resume=True, **kw)
+    assert len(resumed["loss"]) == 4
+    assert resumed["loss"] == full["loss"][4:]           # bit-identical
+    assert resumed["signatures"] == full["signatures"][4:]
+    # the estimator's χ̂ stream continued exactly where it left off
+    assert resumed["chi_hat"] == full["chi_hat"]
+
+
+def test_trainer_legacy_params_only_checkpoint_still_loads(tmp_path):
+    """A pre-full-state checkpoint (params only, no layout tag) must keep
+    restoring: params load, optimizer restarts fresh."""
+    import numpy as np
+    from repro.checkpoint import store
+    from repro.launch.train import run_training
+    d = str(tmp_path / "ck")
+    h1 = run_training("yi-6b", steps=3, tp=1, batch=2, seq=16, ckpt_dir=d,
+                      control_mode="off", quiet=True, log_every=1000)
+    # rewrite the checkpoint as the LEGACY layout (params subtree, no tag)
+    params = store.load_arrays(d, 3, prefix="params")
+    store.save(d, 3, params)
+    h2 = run_training("yi-6b", steps=5, tp=1, batch=2, seq=16, ckpt_dir=d,
+                      resume=True, control_mode="off", quiet=True,
+                      log_every=1000)
+    assert len(h2["loss"]) == 2
+    assert np.isfinite(h2["loss"]).all()
+
+
 def test_semi_control_balances_modeled_time():
     """The core paper claim, end-to-end: with a χ=4 straggler, ZERO keeps
     the modeled bulk-synchronous step time well under the uncontrolled run
