@@ -32,14 +32,21 @@ from benchmarks.common import (OUT_DIR, PAPER_E, csv_row, is_dry_run,
                                paper_scale_model, run_subprocess_py,
                                save_bench_json)
 from repro.telemetry import StepSample, TraceWriter
-from repro.core.controller import (eq3_migration_prefix,
+from repro.config import WorkloadControlConfig
+from repro.core.controller import (SemiController, eq3_migration_prefix,
                                    pretest_cost_functions, work_fraction)
+from repro.core.geometry import geometry_from_chi
 from repro.core.workload import (DEFAULT_BUCKETS, PlanDynamic, PlanStatic,
                                  WorkloadPlan, bucket_for_gamma,
                                  quantize_shed)
 
 NUM_BLOCKS = 64
 STRAGGLER_CHIS = (8.0, 6.0, 4.0, 2.0)
+
+# the geometry leg's scenario: a PERSISTENT 2x speed ratio on two ranks
+# (the static-geometry sweet case — the imbalance never moves, so a
+# χ-seeded uneven split absorbs it once instead of re-migrating per step)
+GEO_CHIS = (2.0, 2.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0)
 
 
 def plan_for_lambda(lam: int) -> "tuple[WorkloadPlan, list]":
@@ -106,6 +113,110 @@ def acc_model(mean_gamma: float) -> float:
         accs = np.array([pts[g] for g in gs])
         return float(np.interp(mean_gamma, gs, accs))
     return 1.0 - 0.25 * mean_gamma       # fallback linear loss model
+
+
+def geometry_leg() -> dict:
+    """Uneven-STATIC + SEMI-residual vs equal-static + full-dynamic SEMI.
+
+    Both configs run the same lossless SEMI controller on the same
+    persistent 2x schedule (GEO_CHIS). Config A (equal shards) must
+    re-migrate the stragglers' excess EVERY step and pays the Φ1
+    collective cost each time; config B seeds the static split from χ
+    (geometry_from_chi), the controller plans only the residual — which
+    the deadband absorbs — so steady-state steps carry no migration
+    traffic. The modeled step times come from the SAME work_fraction /
+    step_time path the trainer uses; a regression gate in main() requires
+    B < A.
+    """
+    m = paper_scale_model()
+    costs = pretest_cost_functions(m, NUM_BLOCKS, e=PAPER_E)
+    chi = np.asarray(GEO_CHIS)
+    wc = WorkloadControlConfig(enabled=True, mode="semi", block_size=8,
+                               max_migration_sources=3,
+                               beta_policy="lossless")
+
+    # -- A: equal static shards, full-dynamic SEMI every step -------------
+    ctl_a = SemiController(wc, PAPER_E, m, NUM_BLOCKS)
+    plan_a, _ = ctl_a.plan(m.times(chi, np.ones(PAPER_E)))
+    vol_a = float(sum(plan_a.static.mig_sheds))
+    t_a = m.step_time(chi, work_fraction(plan_a, NUM_BLOCKS)) \
+        + (costs.phi1(vol_a) if vol_a else 0.0)
+
+    # -- B: χ-seeded uneven static shards, SEMI plans the residual --------
+    geo = geometry_from_chi(chi, NUM_BLOCKS * PAPER_E, 8)
+    base = np.asarray(geo.sizes) / np.mean(geo.sizes)
+    ctl_b = SemiController(wc, PAPER_E, m,
+                           int(round(float(np.mean(geo.sizes)))),
+                           workloads=np.asarray(geo.sizes, np.float64))
+    plan_b, report_b = ctl_b.plan(m.times(chi, base))
+    vol_b = float(sum(plan_b.static.mig_sheds))
+    t_b = m.step_time(chi, work_fraction(plan_b, NUM_BLOCKS)) \
+        + (costs.phi1(vol_b) if vol_b else 0.0)
+
+    return {"chis": list(GEO_CHIS),
+            "geometry": list(geo.sizes),
+            "equal_dynamic": {"step_s": t_a, "mig_volume": vol_a,
+                              "signature": plan_a.static.signature_str()},
+            "geometry_residual": {"step_s": t_b, "mig_volume": vol_b,
+                                  "residual_stragglers":
+                                      list(report_b.stragglers),
+                                  "signature": plan_b.static.signature_str()},
+            "speedup": t_a / t_b if t_b else 0.0}
+
+
+GEO_DATAFLOW_CODE = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.layers.tp_linear import ControlContext, controlled_ffn
+from repro.core.workload import PlanStatic
+from repro.core.geometry import ShardGeometry
+from repro.core import geometry as geom
+from repro.control.scopes import per_rank_pri
+e, B, S, d, block = {e}, 2, 8, {d}, 8
+geo = ShardGeometry(sizes={sizes}, block=block)
+H = geo.width
+mesh = Mesh(np.array(jax.devices()).reshape(1, e), ("data", "model"))
+act = jax.nn.silu
+rng = np.random.default_rng(0)
+x = jnp.array(rng.standard_normal((B, S, d)), jnp.float32)
+wg = jnp.array(rng.standard_normal((d, H))*.1, jnp.float32)
+wu = jnp.array(rng.standard_normal((d, H))*.1, jnp.float32)
+wd = jnp.array(rng.standard_normal((H, d))*.1, jnp.float32)
+pp = geom.expand_ffn_params({{"w_up": np.asarray(wu),
+                              "w_gate": np.asarray(wg),
+                              "w_down": np.asarray(wd)}}, geo)
+st = PlanStatic(buckets=(0.0, 0.25, 0.5), block_size=block, mig_blocks=1,
+                tp_size=e, geometry=geo.sizes)
+pri = jnp.asarray(per_rank_pri(np.arange(geo.total_blocks), e,
+                               geo.max_blocks, geometry=geo.sizes))
+ref = (act(x @ wg) * (x @ wu)) @ wd
+out = {{}}
+for tag, src in (("neutral", -1), ("migrating", int(np.argmin(geo.sizes)))):
+    ctx = ControlContext(mesh=mesh, axis="model", static=st,
+                         bucket_by_rank=jnp.zeros((e,), jnp.int32),
+                         mig_src=jnp.array(src, jnp.int32),
+                         pri={{"ffn": pri}})
+    y = controlled_ffn(x, jnp.asarray(pp["w_up"]), jnp.asarray(pp["w_down"]),
+                       ctx, "ffn", act, w_gate=jnp.asarray(pp["w_gate"]))
+    out[tag] = float(np.abs(np.asarray(y) - ref).max())
+import json
+print("RESULT" + json.dumps(out))
+"""
+
+
+def geometry_dataflow_check() -> dict:
+    """Execute an uneven geometry (min-slice rank included) on a host
+    mesh: padded ragged layout must match the canonical dense oracle,
+    neutral and under lossless migration from the smallest rank."""
+    dry = is_dry_run()
+    e = 4
+    sizes = (2, 6, 4, 4) if dry else (4, 12, 8, 8)
+    code = GEO_DATAFLOW_CODE.format(e=e, d=16 if dry else 32,
+                                    sizes=repr(sizes))
+    outp = run_subprocess_py(code, devices=e, timeout=300 if dry else 600)
+    payload = json.loads(outp.split("RESULT", 1)[1])
+    payload["sizes"] = list(sizes)
+    return payload
 
 
 REAL_DATAFLOW_CODE = """
@@ -267,11 +378,40 @@ def main() -> list:
     rows.append(csv_row("fig11_trace", 0.0,
                         f"trace={os.path.relpath(trace_path, OUT_DIR)}"))
 
+    # -- ragged shard geometry leg (DESIGN_SHARDING.md) -------------------
+    geo_leg = geometry_leg()
+    t_a = geo_leg["equal_dynamic"]["step_s"]
+    t_b = geo_leg["geometry_residual"]["step_s"]
+    rows.append(csv_row("fig11_geometry_equal_dynamic", t_a * 1e6,
+                        f"mig_volume={geo_leg['equal_dynamic']['mig_volume']}"))
+    rows.append(csv_row(
+        "fig11_geometry_residual", t_b * 1e6,
+        f"geometry={geo_leg['geometry']},"
+        f"mig_volume={geo_leg['geometry_residual']['mig_volume']},"
+        f"speedup={geo_leg['speedup']:.3f}"))
+    geo_real = geometry_dataflow_check()
+    rows.append(csv_row(
+        "fig11_geometry_dataflow", 0.0,
+        f"sizes={geo_real['sizes']},neutral_err={geo_real['neutral']:.2e},"
+        f"migrating_err={geo_real['migrating']:.2e}"))
+    # regression gates: the χ-seeded static split must beat per-step
+    # dynamic migration under the persistent schedule, and the padded
+    # ragged dataflow must match the canonical dense oracle
+    if not t_b < t_a:
+        raise RuntimeError(
+            f"geometry leg regression: uneven-static+residual step "
+            f"{t_b:.6f}s is not faster than equal+full-dynamic {t_a:.6f}s")
+    if max(geo_real["neutral"], geo_real["migrating"]) > 2e-4:
+        raise RuntimeError(
+            f"geometry dataflow regression: max err vs dense oracle "
+            f"{geo_real} exceeds 2e-4")
+
     config = {"e": PAPER_E, "chis": list(STRAGGLER_CHIS),
               "num_blocks": NUM_BLOCKS, "lambdas": list(range(5)),
-              "dry_run": is_dry_run()}
+              "geo_chis": list(GEO_CHIS), "dry_run": is_dry_run()}
     metrics = {"sweep": table, "eq3_pick": x, "best_lambda": best_lam,
                "real_dataflow": real,
+               "geometry_leg": geo_leg, "geometry_dataflow": geo_real,
                "trace": os.path.relpath(trace_path, OUT_DIR)}
     save_bench_json("multi_straggler", config, metrics, trajectory=True)
     return rows

@@ -39,7 +39,8 @@ import numpy as np
 
 from benchmarks.common import (OUT_DIR, csv_row, is_dry_run,
                                run_subprocess_py, save_bench_json)
-from repro.launch.serve import (Request, ServeControlConfig, ServeEngine,
+from repro.control import ControlConfig
+from repro.launch.serve import (Request, ServeEngine,
                                 latency_percentiles)
 
 ARCH = "yi-6b"
@@ -66,7 +67,7 @@ def make_trace(vocab: int, n_requests: int, prompt_len: int, gen_len: int,
 def run_engine(mode: str, *, num_slots: int, max_len: int, trace_args,
                use_kernel: bool = False, seed: int = 0,
                trace_out: str = None):
-    control = ServeControlConfig(
+    control = ControlConfig(
         mode=mode, hetero_kind="contention", chi=CHI,
         contention_p=CONTENTION_P, sim_ranks=SIM_RANKS,
         use_kernel=use_kernel, seed=seed, trace_out=trace_out)
@@ -87,7 +88,8 @@ def run_engine(mode: str, *, num_slots: int, max_len: int, trace_args,
 _SEMI_CHILD = """
 import json
 import numpy as np
-from repro.launch.serve import (Request, ServeControlConfig, ServeEngine,
+from repro.control import ControlConfig
+from repro.launch.serve import (Request, ServeEngine,
                                 latency_percentiles)
 from benchmarks.serve_bench import (ARCH, CHI, CONTENTION_P, SEMI_TP,
                                     SIM_RANKS, make_trace)
@@ -95,7 +97,7 @@ from benchmarks.serve_bench import (ARCH, CHI, CONTENTION_P, SEMI_TP,
 p = json.loads(__SEMI_PARAMS__)
 
 def run(mode, hetero):
-    control = ServeControlConfig(
+    control = ControlConfig(
         mode=mode, hetero_kind=hetero, chi=CHI, contention_p=CONTENTION_P,
         sim_ranks=SIM_RANKS, max_sources=SIM_RANKS - 1, seed=p["seed"])
     eng = ServeEngine(ARCH, num_slots=p["num_slots"], max_len=p["max_len"],

@@ -17,8 +17,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np                                    # noqa: E402
 
+from repro.control import ControlConfig               # noqa: E402
 from repro.launch.serve import (FixedBatchEngine, Request,   # noqa: E402
-                                ServeControlConfig, ServeEngine,
+                                ServeEngine,
                                 latency_percentiles)
 
 
@@ -45,7 +46,7 @@ def serve(arch: str, num_slots=2, max_len=16):
 
 def serve_controlled(arch: str):
     """Same engine under χ=4 contention with ZERO-resized decode."""
-    control = ServeControlConfig(mode="zero", hetero_kind="contention",
+    control = ControlConfig(mode="zero", hetero_kind="contention",
                                  chi=4.0, contention_p=0.15, sim_ranks=8)
     eng = ServeEngine(arch, num_slots=2, max_len=16, seed=0, control=control)
     rng = np.random.default_rng(0)

@@ -4,6 +4,7 @@ One implementation of plan assembly, signature-keyed compile caching,
 mitigation dispatch (resize + multi-source migration, projected onto the
 real mesh) and control telemetry, shared by the train and serve drivers.
 """
+from repro.control.config import ControlConfig  # noqa: F401
 from repro.control.plane import ControlPlane, make_schedule  # noqa: F401
 from repro.control.projection import ProjectedPlan, project_plan  # noqa: F401
 from repro.control.scopes import (  # noqa: F401
@@ -11,7 +12,8 @@ from repro.control.scopes import (  # noqa: F401
     plan_pri_arrays, plan_specs, scope_block_table)
 
 __all__ = [
-    "ControlPlane", "make_schedule", "ProjectedPlan", "project_plan",
+    "ControlConfig", "ControlPlane", "make_schedule", "ProjectedPlan",
+    "project_plan",
     "SCOPE_LAYOUT", "control_block_size", "control_scopes", "per_rank_pri",
     "plan_pri_arrays", "plan_specs", "scope_block_table",
 ]

@@ -37,7 +37,7 @@ Responsibilities:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import numpy as np
 
@@ -108,7 +108,8 @@ class ControlPlane:
                  seed: int = 0, trace_in: Optional[str] = None,
                  trace_out: Optional[str] = None,
                  trace_meta: Optional[Dict[str, Any]] = None,
-                 measure_noise: float = 0.0):
+                 measure_noise: float = 0.0,
+                 geometry: Optional[Sequence[int]] = None):
         self.wc = wc
         self.tp = tp
         self.mesh = mesh
@@ -117,19 +118,50 @@ class ControlPlane:
         self.clamp_sheds = clamp_sheds
         self.measure_noise = measure_noise
 
+        # -- static ragged shard geometry (core/geometry.py) ---------------
+        # per-rank FFN block counts; an all-equal tuple IS the implicit
+        # split and normalizes away, keeping equal-geometry runs on the
+        # byte-identical baseline path.
+        geo = tuple(int(s) for s in geometry) if geometry else ()
+        if len(set(geo)) <= 1:
+            geo = ()
+        if geo:
+            if len(geo) != tp:
+                raise ValueError(
+                    f"geometry {geo} has {len(geo)} ranks but tp={tp}")
+            if self.sim_ranks != tp:
+                raise ValueError(
+                    "ragged geometry requires the controller to plan at "
+                    f"real mesh scale (sim_ranks={self.sim_ranks} != "
+                    f"tp={tp})")
+        self.geometry = geo
+
         # -- plan skeleton (real mesh scale) -------------------------------
         static = None
         if wc.enabled:
             static = PlanStatic(
                 buckets=wc.gamma_buckets, block_size=wc.block_size,
-                tp_size=tp, imputation=wc.imputation)
+                tp_size=tp, imputation=wc.imputation, geometry=geo)
             if not scopes_lib.control_scopes(model_cfg, static):
                 static = None               # arch exempt at this tp
         self.static = static
         self.scopes = (scopes_lib.control_scopes(model_cfg, static)
                        if static is not None else {})
-        self.identity_pri = (scopes_lib.plan_pri_arrays(self.scopes, {}, tp)
-                            if static is not None else {})
+        if geo and static is not None:
+            nb_pad = self.scopes.get("ffn", 0)
+            if nb_pad != max(geo):
+                raise ValueError(
+                    f"geometry {geo}: padded local FFN block count "
+                    f"{nb_pad} != max(geometry) — the model config must "
+                    "carry the padded d_ff (core/geometry.py "
+                    "apply_geometry_cfg)")
+        elif geo and wc.enabled:
+            raise ValueError(
+                "ragged geometry needs the FFN controlled scope, but this "
+                "architecture is exempt at this TP degree")
+        self.identity_pri = (scopes_lib.plan_pri_arrays(
+            self.scopes, {}, tp, geometry=geo or None)
+            if static is not None else {})
 
         # -- executable cache ----------------------------------------------
         self.cache = PlanCompileCache(builder)
@@ -144,10 +176,20 @@ class ControlPlane:
         self.sim_nb = next(iter(sim_scopes.values()), 1)
         self.controller: Optional[SemiController] = None
         if wc.enabled and static is not None:
-            n_blocks = (self.sim_nb * self.sim_ranks
-                        if controller_blocks == "global" else self.sim_nb)
-            self.controller = SemiController(wc, self.sim_ranks, it_model,
-                                             n_blocks, seed=seed)
+            if geo:
+                # geometry mode: the controller reasons in per-rank local
+                # blocks (L_i = geometry[i]) regardless of the configured
+                # convention — sheds must fit a source's REAL blocks
+                n_blocks = int(round(float(np.mean(geo))))
+                self.controller = SemiController(
+                    wc, self.sim_ranks, it_model, n_blocks, seed=seed,
+                    workloads=np.asarray(geo, np.float64))
+            else:
+                n_blocks = (self.sim_nb * self.sim_ranks
+                            if controller_blocks == "global" else self.sim_nb)
+                self.controller = SemiController(wc, self.sim_ranks,
+                                                 it_model, n_blocks,
+                                                 seed=seed)
 
         # -- χ schedule + telemetry ----------------------------------------
         self.schedule = make_schedule(
@@ -173,6 +215,14 @@ class ControlPlane:
             return self.schedule.chi(step)
         return np.ones((self.sim_ranks,))
 
+    def _geometry_base_frac(self) -> Optional[np.ndarray]:
+        """Per-rank STATIC workload fractions L_i/L_eq, or None when the
+        split is equal (keeps the geometry-free code path untouched)."""
+        if not self.geometry:
+            return None
+        L = np.asarray(self.geometry, np.float64)
+        return L / max(float(L.mean()), 1e-12)
+
     def controller_times(self, chis: np.ndarray) -> np.ndarray:
         """Per-rank FULL-workload-equivalent times for the controller.
 
@@ -180,12 +230,24 @@ class ControlPlane:
         nominal times until the warmup gate opens); modeled mode reads the
         χ-oracle through the iteration model — Eq.(1) measures the
         heterogeneity degree, never the already-mitigated runtime.
+
+        Under a ragged geometry the static split is part of the baseline,
+        not something to mitigate: times are evaluated at the geometry's
+        own workload fractions (T_i = M·(L_i/L_eq)·χ_i + C), so Eq.(1)
+        sees only the RESIDUAL imbalance the static shards didn't absorb
+        — a persistent 2× rank with half the blocks reads as on-time.
         """
+        base = self._geometry_base_frac()
         if self.estimator is not None:
-            return (self.estimator.full_times() if self.estimator.ready
-                    else self.estimator.nominal_times())
-        return self.it_model.times(np.asarray(chis, np.float64),
-                                   np.ones(self.sim_ranks))
+            if base is None:
+                return (self.estimator.full_times() if self.estimator.ready
+                        else self.estimator.nominal_times())
+            chi_hat = (self.estimator.chi_hat if self.estimator.ready
+                       else np.ones(self.sim_ranks))
+            return self.it_model.times(chi_hat, base)
+        return self.it_model.times(
+            np.asarray(chis, np.float64),
+            np.ones(self.sim_ranks) if base is None else base)
 
     def decide(self, times: np.ndarray):
         """Run the controller (Alg. 2) on per-rank times."""
@@ -203,15 +265,23 @@ class ControlPlane:
         the :class:`ProjectedPlan` that actually EXECUTES (drivers report
         it, not the sim-scale plan, as the migration ground truth).
         """
-        real_ffn_nb = self.scopes.get("ffn", 0) if self.clamp_sheds else 0
+        # under a ragged geometry the clamp is against the SMALLEST rank's
+        # real blocks — any rank can be retargeted as a source dynamically
+        real_ffn_nb = (min(self.geometry) if self.geometry
+                       else self.scopes.get("ffn", 0)) \
+            if self.clamp_sheds else 0
         proj = project_plan(plan, sim_ranks=self.sim_ranks, tp=self.tp,
                             real_nb=real_ffn_nb)
         st_iter = dataclasses.replace(self.static, mig_shed=proj.mig_sheds,
                                       mig_blocks=0)
         step_fn, n_slots, _ = self.cache.get(st_iter)
+        # learned priority statistics are collected over the PADDED weight
+        # layout and don't renumber onto the ragged split — geometry runs
+        # keep the canonical (identity) order instead
+        use_learned = bool(plan.dynamic.pri_lists) and not self.geometry
         pri = (scopes_lib.plan_pri_arrays(self.scopes,
                                           plan.dynamic.pri_lists, self.tp)
-               if plan.dynamic.pri_lists else self.identity_pri)
+               if use_learned else self.identity_pri)
         srcs = np.full((max(n_slots, 1),), -1, np.int32)
         k = min(len(proj.mig_srcs), srcs.shape[0])
         srcs[:k] = np.asarray(proj.mig_srcs[:k], np.int32)

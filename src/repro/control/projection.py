@@ -25,6 +25,15 @@ identical outputs — which is what makes serve-time SEMI token-exact even
 when the simulated group is larger than the host mesh.
 
 With ``sim_ranks == tp`` the projection is the identity.
+
+Ragged shard geometry (core/geometry.py) composes with the identity
+projection only — the control plane enforces ``sim_ranks == tp`` when a
+geometry is set. The caller then passes ``real_nb = min(geometry)``: any
+rank can be retargeted as a migration source dynamically, so the clamp
+must leave the SMALLEST rank a real block. Lossless-ness is unchanged —
+helpers compute exactly the shed blocks from broadcast weights, and under
+a geometry those are the source's real (non-padding) blocks because every
+keep count and shed is quantized against the source's own block count.
 """
 from __future__ import annotations
 

@@ -38,23 +38,54 @@ def _replicated(mesh):
 SCOPE_LAYOUT = {"qkv": "col", "attn_out": "row", "ffn": "row"}
 
 
-def per_rank_pri(global_pri, e: int, nb_loc: int):
+def per_rank_pri(global_pri, e: int, nb_loc: int, geometry=None):
     """Split a GLOBAL keep-first block permutation into per-rank local
-    keep-first lists (rank r owns global blocks [r·nb_loc, (r+1)·nb_loc))."""
+    keep-first lists.
+
+    Equal split (geometry None): rank r owns global blocks
+    [r·nb_loc, (r+1)·nb_loc) — the helper renumbering is a plain modulo.
+
+    Ragged split (geometry = per-rank block counts, core/geometry.py):
+    rank r owns canonical blocks [off_r, off_r + geometry[r]); canonical
+    block off_r + j sits in local slot j of the padded layout. Each row
+    lists the rank's real blocks in keep-first order first, then its
+    padding slot ids [geometry[r], nb_loc) — padding can never be
+    selected because every keep count is capped at geometry[r]."""
+    if geometry is None:
+        out = np.zeros((e, nb_loc), np.int32)
+        for r in range(e):
+            lo, hi = r * nb_loc, (r + 1) * nb_loc
+            mine = [g - lo for g in global_pri if lo <= g < hi]
+            out[r] = np.asarray(mine, np.int32)
+        return out
+    sizes = tuple(int(s) for s in geometry)
+    if len(sizes) != e:
+        raise ValueError(f"geometry {sizes} has {len(sizes)} ranks, e={e}")
+    if max(sizes) != nb_loc:
+        raise ValueError(
+            f"padded local block count {nb_loc} != max(geometry)={max(sizes)}")
     out = np.zeros((e, nb_loc), np.int32)
-    for r in range(e):
-        lo, hi = r * nb_loc, (r + 1) * nb_loc
-        mine = [g - lo for g in global_pri if lo <= g < hi]
-        out[r] = np.asarray(mine, np.int32)
+    off = 0
+    for r, L in enumerate(sizes):
+        mine = [g - off for g in global_pri if off <= g < off + L]
+        if len(mine) != L:
+            raise ValueError(
+                f"global pri covers {len(mine)} of rank {r}'s {L} blocks")
+        out[r] = np.asarray(mine + list(range(L, nb_loc)), np.int32)
+        off += L
     return out
 
 
 def plan_pri_arrays(scopes: Dict[str, int], pri_lists: Dict[str, Any],
-                    tp: int) -> Dict[str, jax.Array]:
+                    tp: int, geometry=None) -> Dict[str, jax.Array]:
     """Device pri arrays for a plan: the controller's keep-first
     permutations where available (split per rank for row scopes),
     identity order otherwise. Shared by the train and serve drivers so
-    priority selection cannot silently diverge between them."""
+    priority selection cannot silently diverge between them.
+
+    ``geometry`` (per-rank block counts) applies to the "ffn" scope only:
+    that is the scope the ragged shard geometry redistributes; attention
+    scopes keep the equal split."""
     out = {}
     for name, nb in scopes.items():
         pri = pri_lists.get(name)
@@ -62,6 +93,11 @@ def plan_pri_arrays(scopes: Dict[str, int], pri_lists: Dict[str, Any],
             if pri is None or pri.shape[0] != nb:
                 pri = jnp.arange(nb, dtype=jnp.int32)
             out[name] = jnp.asarray(pri)
+        elif geometry is not None and name == "ffn":
+            nb_total = int(sum(geometry))
+            if pri is None or pri.shape[0] != nb_total:
+                pri = np.arange(nb_total, dtype=np.int32)
+            out[name] = jnp.asarray(per_rank_pri(pri, tp, nb, geometry))
         else:
             nb_total = nb * tp
             if pri is None or pri.shape[0] != nb_total:

@@ -19,7 +19,7 @@ average when some rank drifted >10% since the last refresh (Sec. III-A).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -178,11 +178,33 @@ class SemiController:
                  iter_model: IterationModel, num_blocks: int,
                  costs: Optional[CostFunctions] = None, seed: int = 0,
                  max_sources: Optional[int] = None,
-                 shed_cap: Optional[int] = None):
+                 shed_cap: Optional[int] = None,
+                 workloads: Optional[Sequence[float]] = None):
         self.cfg = cfg
         self.tp = tp
         self.model = iter_model
         self.num_blocks = num_blocks            # prunable blocks per rank shard
+        # per-rank static workloads L_i (block counts). Under a ragged
+        # shard geometry (core/geometry.py) these are the geometry sizes,
+        # and every Eq.(1)-(3) quantity scales rank-locally so the
+        # controller plans only the RESIDUAL imbalance on top of the
+        # static split. Default: the equal split (L_i = num_blocks), which
+        # reproduces the geometry-free numerics exactly.
+        if workloads is not None:
+            w = np.asarray(workloads, np.float64)
+            if w.shape != (tp,):
+                raise ValueError(
+                    f"workloads shape {w.shape} != ({tp},)")
+            if np.any(w < 1):
+                raise ValueError(f"workloads must be >= 1, got {w}")
+            self.workloads = w
+        else:
+            self.workloads = np.full((tp,), float(num_blocks))
+        # static geometry to stamp into emitted plans (uneven only — an
+        # equal split is the geometry-free baseline)
+        geo = tuple(int(round(v)) for v in self.workloads)
+        self.geometry = geo if (workloads is not None
+                                and len(set(geo)) > 1) else ()
         self.max_sources = (cfg.max_migration_sources
                             if max_sources is None else max_sources)
         self.shed_cap = (cfg.migration_shed_cap
@@ -274,9 +296,13 @@ class SemiController:
 
         # M_i^j: the straggler's own matmul time this iteration scales with
         # its slowdown — a rank running χ× slow also prunes χ×-cheaper work,
-        # so Eq.(1) uses the rank-local matmul cost.
+        # so Eq.(1) uses the rank-local matmul cost. Under a ragged
+        # geometry it additionally scales with the rank's static workload
+        # share L_i/L_eq (the model's matmul_time is the equal-shard M).
+        wl_mean = max(float(self.workloads.mean()), 1e-12)
         gammas = {i: eq1_gamma(times[i], t_ref,
-                               m_i * times[i] / max(t_ref, 1e-12))
+                               m_i * (self.workloads[i] / wl_mean)
+                               * times[i] / max(t_ref, 1e-12))
                   for i in stragglers}
         bucket_by_rank = np.zeros((e,), np.int32)
         beta, x_mig = 0.0, 0
@@ -286,12 +312,16 @@ class SemiController:
         # the compiled program needs >= 1 helper slot per source set
         max_src = min(self.max_sources, e - 1, max(len(stragglers), 0))
 
-        def _quantized_shed(want: float) -> int:
-            m_q = quantize_shed(int(round(want)), self.num_blocks,
-                                cfg.gamma_buckets)
+        def _quantized_shed(want: float, nb: Optional[int] = None) -> int:
+            nb = self.num_blocks if nb is None else nb
+            m_q = quantize_shed(int(round(want)), nb, cfg.gamma_buckets)
             if self.shed_cap:
                 m_q = min(m_q, self.shed_cap)
-            return m_q
+            if self.geometry:
+                # compiled branch tables require every shed to leave the
+                # smallest-geometry rank at least one real block
+                m_q = min(m_q, min(self.geometry) - 1)
+            return max(m_q, 0)
 
         if cfg.mode == "zero" or not stragglers or max_src == 0:
             for i, g in gammas.items():
@@ -300,7 +330,8 @@ class SemiController:
         elif cfg.mode == "mig":
             # migrate everything for every straggler (slowest first)
             for i in sorted(stragglers, key=lambda r: -times[r])[:max_src]:
-                m_q = _quantized_shed(gammas[i] * self.num_blocks)
+                nb_i = int(round(self.workloads[i]))
+                m_q = _quantized_shed(gammas[i] * nb_i, nb_i)
                 if m_q > 0:
                     srcs.append(i)
                     sheds.append(m_q)
@@ -310,7 +341,7 @@ class SemiController:
         else:  # semi (Alg. 2)
             order = np.argsort(-times)
             times_desc = times[order]
-            workloads = np.full((e,), float(self.num_blocks))
+            workloads = self.workloads[order]
             if len(stragglers) == 1:
                 x_mig = 1
             else:
@@ -322,7 +353,8 @@ class SemiController:
             for k in range(x_mig):
                 i = int(order[k])
                 g = gammas.get(i, 0.0)
-                L_gamma = g * self.num_blocks
+                nb_i = int(round(self.workloads[i]))
+                L_gamma = g * nb_i
                 # helpers shrink as the source set grows: e' − 1 = e − x
                 # "lossless" β-policy: every Eq.(3)-selected source sheds
                 # its FULL offset volume, so the residual resize bucket is
@@ -330,16 +362,16 @@ class SemiController:
                 b_k = (1.0 if cfg.beta_policy == "lossless"
                        else eq2_beta(L_gamma, self.costs,
                                      max(e - x_mig + 1, 2)))
-                m_q = _quantized_shed(L_gamma * b_k)
+                m_q = _quantized_shed(L_gamma * b_k, nb_i)
                 # fit check: the source must KEEP >= 1 block after both its
                 # residual-resize bucket and the migrated shed — otherwise
                 # the compiled branch clamp would double-compute blocks.
-                grid = shed_bucket_counts(self.num_blocks, cfg.gamma_buckets)
+                grid = shed_bucket_counts(nb_i, cfg.gamma_buckets)
                 while m_q > 0:
-                    resid_gamma = max(0.0, (L_gamma - m_q) / self.num_blocks)
+                    resid_gamma = max(0.0, (L_gamma - m_q) / nb_i)
                     b_res = bucket_for_gamma(resid_gamma, cfg.gamma_buckets)
                     kc = keep_blocks_for_bucket(
-                        cfg.gamma_buckets[b_res], self.num_blocks)
+                        cfg.gamma_buckets[b_res], nb_i)
                     if kc - m_q >= 1:
                         break
                     smaller = [cnt for cnt in grid if cnt < m_q]
@@ -348,7 +380,7 @@ class SemiController:
                     srcs.append(i)
                     sheds.append(m_q)
                     betas.append(b_k)
-                    resid_gamma = max(0.0, (L_gamma - m_q) / self.num_blocks)
+                    resid_gamma = max(0.0, (L_gamma - m_q) / nb_i)
                     bucket_by_rank[i] = bucket_for_gamma(
                         resid_gamma, cfg.gamma_buckets)
                 else:
@@ -381,7 +413,8 @@ class SemiController:
 
         static = PlanStatic(
             buckets=tuple(cfg.gamma_buckets), block_size=cfg.block_size,
-            mig_shed=tuple(sheds), tp_size=e, imputation=cfg.imputation)
+            mig_shed=tuple(sheds), tp_size=e, imputation=cfg.imputation,
+            geometry=self.geometry)
         dynamic = PlanDynamic(
             bucket_by_rank=bucket_by_rank,
             mig_src=(np.asarray(srcs, np.int32) if srcs
@@ -431,7 +464,15 @@ def work_fraction(plan: WorkloadPlan, num_blocks: int) -> np.ndarray:
     migration: each active source drops its shed fraction; the H = e − S
     working helpers (first non-source ranks in helper order) each absorb
     ceil(shed_s / H) blocks per slot — mirroring the padded partition of
-    the real dataflow."""
+    the real dataflow.
+
+    Fractions are in units of the EQUAL-shard matmul workload (what
+    ``IterationModel.matmul_time`` prices), so under a ragged geometry a
+    rank's base fraction is kc_r / L_eq with L_eq = mean(geometry): the
+    static split shows up as per-rank work, not as a plan decision."""
+    geo = plan.static.geometry
+    if len(set(geo)) > 1:
+        return _geometry_work_fraction(plan)
     e = plan.static.tp_size
     frac = np.ones((e,), np.float64)
     for r in range(e):
@@ -450,6 +491,37 @@ def work_fraction(plan: WorkloadPlan, num_blocks: int) -> np.ndarray:
             for s, m in active:
                 frac[s] *= max(0.0, 1.0 - m / num_blocks)
                 extra += -(-m // H) / num_blocks
+            for r in helpers:
+                frac[r] += extra
+    return frac
+
+
+def _geometry_work_fraction(plan: WorkloadPlan) -> np.ndarray:
+    """Per-rank work fractions under a ragged geometry, in equal-shard
+    units (L_eq = mean(geometry) blocks = the matmul_time workload)."""
+    st = plan.static
+    e = st.tp_size
+    L = np.asarray(st.geometry, np.float64)
+    L_eq = max(float(L.mean()), 1e-12)
+    kc = np.zeros((e,), np.float64)
+    for r in range(e):
+        g = st.buckets[int(plan.dynamic.bucket_by_rank[r])]
+        kc[r] = keep_blocks_for_bucket(g, int(L[r]))
+    frac = kc / L_eq
+    sheds = st.mig_sheds
+    if st.migration_enabled and sheds:
+        srcs = plan.dynamic.mig_srcs(len(sheds))
+        active = [(int(s), int(m)) for s, m in zip(srcs, sheds)
+                  if s >= 0 and m > 0]
+        if active:
+            H = max(e - len(sheds), 1)
+            src_set = {s for s, _ in active}
+            helpers = [r for r in range(e) if r not in src_set][:H]
+            extra = 0.0
+            for s, m in active:
+                # the compiled source branch runs exactly max(kc − m, 1)
+                frac[s] = max(kc[s] - m, 1.0) / L_eq
+                extra += -(-m // H) / L_eq
             for r in helpers:
                 frac[r] += extra
     return frac

@@ -97,6 +97,22 @@ class PlanStatic:
     # entry per source slot, canonical order is descending. Supersedes
     # mig_blocks when non-empty.
     mig_shed: Tuple[int, ...] = ()
+    # static ragged shard geometry: per-rank FFN block counts (sum = the
+    # model's canonical block total; see core/geometry.py). Empty = the
+    # implicit equal split. An all-equal tuple is normalized away by
+    # :meth:`canonical` so equal-geometry plans hash/compile identically
+    # to geometry-free ones.
+    geometry: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.geometry:
+            if len(self.geometry) != self.tp_size:
+                raise ValueError(
+                    f"geometry {self.geometry} has {len(self.geometry)} "
+                    f"entries but tp_size={self.tp_size}")
+            if any(s < 1 for s in self.geometry):
+                raise ValueError(
+                    f"geometry {self.geometry} entries must be >= 1")
 
     @property
     def mig_sheds(self) -> Tuple[int, ...]:
@@ -130,12 +146,17 @@ class PlanStatic:
 
     def canonical(self) -> "PlanStatic":
         """Normal form used as the compile-cache key: the shed counts live
-        in ``mig_shed`` sorted descending and ``mig_blocks`` is folded in,
-        so equivalent plans hash identically."""
+        in ``mig_shed`` sorted descending, ``mig_blocks`` is folded in,
+        and an all-equal geometry (zero padding — byte-identical layout to
+        the implicit split) drops to (), so equivalent plans hash
+        identically."""
         sheds = tuple(sorted(self.mig_sheds, reverse=True))
-        if sheds == self.mig_shed and self.mig_blocks == 0:
+        geo = self.geometry if len(set(self.geometry)) > 1 else ()
+        if sheds == self.mig_shed and self.mig_blocks == 0 \
+                and geo == self.geometry:
             return self
-        return dataclasses.replace(self, mig_shed=sheds, mig_blocks=0)
+        return dataclasses.replace(self, mig_shed=sheds, mig_blocks=0,
+                                   geometry=geo)
 
     def signature(self) -> "PlanStatic":
         """Alias of :meth:`canonical` — the hashable plan signature."""
@@ -148,7 +169,10 @@ class PlanStatic:
         diffed and compared between runs."""
         c = self.canonical()
         shed = ",".join(str(m) for m in c.mig_shed)
-        return f"tp{c.tp_size}b{c.block_size}shed[{shed}]"
+        sig = f"tp{c.tp_size}b{c.block_size}shed[{shed}]"
+        if c.geometry:
+            sig += "geo[" + ",".join(str(s) for s in c.geometry) + "]"
+        return sig
 
 
 @dataclasses.dataclass

@@ -34,21 +34,39 @@ INTERPRET = None
 _TRUTHY = ("1", "true", "yes", "on")
 _FALSY = ("0", "false", "no", "off")
 
+# cached env + backend resolution: every kernel wrapper consults
+# interpret_mode() per call, and jax.default_backend() is not free —
+# resolve once, invalidate explicitly via reset_interpret_cache()
+_INTERPRET_CACHE = None
+
 
 def interpret_mode() -> bool:
     """Resolve whether Pallas kernels run in interpret mode.
 
     Priority: module override (ops.INTERPRET = True/False) >
-    REPRO_PALLAS_INTERPRET env var > backend auto-detection
-    (anything but TPU interprets)."""
+    REPRO_PALLAS_INTERPRET env var > backend auto-detection (anything
+    but TPU interprets). The override is read live; the env + backend
+    resolution is computed once and cached module-wide — call
+    :func:`reset_interpret_cache` after mutating the env var or
+    swapping the jax backend mid-process (tests do)."""
     if INTERPRET is not None:
         return bool(INTERPRET)
-    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
-    if env in _TRUTHY:
-        return True
-    if env in _FALSY:
-        return False
-    return jax.default_backend() != "tpu"
+    global _INTERPRET_CACHE
+    if _INTERPRET_CACHE is None:
+        env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+        if env in _TRUTHY:
+            _INTERPRET_CACHE = True
+        elif env in _FALSY:
+            _INTERPRET_CACHE = False
+        else:
+            _INTERPRET_CACHE = jax.default_backend() != "tpu"
+    return _INTERPRET_CACHE
+
+
+def reset_interpret_cache() -> None:
+    """Drop the cached env/backend interpret-mode resolution."""
+    global _INTERPRET_CACHE
+    _INTERPRET_CACHE = None
 
 
 # ---------------------------------------------------------------------------

@@ -53,10 +53,11 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     control_static = None
     if control:
+        from repro.control.scopes import control_block_size
         from repro.core.workload import PlanStatic
         tp = int(mesh.shape["model"])
         control_static = PlanStatic(tp_size=tp, block_size=128, mig_blocks=2)
-        b = steps.control_block_size(cfg, control_static)
+        b = control_block_size(cfg, control_static)
         if b == 0:
             raise RuntimeError(
                 f"{arch}: FFN width {cfg.d_ff}/{tp} has no >=32 block — "

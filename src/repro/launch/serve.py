@@ -54,6 +54,7 @@ import argparse
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -62,14 +63,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import store as ckpt_store
-from repro.config import (ShapeConfig, WorkloadControlConfig, get_config,
-                          smoke_variant)
-from repro.control import ControlPlane
+from repro.config import ShapeConfig, get_config, smoke_variant
+from repro.control import ControlConfig, ControlPlane
+from repro.core import geometry as geom_lib
 from repro.core import hetero as hetero_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_small_mesh
 from repro.models import get_api
-from repro.sharding import use_mesh
+from repro.sharding import ragged_local_width, use_mesh
 
 
 # ---------------------------------------------------------------------------
@@ -121,41 +122,21 @@ class _Slot:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class ServeControlConfig:
-    """Workload control + straggler simulation knobs for the serve loop.
+class ServeControlConfig(ControlConfig):
+    """Deprecated alias of :class:`repro.control.ControlConfig`.
 
-    mode "off" serves dense; "zero"/"semi" run the controller each decode
-    step on modeled (or measured — ``times``) per-rank times. "semi"
-    emits the paper's full mitigation space: Eq.(3) selects the straggler
-    prefix that migrates losslessly (``max_sources`` concurrent slots,
-    ``beta_policy="lossless"`` so a fitting plan changes NO tokens) and
-    the rest ZERO-resizes. ``sim_ranks`` sizes the simulated TP group for
-    the latency model (defaults to the real ``tp``); when it differs from
-    the real mesh the plan is *projected* — migration slots fold onto
-    real ranks, resize buckets broadcast the critical-path branch
-    (repro.control.projection).
+    The serve engine's knobs were collapsed into the shared
+    :class:`ControlConfig` (field names are unchanged); this subclass
+    exists only so existing callers keep working, and warns on
+    construction. Import ``ControlConfig`` from ``repro.control``.
     """
 
-    mode: str = "off"                  # off | zero | semi
-    hetero_kind: str = "none"    # none | static | round_robin | contention | trace
-    chi: float = 4.0
-    contention_p: float = 0.15
-    period: int = 10
-    sim_ranks: int = 0                 # 0 => real tp
-    block_size: int = 8
-    max_sources: int = 3               # migration slots (semi mode only)
-    beta_policy: str = "lossless"      # lossless | eq2 (semi mission split)
-    use_kernel: bool = False
-    seed: int = 0
-    peak_flops: float = 5e9            # latency-model calibration (host CPU)
-    mfu: float = 1.0
-    # telemetry (DESIGN_TELEMETRY.md): controller input source, trace
-    # replay (hetero_kind="trace") and replayable trace capture
-    times: str = "modeled"             # modeled | measured
-    trace_in: Optional[str] = None
-    trace_out: Optional[str] = None
-    measure_noise: float = 0.0
+    def __post_init__(self):
+        warnings.warn(
+            "ServeControlConfig is deprecated; use "
+            "repro.control.ControlConfig (same field names)",
+            DeprecationWarning, stacklevel=3)
+        super().__post_init__()
 
 
 # ---------------------------------------------------------------------------
@@ -168,10 +149,11 @@ class ServeEngine:
 
     def __init__(self, arch: str, num_slots: int = 4, max_len: int = 64, *,
                  tp: int = 1, ckpt_dir: Optional[str] = None, seed: int = 0,
-                 control: Optional[ServeControlConfig] = None,
+                 control: Optional[ControlConfig] = None,
                  param_dtype: str = "float32",
                  max_queue: Optional[int] = None):
         self.cfg = smoke_variant(get_config(arch))
+        cfg_canonical = self.cfg
         self.api = get_api(self.cfg)
         if not self.api.has_decode or self.cfg.encdec is not None:
             raise ValueError(f"{arch}: the serve engine drives decoder-only "
@@ -181,19 +163,28 @@ class ServeEngine:
         self.tp = tp
         self.mesh = make_small_mesh(1, tp)
         self.shape = ShapeConfig("serve", max_len, num_slots, "decode")
-        self.control = control or ServeControlConfig()
+        self.control = control or ControlConfig()
         self.max_queue = max_queue
         dtype = jnp.dtype(param_dtype)
 
         # ---- workload control wiring (the unified control plane) --------
         c = self.control
-        wc = WorkloadControlConfig(
-            enabled=c.mode != "off",
-            mode=c.mode if c.mode != "off" else "zero",
-            block_size=c.block_size,
-            max_migration_sources=c.max_sources if c.mode == "semi" else 0,
-            beta_policy=c.beta_policy,
-            use_kernel=c.use_kernel, times=c.times)
+        # static ragged shard geometry (core/geometry.py): the model
+        # config carries the padded d_ff; params are initialized
+        # canonically and expanded into the padded ragged layout below
+        self.geometry = None
+        if c.geometry is not None:
+            geo = geom_lib.geometry_for_cfg(cfg_canonical, c.geometry,
+                                            c.block_size)
+            if not geo.is_equal:
+                reason = geom_lib.geometry_unsupported_reason(cfg_canonical)
+                if reason:
+                    raise ValueError(
+                        f"geometry unsupported for {arch}: {reason}")
+                self.geometry = geo
+                self.cfg = geom_lib.apply_geometry_cfg(cfg_canonical, geo)
+                ragged_local_width(geo.padded_width, self.mesh)
+        wc = c.to_workload()
         self._wc = wc
 
         # slot clearing runs INSIDE the jitted step (clear is a regular
@@ -248,12 +239,16 @@ class ServeEngine:
         # ---- unified control plane (compile cache + controller +
         # telemetry + sim->real dispatch; shared with launch/train.py) ----
         self.sim_ranks = c.sim_ranks or tp
+        # the latency model prices the CANONICAL workload — padded lanes
+        # under a ragged geometry are inert zeros, not extra FLOPs
         self.it_model = hetero_lib.iteration_model(
-            self.cfg, ShapeConfig("serve_model", 1, num_slots, "decode"),
+            cfg_canonical, ShapeConfig("serve_model", 1, num_slots, "decode"),
             max(self.sim_ranks, 1), peak_flops=c.peak_flops, mfu=c.mfu)
         self.plane = ControlPlane(
             self.cfg, wc, mesh=self.mesh, tp=tp, builder=_build,
             it_model=self.it_model, sim_ranks=self.sim_ranks,
+            geometry=(self.geometry.sizes
+                      if self.geometry is not None else None),
             # the controller reasons in per-rank shard blocks (the paper's
             # L_i) so migration sheds are sized to FIT a source's local
             # shard; projected sheds are additionally clamped to the real
@@ -270,11 +265,16 @@ class ServeEngine:
         self.controller = self.plane.controller
 
         # ---- params + slot cache ----------------------------------------
-        params, _ = self.api.init(jax.random.PRNGKey(seed), self.cfg, dtype)
+        # params (and checkpoints) are CANONICAL; a ragged geometry
+        # expands them into the zero-padded layout at load time
+        params, _ = self.api.init(jax.random.PRNGKey(seed), cfg_canonical,
+                                  dtype)
         if ckpt_dir:
             last = ckpt_store.latest_step(ckpt_dir)
             if last is not None:
                 params = ckpt_store.load_params(ckpt_dir, last, params)
+        if self.geometry is not None:
+            params = geom_lib.expand_ffn_params(params, self.geometry)
         self.params = jax.device_put(params, in_sh[0])
         self.cache = jax.device_put(
             self.api.init_cache(self.cfg, num_slots, max_len, dtype),
@@ -603,13 +603,17 @@ def main():
                     help="telemetry trace to replay (with --hetero trace)")
     ap.add_argument("--trace-out", default=None,
                     help="record a replayable telemetry trace here (JSONL)")
+    ap.add_argument("--geometry", default=None,
+                    help="static ragged TP shard geometry: per-rank FFN "
+                         "block counts 'a,b,...' (DESIGN_SHARDING.md)")
     args = ap.parse_args()
 
-    control = ServeControlConfig(
+    control = ControlConfig(
         mode=args.control, hetero_kind=args.hetero, chi=args.chi,
         sim_ranks=args.sim_ranks, max_sources=args.max_sources,
         beta_policy=args.beta_policy, use_kernel=args.use_kernel,
-        times=args.times, trace_in=args.trace_in, trace_out=args.trace_out)
+        times=args.times, trace_in=args.trace_in, trace_out=args.trace_out,
+        geometry=geom_lib.parse_geometry_arg(args.geometry, args.tp))
     eng = ServeEngine(args.arch, num_slots=args.slots,
                       max_len=args.prompt_len + args.gen_len, tp=args.tp,
                       ckpt_dir=args.ckpt_dir, control=control)

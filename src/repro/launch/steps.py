@@ -19,11 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import sharding as sh
 from repro.config import ModelConfig, RunConfig, ShapeConfig, TrainConfig
-# Scope discovery / plan-array assembly moved to the unified control plane
-# (repro.control.scopes); re-exported here for backwards compatibility.
-from repro.control.scopes import (  # noqa: F401
-    SCOPE_LAYOUT, control_block_size, control_scopes, per_rank_pri,
-    plan_pri_arrays, plan_specs, scope_block_table)
+from repro.control import scopes as _scopes
 from repro.core.workload import PlanStatic
 from repro.layers.tp_linear import ControlContext
 from repro.models import get_api
@@ -31,6 +27,25 @@ from repro.optim import adamw
 from repro.launch import specs as specs_lib
 
 SDS = jax.ShapeDtypeStruct
+
+# Scope discovery / plan-array assembly moved to the unified control plane
+# (repro.control.scopes) in PR 5; the module-level aliases that kept old
+# imports alive are now deprecation shims — import from
+# repro.control.scopes instead (enforced for new code by the ruff TID251
+# banned-api rule in pyproject.toml).
+_DEPRECATED_SCOPE_EXPORTS = (
+    "SCOPE_LAYOUT", "control_block_size", "control_scopes", "per_rank_pri",
+    "plan_pri_arrays", "plan_specs", "scope_block_table")
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED_SCOPE_EXPORTS:
+        import warnings
+        warnings.warn(
+            f"repro.launch.steps.{name} is deprecated; import it from "
+            "repro.control.scopes", DeprecationWarning, stacklevel=2)
+        return getattr(_scopes, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _replicated(mesh):
@@ -96,13 +111,15 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         nu=jax.tree.map(lambda s: s, p_shards))
     b_sds, b_shards = specs_lib.batch_specs(cfg, shape, mesh, dtype)
 
-    scopes = control_scopes(cfg, control_static) if control_static else {}
+    scopes = _scopes.control_scopes(cfg, control_static) \
+        if control_static else {}
     if control_static and scopes:
         import dataclasses as _dc
         control_static = _dc.replace(
             control_static,
-            scope_blocks=scope_block_table(cfg, control_static))
-        pl_sds, pl_shards = plan_specs(control_static, cfg, mesh, scopes)
+            scope_blocks=_scopes.scope_block_table(cfg, control_static))
+        pl_sds, pl_shards = _scopes.plan_specs(control_static, cfg, mesh,
+                                               scopes)
     else:
         control_static = None
         pl_sds = pl_shards = None
@@ -228,14 +245,15 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     logits_sh = NamedSharding(mesh, sh.fit_spec_to_shape(
         logits_spec, (shape.global_batch, cfg.vocab_size or 1), mesh))
 
-    scopes = (control_scopes(cfg, control_static)
+    scopes = (_scopes.control_scopes(cfg, control_static)
               if control_static and cfg.encdec is None else {})
     if control_static and scopes:
         import dataclasses as _dc
         control_static = _dc.replace(
             control_static,
-            scope_blocks=scope_block_table(cfg, control_static))
-        pl_sds, pl_shards = plan_specs(control_static, cfg, mesh, scopes)
+            scope_blocks=_scopes.scope_block_table(cfg, control_static))
+        pl_sds, pl_shards = _scopes.plan_specs(control_static, cfg, mesh,
+                                               scopes)
     else:
         control_static = None
         pl_sds = pl_shards = None

@@ -43,9 +43,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import store as ckpt_store
-from repro.config import (ShapeConfig, TrainConfig, WorkloadControlConfig,
-                          get_config, smoke_variant)
-from repro.control import ControlPlane
+from repro.config import (ShapeConfig, TrainConfig, get_config,
+                          smoke_variant)
+from repro.control import ControlConfig, ControlPlane
+from repro.control.plane import make_schedule
+from repro.core import geometry as geom_lib
 from repro.core import hetero as hetero_lib
 from repro.core.workload import WorkloadPlan
 from repro.data.pipeline import (PatternImageStream, TokenTaskStream,
@@ -54,12 +56,7 @@ from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_small_mesh
 from repro.models import get_api
 from repro.optim import adamw
-from repro.sharding import use_mesh
-
-
-# shared with the serve engine (repro.control.scopes) so train/serve plan
-# assembly cannot diverge; re-exported here for backwards compatibility
-per_rank_pri = steps_lib.per_rank_pri
+from repro.sharding import ragged_local_width, use_mesh
 
 
 @dataclasses.dataclass
@@ -73,6 +70,46 @@ class TrainerState:
 # and the resume fast-forward, which must skip exactly this many per past
 # event for a resumed run to stay equivalent to an uninterrupted one
 EVAL_BATCHES = 4
+
+# FFN pruning granularity the trainer plans at (control_block_size adapts
+# it down when d_ff/tp is small); the ragged geometry quantizes to the
+# same grid so geometry block counts and plan block counts line up
+TRAIN_BLOCK = 8
+
+
+def _resolve_geometry(spec: Optional[str], cfg, tp: int, *, hetero_kind: str,
+                      chi: float, period: int, seed: int,
+                      trace_in: Optional[str]):
+    """Parse ``--geometry`` into a ShardGeometry (None = classic split).
+
+    ``"chi"`` seeds the static split from the hetero schedule's step-0
+    speed ratios (core/geometry.py geometry_from_chi — the steady-state
+    χ of a static/persistent schedule); ``"a,b,..."`` gives explicit
+    per-rank block counts summing to d_ff/TRAIN_BLOCK. Equal splits
+    collapse to None so the geometry-free path stays bit-identical.
+    """
+    if spec is None or not str(spec).strip() \
+            or str(spec).strip().lower() == "none":
+        return None
+    reason = geom_lib.geometry_unsupported_reason(cfg)
+    if reason:
+        raise ValueError(f"--geometry unsupported for {cfg.name}: {reason}")
+    if cfg.d_ff % TRAIN_BLOCK:
+        raise ValueError(
+            f"--geometry needs d_ff divisible by {TRAIN_BLOCK} "
+            f"(got {cfg.d_ff})")
+    nb_total = cfg.d_ff // TRAIN_BLOCK
+    if str(spec).strip().lower() == "chi":
+        sched = make_schedule(hetero_kind, tp, chi=chi, period=period,
+                              seed=seed, trace_in=trace_in)
+        if sched is None:
+            raise ValueError("--geometry chi needs a hetero schedule "
+                             "(--hetero != none)")
+        geo = geom_lib.geometry_from_schedule(sched, nb_total, TRAIN_BLOCK)
+    else:
+        sizes = geom_lib.parse_geometry_arg(str(spec), tp)
+        geo = geom_lib.geometry_for_cfg(cfg, sizes, TRAIN_BLOCK)
+    return None if geo.is_equal else geo
 
 
 def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
@@ -91,23 +128,43 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                  trace_in: Optional[str] = None,
                  trace_out: Optional[str] = None,
                  measure_noise: float = 0.0,
-                 ckpt_every: int = 50) -> Dict:
+                 ckpt_every: int = 50,
+                 geometry: Optional[str] = None) -> Dict:
     """Returns a summary dict (loss/acc curves, modeled step times)."""
     cfg = smoke_variant(get_config(arch))
+    cfg_canonical = cfg
+    geo = _resolve_geometry(geometry, cfg, tp, hetero_kind=hetero_kind,
+                            chi=chi, period=hetero_period, seed=seed,
+                            trace_in=trace_in)
+    if geo is not None:
+        # static uneven sharding, realized as a zero-padded equal GSPMD
+        # split (core/geometry.py): the model config carries the padded
+        # d_ff; params are initialized canonically and expanded below
+        cfg = geom_lib.apply_geometry_cfg(cfg, geo)
     api = get_api(cfg)
     mesh = make_small_mesh(dp, tp)
+    if geo is not None:
+        ragged_local_width(geo.padded_width, mesh)
     train_cfg = TrainConfig(learning_rate=lr, steps=steps)
     shape = ShapeConfig("trainer", seq, batch, "train")
 
-    control_cfg = WorkloadControlConfig(
-        enabled=control_mode != "off" or force_gamma is not None,
-        mode=control_mode if control_mode != "off" else "zero",
+    control_cfg = ControlConfig(
+        mode=control_mode, hetero_kind=hetero_kind, chi=chi,
+        period=hetero_period, block_size=TRAIN_BLOCK,
+        max_sources=max_sources, shed_cap=mig_blocks,
+        # training default: Eq.(2) balances migration vs. resize cost
+        # (the serve engine's ControlConfig default is "lossless")
+        beta_policy="eq2",
         imputation=imputation, selection=selection,
-        block_size=8,
+        use_kernel=use_kernel, seed=seed, times=times,
+        trace_in=trace_in, trace_out=trace_out,
+        measure_noise=measure_noise,
+        geometry=geo.sizes if geo is not None else None,
+    ).to_workload(
+        enabled=control_mode != "off" or force_gamma is not None,
         # legacy CLI contract: --mig-blocks 0 disables migration entirely;
         # otherwise it caps the per-source shed count
-        max_migration_sources=max_sources if mig_blocks > 0 else 0,
-        migration_shed_cap=mig_blocks, use_kernel=use_kernel, times=times)
+        migration_sources=max_sources if mig_blocks > 0 else 0)
 
     with use_mesh(mesh):
         # Plan-signature compile cache: the controller's multi-straggler
@@ -124,7 +181,11 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
 
         # -- unified control plane (plan assembly / compile cache /
         # mitigation dispatch / telemetry, shared with the serve engine) --
-        it_model = hetero_lib.iteration_model(cfg, shape, max(tp, 1),
+        # the latency model prices the CANONICAL workload — under a ragged
+        # geometry the padded lanes are inert zeros, not extra FLOPs, and
+        # work_fraction reports in equal-shard (L_eq) units to match
+        it_model = hetero_lib.iteration_model(cfg_canonical, shape,
+                                              max(tp, 1),
                                               peak_flops=5e9, mfu=1.0)
         plane = ControlPlane(
             cfg, control_cfg, mesh=mesh, tp=tp, builder=_build_step,
@@ -133,19 +194,30 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
             seed=seed, trace_in=trace_in, trace_out=trace_out,
             trace_meta={"arch": arch, "hetero": hetero_kind,
                         "control": control_mode, "seed": seed},
-            measure_noise=measure_noise)
+            measure_noise=measure_noise,
+            geometry=geo.sizes if geo is not None else None)
         step_jit, plan_slots, in_sh = plane.base
         controller = plane.controller
         scopes = plane.scopes
 
-        # real init
+        # real init. Geometry runs initialize CANONICAL params (same RNG
+        # draws as the equal-shard run) and expand them into the padded
+        # ragged layout — rank r's shard holds its geometry[r] real blocks
+        # first, zero padding after (inert fwd/bwd and under AdamW).
         box = {}
-        def init_fn():
-            p, ax = api.init(jax.random.PRNGKey(seed), cfg,
-                             jnp.dtype(train_cfg.param_dtype))
-            box["ax"] = ax
-            return p
-        params = jax.jit(init_fn, out_shardings=in_sh[0])()
+        if geo is not None:
+            p_host, box["ax"] = api.init(jax.random.PRNGKey(seed),
+                                         cfg_canonical,
+                                         jnp.dtype(train_cfg.param_dtype))
+            params = jax.device_put(
+                geom_lib.expand_ffn_params(p_host, geo), in_sh[0])
+        else:
+            def init_fn():
+                p, ax = api.init(jax.random.PRNGKey(seed), cfg,
+                                 jnp.dtype(train_cfg.param_dtype))
+                box["ax"] = ax
+                return p
+            params = jax.jit(init_fn, out_shardings=in_sh[0])()
         opt = jax.device_put(adamw.init(params), in_sh[1])
 
         # -- resume: restore the FULL train state (params + optimizer
@@ -159,6 +231,18 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
             if last is not None:
                 man = ckpt_store.read_manifest(ckpt_dir, last)
                 extra = man.get("extra", {})
+                # the checkpointed param layout is geometry-dependent —
+                # resuming across geometries would silently misassign
+                # blocks to ranks, so mismatches fail loudly (legacy
+                # checkpoints carry no key == equal split)
+                ck_geo = extra.get("geometry")
+                cur_geo = list(geo.sizes) if geo is not None else None
+                if (ck_geo or cur_geo) and list(ck_geo or []) != \
+                        list(cur_geo or []):
+                    raise ValueError(
+                        f"checkpoint shard geometry {ck_geo} does not "
+                        f"match this run's geometry {cur_geo}; resuming "
+                        "across geometries is not supported")
                 if extra.get("layout") == ckpt_store.TRAIN_STATE_LAYOUT:
                     params = ckpt_store.restore(ckpt_dir, last, params,
                                                 in_sh[0], prefix="params")
@@ -185,6 +269,7 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                 "train_step": step_now,
                 "data_batches": batches_drawn,
                 "plane": plane.state_meta(),
+                "geometry": list(geo.sizes) if geo is not None else None,
                 "arch": arch, "tp": tp, "dp": dp, "seed": seed})
 
         # data
@@ -349,6 +434,8 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
         history["plan_compiles"] = plane.cache.compile_count
         history["plan_cache_hits"] = plane.cache.hit_count
         history["times_mode"] = control_cfg.times if control_cfg.enabled else "modeled"
+        if geo is not None:
+            history["geometry"] = list(geo.sizes)
         if plane.estimator is not None:
             history["chi_hat"] = [float(c) for c in plane.estimator.chi_hat]
             history["estimator_rejected"] = plane.estimator.rejected_total
@@ -383,6 +470,11 @@ def main():
                     help="multiplicative noise on simulated measurements")
     ap.add_argument("--mig-blocks", type=int, default=0,
                     help="per-source migration shed cap; 0 disables migration")
+    ap.add_argument("--geometry", default=None,
+                    help="static ragged TP shard geometry: 'chi' seeds "
+                         "per-rank FFN block counts from the hetero "
+                         "schedule's speed ratios; 'a,b,...' gives them "
+                         "explicitly (DESIGN_SHARDING.md)")
     ap.add_argument("--max-sources", type=int, default=3,
                     help="max concurrent migration stragglers per TP group")
     ap.add_argument("--batch", type=int, default=8)
@@ -413,7 +505,8 @@ def main():
         mig_blocks=args.mig_blocks, max_sources=args.max_sources,
         eval_every=args.eval_every, use_kernel=args.use_kernel,
         times=args.times, trace_in=args.trace_in, trace_out=args.trace_out,
-        measure_noise=args.measure_noise, ckpt_every=args.ckpt_every)
+        measure_noise=args.measure_noise, ckpt_every=args.ckpt_every,
+        geometry=args.geometry)
     print(f"final loss: {hist['final_loss']:.4f}  "
           f"mean modeled step: {hist['mean_modeled_step_s']*1e3:.2f} ms")
     if args.out:

@@ -19,6 +19,13 @@ Two execution paths per op:
   The per-slot shed counts live in ``PlanStatic.mig_sheds`` (static —
   quantized + compile-cached upstream); the source rank ids arrive as the
   dynamic ``mig_src`` vector, so retargeting stragglers never recompiles.
+
+A ragged static shard geometry (``PlanStatic.geometry``, core/geometry.py)
+changes what "the local workload" means: rank r owns ``geometry[r]`` real
+blocks of its padded local slice, branch tables are built per distinct
+size class, and every keep count quantizes against the rank's own block
+count — so statically-small ranks do statically less work before SEMI
+splits the residual imbalance.
 """
 from __future__ import annotations
 
@@ -183,6 +190,11 @@ def controlled_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
     e = st.tp_size
     sheds = st.mig_sheds                       # per-source shed counts (static)
     S = len(sheds)
+    # ragged static shard geometry (core/geometry.py): per-rank real block
+    # counts under the padded layout. An all-equal geometry is the plain
+    # equal split — normalize it away here too so equal-geometry plans
+    # trace the exact baseline jaxpr.
+    geo = st.geometry if len(set(st.geometry)) > 1 else ()
     pri = ctx.pri[scope]                       # [e, nb_loc]
     lead = x.shape[:-1]
     nl = len(lead)
@@ -215,6 +227,18 @@ def controlled_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
             raise ValueError(
                 f"mig_shed {sheds} must leave each source at least one of "
                 f"its {nb} local blocks")
+        if geo:
+            if len(geo) != e:
+                raise ValueError(
+                    f"geometry {geo} has {len(geo)} ranks, tp_size={e}")
+            if max(geo) != nb:
+                raise ValueError(
+                    f"geometry {geo}: max size {max(geo)} must equal the "
+                    f"padded local block count {nb} (Hloc={Hloc}, blk={blk})")
+            if S > 0 and max(sheds) >= min(geo):
+                raise ValueError(
+                    f"mig_shed {sheds} must leave the smallest-geometry "
+                    f"rank (L={min(geo)}) at least one real block")
 
         # source-slot vector: pad/trim the dynamic mig_src to S entries
         if S > 0:
@@ -249,12 +273,31 @@ def controlled_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
                                             use_kernel=ctx.use_kernel)
             return branch
 
-        kcs = [keep_blocks_for_bucket(g, nb) for g in st.buckets]
-        branches = [make_branch(kc) for kc in kcs]
-        for m_s in sheds:
-            branches += [make_branch(kc - m_s) for kc in kcs]
-        branch_idx = bucket_self + len(st.buckets) * jnp.where(
-            is_straggler, 1 + my_slot, 0).astype(jnp.int32)
+        if geo:
+            # one branch table per distinct rank size L ("size class"):
+            # keep counts are quantized against L, so a small rank at
+            # γ=0 runs exactly its L real blocks — the padding is never
+            # gathered and the static FLOP rebalance is real.
+            classes = sorted(set(geo))
+            branches, kc_rows = [], []
+            for L in classes:
+                kcs_L = [keep_blocks_for_bucket(g, L) for g in st.buckets]
+                branches += [make_branch(kc) for kc in kcs_L]
+                for m_s in sheds:
+                    branches += [make_branch(kc - m_s) for kc in kcs_L]
+                kc_rows.append(kcs_L)
+            class_self = jnp.asarray(
+                [classes.index(L) for L in geo], jnp.int32)[rank]
+            branch_idx = bucket_self + len(st.buckets) * jnp.where(
+                is_straggler, 1 + my_slot, 0).astype(jnp.int32) \
+                + len(st.buckets) * (1 + S) * class_self
+        else:
+            kcs = [keep_blocks_for_bucket(g, nb) for g in st.buckets]
+            branches = [make_branch(kc) for kc in kcs]
+            for m_s in sheds:
+                branches += [make_branch(kc - m_s) for kc in kcs]
+            branch_idx = bucket_self + len(st.buckets) * jnp.where(
+                is_straggler, 1 + my_slot, 0).astype(jnp.int32)
         partial = lax.switch(branch_idx, branches,
                              (x2, w_up_, w_gate_, w_down_, pri_))
 
@@ -263,8 +306,14 @@ def controlled_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
         # masked-psum broadcast and helpers fold their partials into the
         # layer's single psum (core/migration.py:fused_migration_delta).
         if S > 0:
-            kc_table = jnp.array(kcs, jnp.int32)
-            kc_self = kc_table[bucket_self]
+            if geo:
+                # [n_classes, n_buckets]: this rank's keep count depends on
+                # its size class as well as its bucket
+                kc_self = jnp.asarray(kc_rows, jnp.int32)[
+                    class_self, bucket_self]
+            else:
+                kc_table = jnp.array(kcs, jnp.int32)
+                kc_self = kc_table[bucket_self]
             exports = []
             for s, m_s in enumerate(sheds):
                 # start from the CLAMPED keep count max(kc − m_s, 1): the

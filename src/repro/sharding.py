@@ -184,6 +184,24 @@ def fit_spec_to_shape(spec: P, shape, mesh: Mesh) -> P:
     return P(*[_f(e, d) for e, d in zip(entries, shape)])
 
 
+def ragged_local_width(padded_width: int, mesh: Mesh,
+                       axis: str = "model") -> int:
+    """Per-rank lane count of the padded ragged-FFN layout.
+
+    A ragged shard geometry (core/geometry.py) is realized as zero-padded
+    EQUAL GSPMD shards on the "mlp" logical axis — rank r's slice holds
+    its geometry[r] real blocks first and inert zero blocks after, so no
+    sharding rule changes. This validates that the padded width actually
+    equal-splits over the mesh's TP axis and returns the local width."""
+    n = int(dict(mesh.shape).get(axis, 1))
+    if padded_width % n:
+        raise ValueError(
+            f"padded FFN width {padded_width} does not equal-split over "
+            f"the {n}-way {axis!r} mesh axis — the geometry's padded "
+            "layout is malformed")
+    return padded_width // n
+
+
 def param_sharding_tree(abstract_params, mesh: Mesh, logical_axes_tree, rules=None):
     """Build a NamedSharding pytree for params from a logical-axes pytree."""
     def _one(axes):

@@ -41,6 +41,27 @@ def sampled_from(elements) -> _Strategy:
     return _Strategy(lambda rng: rng.choice(elements))
 
 
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          **_kw) -> _Strategy:
+    return _Strategy(lambda rng: [
+        elements.sample(rng)
+        for _ in range(rng.randint(min_size, max_size))])
+
+
+class _Data:
+    """Interactive draw object mirroring hypothesis' `st.data()`."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.sample(self._rng)
+
+
+def data() -> _Strategy:
+    return _Strategy(lambda rng: _Data(rng))
+
+
 def settings(max_examples: int = None, deadline=None, **_kw):  # noqa: D103
     def deco(fn):
         if max_examples is not None:
@@ -101,7 +122,8 @@ def install() -> types.ModuleType:
     mod.assume = assume
     mod.HealthCheck = HealthCheck
     strat = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "booleans", "sampled_from"):
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "data"):
         setattr(strat, name, globals()[name])
     mod.strategies = strat
     sys.modules["hypothesis"] = mod

@@ -16,7 +16,8 @@ import textwrap
 import numpy as np
 import pytest
 
-from repro.launch.serve import (FixedBatchEngine, Request, ServeControlConfig,
+from repro.control import ControlConfig
+from repro.launch.serve import (FixedBatchEngine, Request,
                                 ServeEngine, latency_percentiles)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -88,7 +89,7 @@ class TestServeSemiMigration:
         """On a single-device mesh there are no helpers to migrate to:
         the projection folds the sim-scale migration plan to resize-only
         and the engine still completes every request."""
-        ctl = ServeControlConfig(mode="semi", hetero_kind="contention",
+        ctl = ControlConfig(mode="semi", hetero_kind="contention",
                                  chi=4.0, contention_p=0.15, sim_ranks=8,
                                  seed=3)
         eng = ServeEngine("yi-6b", num_slots=2, max_len=12, seed=0,
@@ -110,8 +111,9 @@ class TestServeSemiMigration:
         same schedule, and migration genuinely executed."""
         code = """
 import numpy as np
+from repro.control import ControlConfig
 from repro.launch.serve import (FixedBatchEngine, Request,
-                                ServeControlConfig, ServeEngine)
+                                ServeEngine)
 
 def mk(vocab, specs, seed=0):
     rng = np.random.default_rng(seed)
@@ -120,7 +122,7 @@ def mk(vocab, specs, seed=0):
                     max_new_tokens=g, arrival_step=a)
             for i, (p, g, a) in enumerate(specs)]
 
-ctl = ServeControlConfig(mode="semi", hetero_kind="contention", chi=4.0,
+ctl = ControlConfig(mode="semi", hetero_kind="contention", chi=4.0,
                          contention_p=0.2, sim_ranks=4, max_sources=3,
                          seed=3)
 eng = ServeEngine("yi-6b", num_slots=2, max_len=16, seed=0, tp=4,
@@ -172,7 +174,7 @@ class TestServeEngineSlow:
         beat dense under the SAME schedule, the plan compile cache builds
         each signature once, and the controlled step still completes every
         request."""
-        ctl = ServeControlConfig(mode="zero", hetero_kind="contention",
+        ctl = ControlConfig(mode="zero", hetero_kind="contention",
                                  chi=4.0, contention_p=0.15, sim_ranks=8,
                                  seed=3)
         eng = ServeEngine("yi-6b", num_slots=2, max_len=16, seed=0,
@@ -193,7 +195,7 @@ class TestServeEngineSlow:
         """With control enabled but NO straggler, every rank keeps its
         full workload (bucket 0 dense branch) and the controlled step's
         tokens match the uncontrolled baseline exactly."""
-        ctl = ServeControlConfig(mode="zero", hetero_kind="none")
+        ctl = ControlConfig(mode="zero", hetero_kind="none")
         eng = ServeEngine("yi-6b", num_slots=2, max_len=12, seed=0,
                           control=ctl)
         reqs = _mk_requests(eng.cfg.vocab_size, [(4, 4, 0), (5, 3, 2)])
