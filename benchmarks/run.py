@@ -29,6 +29,7 @@ JOBS = [
     ("fig10", "benchmarks.single_straggler", True, False),
     ("fig11", "benchmarks.multi_straggler", False, True),
     ("serve", "benchmarks.serve_bench", False, True),
+    ("xla_flags", "benchmarks.xla_flags_sweep", False, True),
     ("telemetry", "benchmarks.telemetry_bench", False, True),
     ("ablate", "benchmarks.ablations", True, False),
 ]
@@ -36,7 +37,7 @@ JOBS = [
 
 # named job subsets for --suite (CI entry points)
 SUITES = {
-    "kernels": {"kernel"},
+    "kernels": {"kernel", "xla_flags"},
     "migration": {"fig11", "tab1"},
     "serve": {"serve"},
     "telemetry": {"telemetry"},

@@ -85,6 +85,51 @@ def run_engine(mode: str, *, num_slots: int, max_len: int, trace_args,
     return eng, comps, stats
 
 
+DECODE_PSUM_CHUNKS = 4
+
+
+def run_decode_path_engine(leg: str, *, num_slots: int, max_len: int,
+                           trace_args, seed: int = 0):
+    """One decode-path leg (ISSUE 7) under the SAME contention schedule
+    as the classic legs, with the decode-overhead model ON — attention
+    cache reads and collective exposure priced per step from the actual
+    per-slot positions:
+
+    * ``unfused``       — oracle attention, one fat epilogue psum
+                          (PR 6 behavior, honestly priced);
+    * ``fused``         — fused Pallas decode attention, fat psum;
+    * ``fused_overlap`` — fused attention + chunked epilogue psum.
+
+    All three run mode="zero" so the fused path is exercised COMPOSED
+    with ZERO-resized decode (the tentpole composition requirement)."""
+    fused = leg != "unfused"
+    chunks = DECODE_PSUM_CHUNKS if leg == "fused_overlap" else 1
+    control = ControlConfig(
+        mode="zero", hetero_kind="contention", chi=CHI,
+        contention_p=CONTENTION_P, sim_ranks=SIM_RANKS,
+        fused_attention=fused, psum_chunks=chunks,
+        model_decode_overheads=True, seed=seed)
+    eng = ServeEngine(ARCH, num_slots=num_slots, max_len=max_len,
+                      control=control, seed=seed)
+    comps = eng.run(make_trace(eng.cfg.vocab_size, *trace_args))
+    eng.close()
+    stats = latency_percentiles(comps, total_time_s=eng.clock)
+    hist = [h for h in eng.history if "overhead_s" in h]
+    stats["mean_step_latency_s"] = float(
+        np.mean([h["latency_s"] for h in hist]))
+    stats["mean_overhead_s"] = float(
+        np.mean([h["overhead_s"] for h in hist]))
+    stats["mean_occupancy"] = float(
+        np.mean([h["occupancy"] for h in hist]))
+    # roofline floor for each step: χ=1 full-workload matmul + the
+    # occupied-tiles-only attention read, zero exposed collective
+    stats["mean_roofline_s"] = float(np.mean(
+        [eng.it_model.matmul_time + h["attn_bound_s"] for h in hist]))
+    stats["roofline_distance_s"] = (stats["mean_step_latency_s"]
+                                    - stats["mean_roofline_s"])
+    return comps, stats
+
+
 _SEMI_CHILD = """
 import json
 import numpy as np
@@ -181,6 +226,35 @@ def main() -> list:
         f"tok_s={s['tok_per_s']:.1f},mig_steps={semi['migrated_steps']},"
         f"token_exact={semi['token_exact']}"))
 
+    # -- decode-path legs (ISSUE 7): fused attention + chunked psum -------
+    decode_path = {}
+    decode_tokens = {}
+    for leg in ("unfused", "fused", "fused_overlap"):
+        comps, stats = run_decode_path_engine(
+            leg, num_slots=num_slots, max_len=max_len,
+            trace_args=trace_args)
+        decode_path[leg] = stats
+        decode_tokens[leg] = {c.uid: c.tokens for c in comps}
+        rows.append(csv_row(
+            f"serve_decode_{leg}", stats["p50_ms"] * 1e3,
+            f"p50={stats['p50_ms']:.3f}ms,p95={stats['p95_ms']:.3f}ms,"
+            f"occ={stats['mean_occupancy']:.2f},"
+            f"roof_dist={stats['roofline_distance_s']*1e3:.3f}ms"))
+
+    u, f, fo = (decode_path["unfused"], decode_path["fused"],
+                decode_path["fused_overlap"])
+    decode_exact = all(
+        np.array_equal(decode_tokens["unfused"][uid], toks)
+        for leg in ("fused", "fused_overlap")
+        for uid, toks in decode_tokens[leg].items())
+    decode_p50_speedup = u["p50_ms"] / max(fo["p50_ms"], 1e-12)
+    rows.append(csv_row(
+        "serve_decode_speedup", 0.0,
+        f"p50_speedup={decode_p50_speedup:.2f}x,"
+        f"token_exact={decode_exact},"
+        f"roof_dist_unfused={u['roofline_distance_s']*1e3:.3f}ms,"
+        f"roof_dist_both={fo['roofline_distance_s']*1e3:.3f}ms"))
+
     d, r = results["dense"], results["resized"]
     speedup_p95 = d["p95_ms"] / max(r["p95_ms"], 1e-12)
     speedup_tput = r["tok_per_s"] / max(d["tok_per_s"], 1e-12)
@@ -202,7 +276,13 @@ def main() -> list:
                "semi_migrated_steps": semi["migrated_steps"],
                "semi_resize_steps": semi["resize_steps"],
                "p95_speedup": speedup_p95, "tput_speedup": speedup_tput,
-               "semi_p95_speedup": semi_speedup_p95}
+               "semi_p95_speedup": semi_speedup_p95,
+               "decode_path": {
+                   "unfused": u, "fused": f, "fused_overlap": fo,
+                   "psum_chunks": DECODE_PSUM_CHUNKS,
+                   "p50_speedup": decode_p50_speedup,
+                   "token_exact": decode_exact,
+                   "mean_occupancy": fo["mean_occupancy"]}}
     save_bench_json("serve", config, metrics, trajectory=True)
 
     # regression gates (serving analogue of the kernel-bench ratio gate):
@@ -222,6 +302,23 @@ def main() -> list:
         raise RuntimeError(
             f"serve bench regression: semi p95 {s['p95_ms']:.3f}ms did "
             f"not beat dense p95 {d['p95_ms']:.3f}ms under contention")
+    # decode-path gates (ISSUE 7): fused+overlap must beat the honestly
+    # priced unfused path on p50, token-for-token, and land measurably
+    # closer to the occupancy roofline
+    if fo["p50_ms"] >= u["p50_ms"]:
+        raise RuntimeError(
+            f"serve bench regression: fused+overlap decode p50 "
+            f"{fo['p50_ms']:.3f}ms did not beat unfused p50 "
+            f"{u['p50_ms']:.3f}ms")
+    if not decode_exact:
+        raise RuntimeError(
+            "serve bench regression: fused decode path diverged from the "
+            "unfused oracle path — the kernel must be token-exact")
+    if fo["roofline_distance_s"] >= u["roofline_distance_s"]:
+        raise RuntimeError(
+            f"serve bench regression: fused+overlap decode is not closer "
+            f"to the roofline bound ({fo['roofline_distance_s']:.6f}s vs "
+            f"unfused {u['roofline_distance_s']:.6f}s)")
     return rows
 
 

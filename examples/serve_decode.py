@@ -44,6 +44,33 @@ def serve(arch: str, num_slots=2, max_len=16):
     return eng
 
 
+def serve_fused(arch: str, num_slots=2, max_len=16):
+    """Fused decode-attention path, selected through the ONE shared
+    config plumbing (ControlConfig.fused_attention — same knob the serve
+    CLI and benches use; no per-driver env sniffing). On CPU the kernel
+    transparently runs in interpret mode. Must be token-exact vs the
+    plain engine."""
+    control = ControlConfig(fused_attention=True,
+                           psum_chunks=2)
+    eng = ServeEngine(arch, num_slots=num_slots, max_len=max_len, seed=0,
+                      control=control)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, eng.cfg.vocab_size,
+                                        (p,)).astype(np.int32),
+                    max_new_tokens=g, arrival_step=a)
+            for i, (p, g, a) in enumerate([(5, 6, 0), (7, 4, 2), (4, 5, 6)])]
+    comps = eng.run(reqs)
+
+    plain = ServeEngine(arch, num_slots=num_slots, max_len=max_len, seed=0)
+    ref = {c.uid: c.tokens for c in plain.run(reqs)}
+    for c in comps:
+        assert np.array_equal(c.tokens, ref[c.uid]), \
+            f"{arch} req {c.uid}: fused attention diverged"
+    print(f"{arch}: fused decode attention token-exact vs oracle path "
+          f"({len(comps)} requests)")
+
+
 def serve_controlled(arch: str):
     """Same engine under χ=4 contention with ZERO-resized decode."""
     control = ControlConfig(mode="zero", hetero_kind="contention",
@@ -67,9 +94,10 @@ def serve_controlled(arch: str):
 def main():
     for arch in ("yi-6b", "falcon-mamba-7b", "mixtral-8x7b"):
         serve(arch)
+    serve_fused("yi-6b")
     serve_controlled("yi-6b")
     print("serving paths OK (KV slots, SSM state reset, MoE decode, "
-          "straggler-aware resizing)")
+          "fused decode attention, straggler-aware resizing)")
 
 
 if __name__ == "__main__":

@@ -116,6 +116,12 @@ class ModelConfig:
     frontend: Optional[FrontendStub] = None
     # classification head (the paper's ViT); 0 => LM head over vocab
     num_classes: int = 0
+    # decode hot path: route GQA/MLA decode attention through the fused
+    # Pallas kernel (kernels/decode_attn.py; interpret-mode off-TPU).
+    # Model-level (not ControlContext) because the dense serve path runs
+    # with ctx=None — set via ControlConfig.fused_attention, which the
+    # step builders apply with dataclasses.replace.
+    fused_decode_attn: bool = False
     source: str = ""              # citation
 
     @property
@@ -262,6 +268,14 @@ class WorkloadControlConfig:
     # execution: route controlled matmuls through the Pallas pruned-kernel
     # family (fused FFN + kernel-level backward; interpret-mode off-TPU)
     use_kernel: bool = False
+    # decode raw-speed pass (ISSUE 7): fused decode-attention kernel and
+    # chunked TP all-reduce epilogues. fused_attention flips
+    # ModelConfig.fused_decode_attn in the step builders; psum_chunks > 1
+    # splits the controlled-layer epilogue psum into that many
+    # independent per-chunk all-reduces so the latency-hiding scheduler
+    # can overlap them with the remaining compute.
+    fused_attention: bool = False
+    psum_chunks: int = 1
     # telemetry / closed-loop measured mode (DESIGN_TELEMETRY.md):
     # where the controller's per-rank times come from. "modeled" reads the
     # χ-oracle straight from the simulated schedule; "measured" consumes
@@ -280,6 +294,9 @@ class WorkloadControlConfig:
             raise ValueError(
                 f"beta_policy {self.beta_policy!r} is not one of "
                 "('eq2', 'lossless')")
+        if self.psum_chunks < 1:
+            raise ValueError(
+                f"psum_chunks must be >= 1, got {self.psum_chunks}")
 
 
 @dataclass(frozen=True)

@@ -50,6 +50,16 @@ class ControlConfig:
     selection: str = "priority"        # random | priority | priority_diff
     straggler_threshold: float = 0.12
     use_kernel: bool = False
+    # decode raw-speed knobs (ISSUE 7) — the ONE shared plumbing for the
+    # fused decode-attention path (examples + benches + CLI select it
+    # here, never via env sniffing). fused_attention works in every mode
+    # including "off"; psum_chunks > 1 chunk-splits the controlled-layer
+    # epilogue all-reduce; model_decode_overheads prices the decode
+    # attention memory term + collective exposure into the engine's
+    # latency model (off by default: the classic legs stay bit-stable).
+    fused_attention: bool = False
+    psum_chunks: int = 1
+    model_decode_overheads: bool = False
     seed: int = 0
     peak_flops: float = 5e9            # latency-model calibration (host CPU)
     mfu: float = 1.0
@@ -67,6 +77,9 @@ class ControlConfig:
     def __post_init__(self):
         if self.mode not in _MODES:
             raise ValueError(f"mode {self.mode!r} is not one of {_MODES}")
+        if self.psum_chunks < 1:
+            raise ValueError(
+                f"psum_chunks must be >= 1, got {self.psum_chunks}")
         if self.geometry is not None:
             self.geometry = tuple(int(s) for s in self.geometry)
             if any(s < 1 for s in self.geometry):
@@ -97,5 +110,8 @@ class ControlConfig:
             migration_shed_cap=self.shed_cap,
             beta_policy=self.beta_policy,
             straggler_threshold=self.straggler_threshold,
-            use_kernel=self.use_kernel, times=self.times,
+            use_kernel=self.use_kernel,
+            fused_attention=self.fused_attention,
+            psum_chunks=self.psum_chunks,
+            times=self.times,
             measure_interval=self.measure_interval)

@@ -129,3 +129,98 @@ def iteration_model(model_cfg, shape_cfg, tp: int,
     f = matmul_flops_per_rank(model_cfg, shape_cfg, tp)
     t_mm = f / (peak_flops * mfu)
     return IterationModel(matmul_time=t_mm, other_time=comm_frac * t_mm)
+
+
+# ---------------------------------------------------------------------------
+# decode-step overhead model (ISSUE 7): the terms the IterationModel
+# deliberately excludes — decode attention's cache-read bandwidth and the
+# exposed TP all-reduce — priced per step from the ACTUAL slot occupancy.
+# ---------------------------------------------------------------------------
+
+# HBM bandwidth per peak FLOP (TPU v5e: 819 GB/s against 197 TFLOP/s).
+# The serve engine's latency model is calibrated in arbitrary peak_flops
+# units (5e9 on the host simulator); keeping the bytes/FLOP ratio at the
+# hardware's value keeps the RELATIVE weight of memory-bound attention
+# vs compute-bound matmul realistic — decode at small batch is
+# attention-read dominated, which is exactly what the fused kernel and
+# the roofline correction (benchmarks/roofline.py) are about.
+HBM_BYTES_PER_FLOP = 819e9 / 197e12
+
+
+@dataclasses.dataclass
+class DecodeOverheadModel:
+    """Per-step decode overheads from actual per-slot cache occupancy.
+
+    * attention memory term: the UNFUSED path reads every ``max_len``
+      cache row of every slot each step plus a full score-matrix HBM
+      round-trip; the FUSED kernel reads only the occupied 128-row tiles
+      (``pl.when`` skip) and keeps scores in VMEM.
+    * collective exposure: the IterationModel's ``other_time`` charges
+      one fat synchronous all-reduce; with ``psum_chunks`` k > 1 only
+      ~1/k of it stays exposed (the first chunk), the rest overlaps
+      with compute under the latency-hiding scheduler.
+
+    ``overhead_s`` returns the DELTA against the plain IterationModel
+    step (which already includes ``comm_time``), so it can be added to
+    ``IterationModel.step_time`` without double counting.
+    """
+
+    kv_bytes_per_pos: float     # cache bytes read per occupied row (all layers)
+    score_bytes_per_pos: float  # unfused score round-trip per row (all layers)
+    num_slots: int
+    max_len: int
+    tile: int                   # fused kernel touches whole tiles
+    hbm_bw: float               # bytes/s at the calibrated scale
+    comm_time: float            # modeled exposed all-reduce time (1 chunk), s
+
+    def attn_s(self, cur_pos, fused: bool) -> float:
+        cur = np.asarray(cur_pos, np.float64)
+        if fused:
+            # a tile can't be wider than the cache itself (a short
+            # max_len is covered by a single tile), and a slot never
+            # reads more rows than it has
+            ts = min(self.tile, self.max_len)
+            rows = float(np.minimum(np.ceil((cur + 1.0) / ts) * ts,
+                                    self.max_len).sum())
+            return rows * self.kv_bytes_per_pos / self.hbm_bw
+        rows = float(self.num_slots * self.max_len)
+        return rows * (self.kv_bytes_per_pos
+                       + self.score_bytes_per_pos) / self.hbm_bw
+
+    def comm_exposed_s(self, psum_chunks: int) -> float:
+        return self.comm_time / max(int(psum_chunks), 1)
+
+    def overhead_s(self, cur_pos, *, fused: bool, psum_chunks: int) -> float:
+        return self.attn_s(cur_pos, fused) \
+            - (self.comm_time - self.comm_exposed_s(psum_chunks))
+
+
+def decode_overhead_model(model_cfg, num_slots: int, max_len: int,
+                          it_model: IterationModel, *,
+                          peak_flops: float, bytes_per_el: int = 4,
+                          tile: int = 128) -> DecodeOverheadModel:
+    """Build the decode overhead model for one engine configuration.
+
+    Attention-free (SSM) families have no cache-attention term; MLA
+    reads the compressed latent+rope row (latent twice: scores and the
+    weighted sum); GQA reads K and V. Score traffic counts 3 HBM
+    accesses per score element (write, softmax read, weighted-sum read)
+    at f32."""
+    c = model_cfg
+    L = c.num_layers
+    if c.is_attention_free:
+        kv_bytes = score_bytes = 0.0
+    elif c.mla is not None:
+        m = c.mla
+        width = 2.0 * m.kv_lora_rank + m.qk_rope_head_dim
+        kv_bytes = width * bytes_per_el * L
+        score_bytes = 3.0 * c.num_heads * 4.0 * L
+    else:
+        kv = c.num_kv_heads * c.resolved_head_dim
+        kv_bytes = 2.0 * kv * bytes_per_el * L
+        score_bytes = 3.0 * c.num_heads * 4.0 * L
+    return DecodeOverheadModel(
+        kv_bytes_per_pos=kv_bytes, score_bytes_per_pos=score_bytes,
+        num_slots=num_slots, max_len=max_len, tile=tile,
+        hbm_bw=peak_flops * HBM_BYTES_PER_FLOP,
+        comm_time=it_model.other_time)

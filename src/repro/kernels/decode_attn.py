@@ -1,0 +1,372 @@
+"""Fused decode-attention Pallas TPU kernels (ISSUE 7 tentpole).
+
+One-token GQA decode attention over the slot KV cache with RAGGED
+per-slot positions: slot b attends cache rows ``pos <= cur_pos[b]``
+(optionally windowed). The reference path
+(``layers/attention.py:decode_attention``) materializes the full
+``[num_slots, Hkv, G, max_len]`` score tensor in HBM, round-trips it
+through softmax, and reads every cache row regardless of how full the
+slot actually is. The fused kernel here is ONE ``pallas_call``:
+
+* the KV cache is streamed in ``(ts=128, D)`` tiles along ``max_len``;
+* ``cur_pos`` is scalar-prefetched (SMEM) and drives BOTH the in-kernel
+  position mask (``broadcasted_iota`` — TPU has no 1-D iota) and a
+  ``pl.when`` tile skip, so fully-out-of-range tiles of a mostly-empty
+  slot are never multiplied;
+* softmax is the online (m, l, acc) recurrence in f32 VMEM scratch —
+  the score matrix never exists in HBM;
+* the output tile is written once, on the last ``max_len`` tile.
+
+``mla_decode_attn_2d`` covers the absorbed-MLA decode path
+(``mla_decode_attention``): scores against the compressed latent cache
+(nope·latent + rope·rope), weighted sum back over the latents.
+
+The three-kernel UNFUSED pipeline at the bottom (scores → softmax →
+weighted-sum, score matrix round-tripping HBM between calls) is the
+matched-execution-layer baseline for ``benchmarks/kernel_bench.py`` —
+comparing a fused pallas kernel against native XLA would measure the
+interpreter gap on CPU, not the algorithm (see DESIGN_KERNELS.md §7).
+
+Inference-only contract: none of these kernels define a VJP —
+differentiating through them raises. Decode is the serve hot path; the
+train/prefill path keeps the chunked flash oracle (which is
+differentiable).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+TILE_S = 128          # cache-row tile: MXU lane width
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+def _params(*semantics):
+    return _CompilerParams(dimension_semantics=semantics)
+
+
+def _tile_valid(base, cur, *, ts: int, window: int):
+    """Does cache tile [base, base+ts) intersect (cur-window, cur]?
+
+    Skipping must be exact: an all-masked tile that still runs would
+    feed exp(NEG_INF - NEG_INF) = 1 into the online-softmax state."""
+    valid = base <= cur
+    if window > 0:
+        valid = jnp.logical_and(valid, base + ts - 1 > cur - window)
+    return valid
+
+
+# ---------------------------------------------------------------------------
+# fused GQA decode attention
+# ---------------------------------------------------------------------------
+
+
+def _gqa_kernel(cur_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, scale: float, window: int, ts: int, ns: int, hkv: int):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = cur_ref[pl.program_id(0)]
+    base = s * ts
+
+    @pl.when(_tile_valid(base, cur, ts=ts, window=window))
+    def _tile():
+        G = q_ref.shape[2]
+        # all KV heads of this slot share the tile loop: per-head dots
+        # (hkv is static — the loop unrolls), one stacked [Hkv*G, ts]
+        # online-softmax update
+        scores = jnp.concatenate(
+            [jax.lax.dot_general(
+                q_ref[0, h], k_ref[0, h], (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+             for h in range(hkv)], axis=0) * scale        # [Hkv*G, ts]
+        R = scores.shape[0]
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (R, ts), 1)
+        ok = pos <= cur
+        if window > 0:
+            ok = jnp.logical_and(ok, pos > cur - window)
+        scores = jnp.where(ok, scores, NEG_INF)
+
+        m_prev = m_ref[...]                            # [Hkv*G, ts] replicated
+        m_new = jnp.maximum(m_prev,
+                            jnp.max(scores, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_ref[...] = l_ref[...] * corr \
+            + jnp.sum(p, axis=1, keepdims=True)
+        pv = jnp.concatenate(
+            [jax.lax.dot_general(
+                p[h * G:(h + 1) * G], v_ref[0, h].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+             for h in range(hkv)], axis=0)               # [Hkv*G, Dv]
+        acc_ref[...] = acc_ref[...] * corr[:, 0:1] + pv
+        m_ref[...] = m_new
+
+    @pl.when(s == ns - 1)
+    def _emit():
+        G, Dv = q_ref.shape[2], acc_ref.shape[1]
+        l = jnp.maximum(l_ref[:, 0:1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(
+            o_ref.dtype).reshape(q_ref.shape[1], G, Dv)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "window", "interpret"))
+def gqa_decode_attn_2d(cur_pos: jax.Array, q: jax.Array, k: jax.Array,
+                       v: jax.Array, *, scale: float, window: int = 0,
+                       interpret: bool = True) -> jax.Array:
+    """q [B, Hkv, G, D]; k [B, Hkv, S, D]; v [B, Hkv, S, Dv];
+    cur_pos int32 [B]. Returns [B, Hkv, G, Dv] in q.dtype. S % 128 == 0,
+    G % 8 == 0, D/Dv % 128 == 0 required (ops.py pads).
+
+    The grid is (B, ns): every KV head of a slot is processed in the
+    SAME grid step (part of the fusion — one pass over the slot's tile
+    sequence instead of Hkv passes, q/scratch stay resident)."""
+    B, Hkv, G, D = q.shape
+    S, Dv = k.shape[2], v.shape[3]
+    ts = TILE_S
+    if S % ts or G % 8 or D % 128 or Dv % 128:
+        raise ValueError(
+            f"gqa_decode_attn_2d: q {q.shape}, k {k.shape}, v {v.shape} — "
+            f"need S % {ts} == 0, G % 8 == 0, D/Dv % 128 == 0 "
+            "(ops.py pads before calling)")
+    ns = S // ts
+    kernel = functools.partial(_gqa_kernel, scale=scale, window=window,
+                               ts=ts, ns=ns, hkv=Hkv)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, ns),
+            in_specs=[
+                pl.BlockSpec((1, Hkv, G, D), lambda b, s, cur: (b, 0, 0, 0)),
+                pl.BlockSpec((1, Hkv, ts, D), lambda b, s, cur: (b, 0, s, 0)),
+                pl.BlockSpec((1, Hkv, ts, Dv), lambda b, s, cur: (b, 0, s, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, Hkv, G, Dv),
+                                   lambda b, s, cur: (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Hkv * G, ts), jnp.float32),   # running max m
+                pltpu.VMEM((Hkv * G, ts), jnp.float32),   # running sum l
+                pltpu.VMEM((Hkv * G, Dv), jnp.float32),   # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        interpret=interpret,
+        compiler_params=_params("parallel", "arbitrary"),
+    )(cur_pos, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# fused MLA decode attention (absorbed form, compressed latent cache)
+# ---------------------------------------------------------------------------
+
+
+def _mla_kernel(cur_ref, qa_ref, qr_ref, lat_ref, rope_ref, o_ref,
+                m_ref, l_ref, acc_ref, *, scale: float, ts: int, ns: int):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = cur_ref[pl.program_id(0)]
+    base = s * ts
+
+    @pl.when(_tile_valid(base, cur, ts=ts, window=0))
+    def _tile():
+        qa = qa_ref[0]                                    # [H, R]
+        qr = qr_ref[0]                                    # [H, Dr]
+        lat = lat_ref[0]                                  # [ts, R]
+        rope = rope_ref[0]                                # [ts, Dr]
+        scores = (jax.lax.dot_general(
+            qa, lat, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+            + jax.lax.dot_general(
+                qr, rope, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)) * scale    # [H, ts]
+        H = scores.shape[0]
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (H, ts), 1)
+        scores = jnp.where(pos <= cur, scores, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev,
+                            jnp.max(scores, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_ref[...] = l_ref[...] * corr \
+            + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr[:, 0:1] + jax.lax.dot_general(
+            p, lat.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(s == ns - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[:, 0:1], 1e-30)
+        o_ref[0] = acc_ref[...] / l
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def mla_decode_attn_2d(cur_pos: jax.Array, q_abs: jax.Array,
+                       q_rope: jax.Array, latent: jax.Array,
+                       rope: jax.Array, *, scale: float,
+                       interpret: bool = True) -> jax.Array:
+    """q_abs [B, H, R]; q_rope [B, H, Dr]; latent [B, S, R];
+    rope [B, S, Dr]; cur_pos int32 [B]. Returns f32 [B, H, R] (the
+    attention-weighted latents, matching ``mla_decode_attention``)."""
+    B, H, R = q_abs.shape
+    Dr, S = q_rope.shape[2], latent.shape[1]
+    ts = TILE_S
+    if S % ts or H % 8 or R % 128 or Dr % 128:
+        raise ValueError(
+            f"mla_decode_attn_2d: q_abs {q_abs.shape}, q_rope "
+            f"{q_rope.shape}, latent {latent.shape} — need S % {ts} == 0, "
+            "H % 8 == 0, R/Dr % 128 == 0 (ops.py pads before calling)")
+    ns = S // ts
+    kernel = functools.partial(_mla_kernel, scale=scale, ts=ts, ns=ns)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, ns),
+            in_specs=[
+                pl.BlockSpec((1, H, R), lambda b, s, cur: (b, 0, 0)),
+                pl.BlockSpec((1, H, Dr), lambda b, s, cur: (b, 0, 0)),
+                pl.BlockSpec((1, ts, R), lambda b, s, cur: (b, s, 0)),
+                pl.BlockSpec((1, ts, Dr), lambda b, s, cur: (b, s, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, R), lambda b, s, cur: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, ts), jnp.float32),
+                pltpu.VMEM((H, ts), jnp.float32),
+                pltpu.VMEM((H, R), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, R), jnp.float32),
+        interpret=interpret,
+        compiler_params=_params("parallel", "arbitrary"),
+    )(cur_pos, q_abs, q_rope, latent, rope)
+
+
+# ---------------------------------------------------------------------------
+# unfused three-kernel pipeline (benchmark baseline, GQA only)
+#
+# What the fused kernel removes, made explicit: the full [B, Hkv, G, S]
+# score matrix is WRITTEN to HBM by the scores kernel, READ + re-written
+# by the softmax kernel, and READ again by the weighted-sum kernel —
+# and every cache tile is touched regardless of cur_pos.
+# ---------------------------------------------------------------------------
+
+
+def _scores_kernel(cur_ref, q_ref, k_ref, s_ref, *, scale: float,
+                   window: int, ts: int):
+    cur = cur_ref[pl.program_id(0)]
+    base = pl.program_id(2) * ts
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    G = scores.shape[0]
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (G, ts), 1)
+    ok = pos <= cur
+    if window > 0:
+        ok = jnp.logical_and(ok, pos > cur - window)
+    s_ref[0, 0] = jnp.where(ok, scores, NEG_INF)
+
+
+def _softmax_kernel(s_ref, p_ref):
+    p_ref[0, 0] = jax.nn.softmax(s_ref[0, 0], axis=-1)
+
+
+def _wsum_kernel(p_ref, v_ref, o_ref, acc_ref, *, ns: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        p_ref[0, 0], v_ref[0, 0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(s == ns - 1)
+    def _emit():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "window", "interpret"))
+def unfused_gqa_decode_attn_2d(cur_pos: jax.Array, q: jax.Array,
+                               k: jax.Array, v: jax.Array, *, scale: float,
+                               window: int = 0,
+                               interpret: bool = True) -> jax.Array:
+    """Same contract as :func:`gqa_decode_attn_2d`, computed as three
+    pallas_calls with the score matrix round-tripping HBM twice."""
+    B, Hkv, G, D = q.shape
+    S, Dv = k.shape[2], v.shape[3]
+    ts = TILE_S
+    if S % ts or G % 8 or D % 128 or Dv % 128:
+        raise ValueError(
+            f"unfused_gqa_decode_attn_2d: q {q.shape}, k {k.shape}, "
+            f"v {v.shape} — need S % {ts} == 0, G % 8 == 0, "
+            "D/Dv % 128 == 0 (ops.py pads before calling)")
+    ns = S // ts
+
+    scores = pl.pallas_call(
+        functools.partial(_scores_kernel, scale=scale, window=window, ts=ts),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Hkv, ns),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, s, cur: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, ts, D), lambda b, h, s, cur: (b, h, s, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, ts),
+                                   lambda b, h, s, cur: (b, h, 0, s)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, S), jnp.float32),
+        interpret=interpret,
+        compiler_params=_params("parallel", "parallel", "arbitrary"),
+    )(cur_pos, q, k)
+
+    probs = pl.pallas_call(
+        _softmax_kernel,
+        grid=(B, Hkv),
+        in_specs=[pl.BlockSpec((1, 1, G, S), lambda b, h: (b, h, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, G, S), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, S), jnp.float32),
+        interpret=interpret,
+        compiler_params=_params("parallel", "parallel"),
+    )(scores)
+
+    return pl.pallas_call(
+        functools.partial(_wsum_kernel, ns=ns),
+        grid=(B, Hkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, ts), lambda b, h, s: (b, h, 0, s)),
+            pl.BlockSpec((1, 1, ts, Dv), lambda b, h, s: (b, h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, s: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, Dv), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        interpret=interpret,
+        compiler_params=_params("parallel", "parallel", "arbitrary"),
+    )(probs, v)

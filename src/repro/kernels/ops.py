@@ -24,6 +24,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import decode_attn as _dk
 from repro.kernels import pruned_matmul as _pk
 from repro.kernels import ref as _ref
 
@@ -327,3 +328,117 @@ fused_pruned_ffn.defvjp(_ffn_fwd, _ffn_bwd)
 
 # re-export the oracle for convenience
 block_pruned_matmul_ref = _ref.block_pruned_matmul_ref
+
+
+# ---------------------------------------------------------------------------
+# fused decode attention (inference-only: no VJP is defined — taking a
+# gradient through these raises at trace time, which is the contract)
+# ---------------------------------------------------------------------------
+
+
+def _check_decode_attn(q, k_cache, v_cache, cur_pos):
+    B, Hq, S1, _ = q.shape
+    Hkv = k_cache.shape[1]
+    if S1 != 1:
+        raise ValueError(
+            f"fused_decode_attention: q {q.shape} must carry exactly one "
+            "query token (decode step), got seq len "
+            f"{S1}")
+    if Hq % Hkv != 0:
+        raise ValueError(
+            f"fused_decode_attention: Hq={Hq} is not a multiple of "
+            f"Hkv={Hkv} (GQA groups must divide evenly)")
+    if k_cache.shape[0] != B or v_cache.shape[:3] != k_cache.shape[:3]:
+        raise ValueError(
+            f"fused_decode_attention: cache shapes k {k_cache.shape} / "
+            f"v {v_cache.shape} do not match q batch {B}")
+    if cur_pos.shape != (B,):
+        raise ValueError(
+            f"fused_decode_attention: cur_pos {cur_pos.shape} must be "
+            f"[{B}] (one ragged position per slot)")
+
+
+def _decode_attn_padded(q, k_cache, v_cache, cur_pos):
+    """Common GQA padding: (qg [B,Hkv,G',D'], k, v, G, Dv, scale)."""
+    B, Hq, _, D = q.shape
+    Hkv = k_cache.shape[1]
+    Dv = v_cache.shape[3]
+    G = Hq // Hkv
+    scale = float(1.0 / (D ** 0.5))      # ORIGINAL head dim, pre-padding
+    qg = q.reshape(B, Hkv, G, D)
+    qg = _pad_to(_pad_to(qg, 8, 2), 128, 3)
+    k = _pad_to(_pad_to(k_cache, _dk.TILE_S, 2), 128, 3)
+    v = _pad_to(_pad_to(v_cache, _dk.TILE_S, 2), 128, 3)
+    return qg, k, v, G, Dv, scale
+
+
+def fused_decode_attention(q, k_cache, v_cache, *, cur_pos,
+                           window: int = 0):
+    """Fused GQA decode attention (single pallas_call, online softmax).
+
+    Same contract as ``layers.attention.decode_attention``:
+    q [B, Hq, 1, D]; caches [B, Hkv, S, D]/[B, Hkv, S, Dv]; cur_pos [B]
+    int32 — attends cache positions p <= cur_pos[b] (windowed if set).
+    Returns [B, Hq, 1, Dv] in q.dtype. Inference-only (no VJP).
+    """
+    _check_decode_attn(q, k_cache, v_cache, cur_pos)
+    B, Hq = q.shape[0], q.shape[1]
+    Hkv = k_cache.shape[1]
+    qg, k, v, G, Dv, scale = _decode_attn_padded(q, k_cache, v_cache,
+                                                 cur_pos)
+    out = _dk.gqa_decode_attn_2d(
+        cur_pos.astype(jnp.int32), qg, k, v, scale=scale,
+        window=int(window), interpret=interpret_mode())
+    return out[:, :, :G, :Dv].reshape(B, Hq, 1, Dv).astype(q.dtype)
+
+
+def unfused_decode_attention(q, k_cache, v_cache, *, cur_pos,
+                             window: int = 0):
+    """The matched-layer UNFUSED baseline: three pallas_calls with the
+    [B, Hkv, G, S] score matrix round-tripping HBM. Benchmark baseline
+    only (kernel_bench's decode_attn leg) — the serve path uses either
+    the fused kernel or the native-XLA oracle."""
+    _check_decode_attn(q, k_cache, v_cache, cur_pos)
+    B, Hq = q.shape[0], q.shape[1]
+    qg, k, v, G, Dv, scale = _decode_attn_padded(q, k_cache, v_cache,
+                                                 cur_pos)
+    out = _dk.unfused_gqa_decode_attn_2d(
+        cur_pos.astype(jnp.int32), qg, k, v, scale=scale,
+        window=int(window), interpret=interpret_mode())
+    return out[:, :, :G, :Dv].reshape(B, Hq, 1, Dv).astype(q.dtype)
+
+
+def fused_mla_decode_attention(q_nope_abs, q_rope, latent_cache,
+                               rope_cache, *, cur_pos,
+                               head_dim_for_scale: int):
+    """Fused absorbed-MLA decode attention against the compressed latent.
+
+    Same contract as ``layers.attention.mla_decode_attention``:
+    q_nope_abs [B, H, R]; q_rope [B, H, Dr]; latent_cache [B, S, R];
+    rope_cache [B, S, Dr]; returns f32 [B, H, R]. Inference-only.
+    """
+    B, H, R = q_nope_abs.shape
+    Dr = q_rope.shape[2]
+    if q_rope.shape[:2] != (B, H):
+        raise ValueError(
+            f"fused_mla_decode_attention: q_rope {q_rope.shape} must "
+            f"lead with [B={B}, H={H}]")
+    if latent_cache.shape[0] != B or rope_cache.shape[:2] != \
+            latent_cache.shape[:2]:
+        raise ValueError(
+            f"fused_mla_decode_attention: caches latent "
+            f"{latent_cache.shape} / rope {rope_cache.shape} do not "
+            f"match batch {B}")
+    if cur_pos.shape != (B,):
+        raise ValueError(
+            f"fused_mla_decode_attention: cur_pos {cur_pos.shape} must "
+            f"be [{B}]")
+    scale = float(1.0 / (head_dim_for_scale ** 0.5))
+    qa = _pad_to(_pad_to(q_nope_abs, 8, 1), 128, 2)
+    qr = _pad_to(_pad_to(q_rope, 8, 1), 128, 2)
+    lat = _pad_to(_pad_to(latent_cache, _dk.TILE_S, 1), 128, 2)
+    rope = _pad_to(_pad_to(rope_cache, _dk.TILE_S, 1), 128, 2)
+    out = _dk.mla_decode_attn_2d(
+        cur_pos.astype(jnp.int32), qa, qr, lat, rope, scale=scale,
+        interpret=interpret_mode())
+    return out[:, :H, :R]

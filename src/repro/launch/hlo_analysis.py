@@ -68,6 +68,83 @@ def parse_collectives(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+_START_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\s/]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|collective-permute)-start\(")
+_DONE_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|collective-permute)-done\("
+    r"\s*%?([\w.\-]+)")
+_SYNC_RE = re.compile(
+    r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s/]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|collective-permute)\(")
+_OPCODE_RE = re.compile(r"=\s*(?:\([^)]*\)|[\w\[\],{}\s/]*?)\s*([\w\-]+)\(")
+
+# instruction kinds that are bookkeeping, not schedulable compute
+_NON_COMPUTE = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all", "opt-barrier"}
+
+
+def collective_overlap_report(hlo_text: str) -> dict:
+    """Per-step report of how much collective traffic overlaps compute
+    (ISSUE 7 satellite): walks the scheduled HLO, pairs every
+    ``-start`` with its ``-done``, and counts the compute instructions
+    the scheduler placed BETWEEN them. A pair with no intervening
+    compute is async in name only — its bytes are fully exposed.
+    Synchronous collectives (no -start form) are exposed by definition.
+
+    Returns {"pairs": [...], "total_bytes", "overlapped_bytes",
+    "fraction_overlapped", "async_pairs", "sync_collectives"}."""
+    open_pairs: Dict[str, dict] = {}
+    pairs = []
+    sync_count = 0
+    total = overlapped = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s and "=" not in s:
+            continue
+        m = _START_RE.match(s)
+        if m:
+            name, shape_str, kind = m.groups()
+            open_pairs[name] = {"kind": kind,
+                                "bytes": _shape_bytes(shape_str),
+                                "intervening_compute_ops": 0}
+            continue
+        md = _DONE_RE.search(s)
+        if md:
+            kind, operand = md.groups()
+            p = open_pairs.pop(operand, None)
+            if p is None:       # -done on a name we never saw start
+                continue
+            p["overlapped"] = p["intervening_compute_ops"] > 0
+            pairs.append(p)
+            total += p["bytes"]
+            if p["overlapped"]:
+                overlapped += p["bytes"]
+            continue
+        ms = _SYNC_RE.match(s)
+        if ms:
+            b = _shape_bytes(ms.group(1))
+            pairs.append({"kind": ms.group(2), "bytes": b,
+                          "intervening_compute_ops": 0,
+                          "overlapped": False})
+            sync_count += 1
+            total += b
+            continue
+        if open_pairs:
+            mo = _OPCODE_RE.search(s)
+            if mo and mo.group(1) not in _NON_COMPUTE:
+                for p in open_pairs.values():
+                    p["intervening_compute_ops"] += 1
+    return {
+        "pairs": pairs,
+        "total_bytes": total,
+        "overlapped_bytes": overlapped,
+        "fraction_overlapped": overlapped / total if total else 0.0,
+        "async_pairs": len(pairs) - sync_count,
+        "sync_collectives": sync_count,
+    }
+
+
 @dataclasses.dataclass
 class Roofline:
     flops_per_device: float
@@ -160,15 +237,21 @@ def analytic_step_flops(cfg, shape) -> float:
     return base + attn
 
 
-def analytic_step_bytes(cfg, shape) -> float:
+def analytic_step_bytes(cfg, shape, *, decode_occupancy: float = 1.0) -> float:
     """Analytic FLOOR for global HBM traffic of one step (same rationale
     as :func:`analytic_step_flops` — scan bodies are under-counted).
 
     train:   params f32 × (grad + AdamW moments rw ≈ 10 accesses)
              + activations (fwd write + bwd read) + logits traffic.
     prefill: params bf16 + activations + KV-cache write.
-    decode:  params bf16 + full KV-cache read (the classic decode bound).
-    """
+    decode:  params bf16 + KV-cache read (the classic decode bound).
+
+    ``decode_occupancy`` is mean((cur_pos+1)/max_len) over the slots:
+    the fused decode kernel reads only the OCCUPIED cache rows, so the
+    decode memory term scales with actual occupancy, not max_len
+    (ISSUE 7 — the old full-rows assumption overstated the roofline
+    bound for mostly-empty slots). Default 1.0 = every row, which is
+    both the unfused path's real traffic and the old behavior."""
     P = float(cfg.param_count())
     B, S = shape.global_batch, shape.seq_len
     d, L, V = cfg.d_model, cfg.num_layers, max(cfg.vocab_size, 1)
@@ -186,9 +269,10 @@ def analytic_step_bytes(cfg, shape) -> float:
         act = tokens * d * L * 8.0
         cache_w = 2.0 * B * S * kv * 2.0
         return P * 2.0 + act + cache_w
-    # decode: read the whole cache (or the window for SWA archs)
+    # decode: read the occupied cache rows (or the window for SWA archs)
     ctx = min(cfg.sliding_window, S) if cfg.sliding_window else S
-    cache_r = 2.0 * B * ctx * kv * 2.0 * L
+    occ = min(max(float(decode_occupancy), 0.0), 1.0)
+    cache_r = 2.0 * B * ctx * occ * kv * 2.0 * L
     return P * 2.0 + cache_r
 
 

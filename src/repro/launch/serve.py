@@ -47,8 +47,10 @@ from __future__ import annotations
 # CLI nicety: when invoked as a script with --tp > 1, request that many
 # host devices BEFORE jax initializes (shared jax-free helper).
 if __name__ == "__main__":
-    from repro.launch._bootstrap import argv_int, ensure_host_devices
+    from repro.launch._bootstrap import (apply_xla_preset, argv_int,
+                                         argv_str, ensure_host_devices)
     ensure_host_devices(argv_int("--tp"))
+    apply_xla_preset(argv_str("--xla-preset", "none"))
 
 import argparse
 import collections
@@ -213,7 +215,9 @@ class ServeEngine:
         def _build(static):
             fn, _, in_sh, out_sh = steps_lib.build_serve_step(
                 self.cfg, self.shape, self.mesh, dtype,
-                control_static=static, use_kernel=wc.use_kernel)
+                control_static=static, use_kernel=wc.use_kernel,
+                fused_attention=wc.fused_attention,
+                psum_chunks=wc.psum_chunks)
 
             def stepper(params, cache, tokens, pos, clear, *rest):
                 # the full-cache sweep only runs on admission steps; the
@@ -244,6 +248,13 @@ class ServeEngine:
         self.it_model = hetero_lib.iteration_model(
             cfg_canonical, ShapeConfig("serve_model", 1, num_slots, "decode"),
             max(self.sim_ranks, 1), peak_flops=c.peak_flops, mfu=c.mfu)
+        # decode-overhead pricing (attention cache reads + collective
+        # exposure) — opt-in so the classic legs' modeled trajectories
+        # stay bit-identical (tests pin them)
+        self.overhead = (hetero_lib.decode_overhead_model(
+            cfg_canonical, num_slots, max_len, self.it_model,
+            peak_flops=c.peak_flops)
+            if c.model_decode_overheads else None)
         self.plane = ControlPlane(
             self.cfg, wc, mesh=self.mesh, tp=tp, builder=_build,
             it_model=self.it_model, sim_ranks=self.sim_ranks,
@@ -384,8 +395,16 @@ class ServeEngine:
             tok_ids, self.cache = step_fn(*args)
         wall = self.plane.timer.stop(tok_ids)
         nxt = np.asarray(jax.device_get(tok_ids))
+        overhead = 0.0
         if self.schedule is None:
             latency = dense_latency = wall       # no simulation: real time
+        elif self.overhead is not None:
+            # occupancy-priced attention reads + (reduced) collective
+            # exposure, from THIS step's actual per-slot positions
+            overhead = self.overhead.overhead_s(
+                pos, fused=self._wc.fused_attention,
+                psum_chunks=self._wc.psum_chunks)
+            latency += overhead
 
         # -- telemetry: what each simulated rank measured THIS step -------
         self.plane.capture(chis, frac, step=step_idx, plan=plan, wall=wall)
@@ -428,6 +447,12 @@ class ServeEngine:
                   "active": sum(s is not None for s in self.slots),
                   "admitted": admitted, "completed": completed,
                   "queued": len(self.queue)}
+        if self.overhead is not None:
+            report["overhead_s"] = overhead
+            # slot-cache occupancy + the minimum (fused, occupied-tiles)
+            # attention read time: the roofline terms serve_bench gates on
+            report["occupancy"] = float((pos + 1).mean() / self.max_len)
+            report["attn_bound_s"] = self.overhead.attn_s(pos, fused=True)
         if plan_report is not None:
             report["stragglers"] = list(plan_report.stragglers)
             report["max_bucket"] = int(plan_report.bucket_by_rank.max())
@@ -594,6 +619,16 @@ def main():
                          "offset volume (token-exact); eq2 balances "
                          "migration vs resize cost per Eq.(2)")
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--fused-attn", action="store_true",
+                    help="fused Pallas decode-attention kernel "
+                         "(interpret-mode fallback off-TPU)")
+    ap.add_argument("--psum-chunks", type=int, default=1,
+                    help="chunk-split the controlled epilogue all-reduce "
+                         "into this many async-overlappable psums")
+    ap.add_argument("--xla-preset", default="none",
+                    choices=["none", "latency-hiding"],
+                    help="XLA latency-hiding flag preset (applied before "
+                         "jax initializes)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--times", default="modeled",
                     choices=["modeled", "measured"],
@@ -612,6 +647,7 @@ def main():
         mode=args.control, hetero_kind=args.hetero, chi=args.chi,
         sim_ranks=args.sim_ranks, max_sources=args.max_sources,
         beta_policy=args.beta_policy, use_kernel=args.use_kernel,
+        fused_attention=args.fused_attn, psum_chunks=args.psum_chunks,
         times=args.times, trace_in=args.trace_in, trace_out=args.trace_out,
         geometry=geom_lib.parse_geometry_arg(args.geometry, args.tp))
     eng = ServeEngine(args.arch, num_slots=args.slots,

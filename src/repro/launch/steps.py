@@ -53,12 +53,13 @@ def _replicated(mesh):
 
 
 def make_ctx(mesh: Mesh, static: PlanStatic, plan: Dict[str, Any],
-             use_kernel: bool = False) -> ControlContext:
+             use_kernel: bool = False,
+             psum_chunks: int = 1) -> ControlContext:
     return ControlContext(
         mesh=mesh, axis="model", static=static,
         bucket_by_rank=plan["bucket_by_rank"], mig_src=plan["mig_src"],
         pri=plan.get("pri", {}), use_kernel=use_kernel,
-        per_layer=static.per_layer)
+        per_layer=static.per_layer, psum_chunks=psum_chunks)
 
 
 def build_rank_time_gather(mesh: Mesh, axis: str = "model"):
@@ -93,7 +94,8 @@ def build_rank_time_gather(mesh: Mesh, axis: str = "model"):
 def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                      train: TrainConfig = TrainConfig(),
                      control_static: Optional[PlanStatic] = None,
-                     total_steps: int = 0, use_kernel: bool = False):
+                     total_steps: int = 0, use_kernel: bool = False,
+                     psum_chunks: int = 1):
     """Returns (train_step, arg_sds, in_shardings, out_shardings)."""
     cfg = specs_lib.effective_model_cfg(cfg, shape)
     api = get_api(cfg)
@@ -130,7 +132,8 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     def train_step(params, opt_state, batch, plan=None):
         with sh.use_rules(rules):
             ctx = (make_ctx(mesh, control_static, plan,
-                            use_kernel=use_kernel)
+                            use_kernel=use_kernel,
+                            psum_chunks=psum_chunks)
                    if control_static is not None else None)
 
             def lf(p, b):
@@ -225,7 +228,8 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                      dtype=jnp.bfloat16,
                      control_static: Optional[PlanStatic] = None,
-                     use_kernel: bool = False):
+                     use_kernel: bool = False, fused_attention: bool = False,
+                     psum_chunks: int = 1):
     """One-token decode against a seq_len KV cache.
 
     With ``control_static`` the step takes an extra ``plan`` dict (same
@@ -233,8 +237,15 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     model, so the controller can ZERO-resize the TP decode matmuls of a
     contended rank at serve time without recompiling (signature-keyed
     executables come from the engine's PlanCompileCache).
+
+    ``fused_attention`` routes the decode-attention call through the
+    fused Pallas kernel (cfg-level, so the DENSE ctx=None path gets it
+    too); ``psum_chunks`` chunk-splits the controlled epilogue psums.
     """
     cfg = specs_lib.effective_model_cfg(cfg, shape)
+    if fused_attention:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, fused_decode_attn=True)
     api = get_api(cfg)
     rules = specs_lib.rules_for(shape, mesh, cfg)
     p_sds, _, p_shards = specs_lib.param_specs(cfg, mesh, rules, dtype)
@@ -271,7 +282,8 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         def serve_step(params, cache, tokens, cur_pos, plan):
             with sh.use_rules(rules):
                 ctx = make_ctx(mesh, control_static, plan,
-                               use_kernel=use_kernel)
+                               use_kernel=use_kernel,
+                               psum_chunks=psum_chunks)
                 return api.decode_step(params, cfg, cache, tokens, cur_pos,
                                        ctx=ctx)
         args = (p_sds, d_sds["cache"], d_sds["tokens"], d_sds["cur_pos"],
@@ -293,7 +305,8 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 def build_step_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                    train: TrainConfig = TrainConfig(),
                    control_static: Optional[PlanStatic] = None,
-                   use_kernel: bool = False):
+                   use_kernel: bool = False, fused_attention: bool = False,
+                   psum_chunks: int = 1):
     """Dispatch on the shape kind: train_4k -> train_step;
     prefill_32k -> prefill; decode shapes -> serve_step (controlled when
     ``control_static`` is given — decode is a control surface since the
@@ -301,10 +314,13 @@ def build_step_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     not in the paper's per-iteration balancing loop)."""
     if shape.kind == "train":
         return build_train_step(cfg, shape, mesh, train, control_static,
-                                use_kernel=use_kernel)
+                                use_kernel=use_kernel,
+                                psum_chunks=psum_chunks)
     if shape.kind == "prefill":
         return build_prefill_step(cfg, shape, mesh,
                                   jnp.dtype(train.param_dtype))
     return build_serve_step(cfg, shape, mesh, jnp.dtype(train.param_dtype),
                             control_static=control_static,
-                            use_kernel=use_kernel)
+                            use_kernel=use_kernel,
+                            fused_attention=fused_attention,
+                            psum_chunks=psum_chunks)

@@ -124,6 +124,7 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
                  force_gamma: Optional[float] = None,
                  data_noise: float = 0.35,
                  use_kernel: bool = False,
+                 psum_chunks: int = 1,
                  times: str = "modeled",
                  trace_in: Optional[str] = None,
                  trace_out: Optional[str] = None,
@@ -156,7 +157,8 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
         # (the serve engine's ControlConfig default is "lossless")
         beta_policy="eq2",
         imputation=imputation, selection=selection,
-        use_kernel=use_kernel, seed=seed, times=times,
+        use_kernel=use_kernel, psum_chunks=psum_chunks,
+        seed=seed, times=times,
         trace_in=trace_in, trace_out=trace_out,
         measure_noise=measure_noise,
         geometry=geo.sizes if geo is not None else None,
@@ -174,7 +176,8 @@ def run_training(arch: str, *, steps: int = 50, tp: int = 1, dp: int = 1,
         def _build_step(static):
             fn_, _, in_sh_, out_sh_ = steps_lib.build_train_step(
                 cfg, shape, mesh, train_cfg, static, total_steps=steps,
-                use_kernel=control_cfg.use_kernel)
+                use_kernel=control_cfg.use_kernel,
+                psum_chunks=control_cfg.psum_chunks)
             jitted = jax.jit(fn_, in_shardings=in_sh_, out_shardings=out_sh_)
             n_slots = max(1, static.num_sources) if static is not None else 0
             return jitted, n_slots, in_sh_
@@ -493,6 +496,9 @@ def main():
     ap.add_argument("--use-kernel", action="store_true",
                     help="route controlled matmuls through the Pallas "
                          "pruned-kernel family (fused FFN + kernel bwd)")
+    ap.add_argument("--psum-chunks", type=int, default=1,
+                    help="chunk-split the controlled epilogue all-reduce "
+                         "into this many async-overlappable psums")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args()
 
@@ -504,6 +510,7 @@ def main():
         imputation=args.imputation, selection=args.selection,
         mig_blocks=args.mig_blocks, max_sources=args.max_sources,
         eval_every=args.eval_every, use_kernel=args.use_kernel,
+        psum_chunks=args.psum_chunks,
         times=args.times, trace_in=args.trace_in, trace_out=args.trace_out,
         measure_noise=args.measure_noise, ckpt_every=args.ckpt_every,
         geometry=args.geometry)

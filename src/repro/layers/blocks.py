@@ -151,7 +151,16 @@ def apply_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         vc = vc.at[b_idx, :, cur_pos, :].set(v[:, :, 0, :].astype(vc.dtype))
         kc = shard(kc, ("batch", "kv_heads", "decode_seq", None), mesh=mesh)
         vc = shard(vc, ("batch", "kv_heads", "decode_seq", None), mesh=mesh)
-        o = attn_lib.decode_attention(q, kc, vc, cur_pos=cur_pos, window=window)
+        if cfg.fused_decode_attn:
+            # fused Pallas decode attention (kernels/decode_attn.py):
+            # online softmax over the ragged cache, no [B, H, S] scores
+            # in HBM; interpret-mode fallback keeps CPU containers green
+            from repro.kernels import ops as _kops
+            o = _kops.fused_decode_attention(q, kc, vc, cur_pos=cur_pos,
+                                             window=window)
+        else:
+            o = attn_lib.decode_attention(q, kc, vc, cur_pos=cur_pos,
+                                          window=window)
         new_cache = {"k": kc, "v": vc}
     elif cache is not None:
         # prefill: fill the cache from position 0, attend with flash
@@ -224,9 +233,15 @@ def _apply_mla(p, x, cfg, *, ctx, positions, cache, cur_pos):
         # absorbed decode: q_abs = W_uk^T q_nope per head
         w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, dn)
         q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
-        o_lat = attn_lib.mla_decode_attention(
-            q_abs, q_rope[:, 0], lc, rc, cur_pos=cur_pos,
-            head_dim_for_scale=dn + dr)                    # [B,H,R]
+        if cfg.fused_decode_attn:
+            from repro.kernels import ops as _kops
+            o_lat = _kops.fused_mla_decode_attention(
+                q_abs, q_rope[:, 0], lc, rc, cur_pos=cur_pos,
+                head_dim_for_scale=dn + dr)                # [B,H,R]
+        else:
+            o_lat = attn_lib.mla_decode_attention(
+                q_abs, q_rope[:, 0], lc, rc, cur_pos=cur_pos,
+                head_dim_for_scale=dn + dr)                # [B,H,R]
         w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, dv)
         o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(x.dtype), w_uv)
         o = o.reshape(B, 1, H * dv)

@@ -62,6 +62,7 @@ class ControlContext:
     pri: Dict[str, jax.Array]
     use_kernel: bool = False
     per_layer: bool = False      # arrays carry a leading layer dim (PriDiff)
+    psum_chunks: int = 1         # chunk-split epilogue all-reduces (>1)
 
     @property
     def tp(self) -> int:
@@ -75,6 +76,31 @@ class ControlContext:
 
 def _spec(mesh: Mesh, *parts) -> P:
     return filter_spec_for_mesh(P(*parts), mesh)
+
+
+def chunked_psum(y: jax.Array, axis: str, n_chunks: int) -> jax.Array:
+    """Epilogue all-reduce split into independent per-chunk ``psum``s.
+
+    One fat ``lax.psum`` over the full ``[M, d_out]`` partial serializes
+    compute → all-reduce on the decode hot path. Splitting the last dim
+    into ``n_chunks`` independent psums gives XLA's latency-hiding
+    scheduler (async collectives) chunks it can START while other work
+    (the remaining branch compute, the next layer's prologue) is still
+    in flight — the "bidirectional chunking" of the ISSUE 7 tentpole,
+    expressed at the collective level where the scheduler can see it.
+    ``n_chunks`` falls back to the largest divisor of ``d_out`` at or
+    below the request (1 ⇒ the classic single psum, byte-identical).
+    """
+    if n_chunks <= 1:
+        return lax.psum(y, axis)
+    d = y.shape[-1]
+    n = min(n_chunks, d)
+    while n > 1 and d % n:
+        n -= 1
+    if n <= 1:
+        return lax.psum(y, axis)
+    parts = jnp.split(y, n, axis=-1)
+    return jnp.concatenate([lax.psum(p, axis) for p in parts], axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -143,7 +169,7 @@ def controlled_proj(x: jax.Array, w: jax.Array, ctx: Optional[ControlContext],
         y = resizing.switched_matmul(
             x_, w_, pri_[0], bucket_[0], buckets=st.buckets,
             block=blk, use_kernel=ctx.use_kernel)
-        return lax.psum(y, axis)
+        return chunked_psum(y, axis, ctx.psum_chunks)
 
     return shard_map(body_row, mesh=mesh, in_specs=in_specs,
                      out_specs=out_spec, check_vma=False)(
@@ -331,7 +357,9 @@ def controlled_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
                 x2, axis=axis, rank=rank, srcs=srcs, sheds=sheds, block=blk,
                 act_fn=act_fn, exports=exports)
 
-        y = lax.psum(partial, axis)
+        # chunked epilogue: applied AFTER the branch switch/migration
+        # merge so every lax.switch branch keeps its uniform shape
+        y = chunked_psum(partial, axis, ctx.psum_chunks)
         return y.reshape(*lead, w_down_.shape[1])
 
     args = (x, w_up, w_down) + ((w_gate,) if w_gate is not None else ()) + (

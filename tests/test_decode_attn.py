@@ -1,0 +1,192 @@
+"""Fused decode-attention kernel family vs the layer oracles (ISSUE 7).
+
+The fused GQA/MLA kernels must match ``decode_attention`` /
+``mla_decode_attention`` exactly where the oracle is exact (f32,
+interpret mode) and within bf16 tolerance otherwise, across GQA group
+sizes (including groups the kernel must pad to the sublane multiple),
+ragged ``cur_pos`` with empty slots, and sliding windows. The unfused
+three-kernel bench baseline must match the SAME contract. The kernels
+are inference-only: differentiating through them must raise.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.layers import attention as att
+
+
+def _mk(shape, seed, dtype=jnp.float32):
+    x = np.random.default_rng(seed).standard_normal(shape)
+    return jnp.asarray(x, dtype)
+
+
+def _gqa_case(B, Hq, Hkv, D, S, seed=0, dtype=jnp.float32):
+    q = _mk((B, Hq, 1, D), seed, dtype)
+    k = _mk((B, Hkv, S, D), seed + 1, dtype)
+    v = _mk((B, Hkv, S, D), seed + 2, dtype)
+    return q, k, v
+
+
+RAGGED = lambda B, S: np.linspace(0, S - 1, B).astype(np.int32)  # noqa: E731
+
+
+class TestFusedGQA:
+    @pytest.mark.parametrize("Hq,Hkv", [(8, 2), (4, 4), (4, 1), (6, 2)])
+    def test_matches_oracle_across_group_sizes(self, Hq, Hkv):
+        # G = 4, 1 (MHA), 4 (MQA), 3 (pads to the sublane multiple of 8)
+        B, D, S = 4, 64, 96
+        q, k, v = _gqa_case(B, Hq, Hkv, D, S, seed=Hq * 10 + Hkv)
+        cur = jnp.asarray(RAGGED(B, S))
+        ref = att.decode_attention(q, k, v, cur_pos=cur)
+        got = ops.fused_decode_attention(q, k, v, cur_pos=cur)
+        assert got.shape == ref.shape and got.dtype == ref.dtype
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-6)
+
+    def test_ragged_cur_pos_with_empty_slots(self):
+        # cur_pos = 0 is a slot with ONE occupied row (position 0);
+        # the tile skip must not drop it, nor corrupt fuller slots
+        B, S = 5, 160
+        q, k, v = _gqa_case(B, 8, 2, 64, S, seed=3)
+        cur = jnp.asarray([0, 0, 7, 100, S - 1], jnp.int32)
+        ref = att.decode_attention(q, k, v, cur_pos=cur)
+        got = ops.fused_decode_attention(q, k, v, cur_pos=cur)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-6)
+
+    @pytest.mark.parametrize("window", [8, 130])
+    def test_sliding_window(self, window):
+        # window smaller than a tile AND window spanning tiles: the
+        # tile-skip predicate must stay exact on both sides
+        B, S = 4, 256
+        q, k, v = _gqa_case(B, 8, 2, 64, S, seed=7)
+        cur = jnp.asarray([0, 40, 140, S - 1], jnp.int32)
+        ref = att.decode_attention(q, k, v, cur_pos=cur, window=window)
+        got = ops.fused_decode_attention(q, k, v, cur_pos=cur,
+                                         window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-6)
+
+    def test_bf16_within_tolerance(self):
+        B, S = 4, 96
+        q, k, v = _gqa_case(B, 8, 2, 64, S, seed=11, dtype=jnp.bfloat16)
+        cur = jnp.asarray(RAGGED(B, S))
+        ref = att.decode_attention(q, k, v, cur_pos=cur)
+        got = ops.fused_decode_attention(q, k, v, cur_pos=cur)
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref, np.float32),
+            atol=3e-2)
+
+    def test_odd_head_dim_and_cache_len_are_padded(self):
+        # D=40 and S=50 hit every padding branch in the ops wrapper;
+        # the scale must still use the ORIGINAL head dim
+        B, S = 3, 50
+        q, k, v = _gqa_case(B, 4, 2, 40, S, seed=13)
+        cur = jnp.asarray([0, 20, S - 1], jnp.int32)
+        ref = att.decode_attention(q, k, v, cur_pos=cur)
+        got = ops.fused_decode_attention(q, k, v, cur_pos=cur)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-6)
+
+    def test_unfused_baseline_matches_same_contract(self):
+        B, S = 4, 160
+        q, k, v = _gqa_case(B, 8, 2, 64, S, seed=17)
+        cur = jnp.asarray([0, 10, 100, S - 1], jnp.int32)
+        ref = att.decode_attention(q, k, v, cur_pos=cur)
+        got = ops.unfused_decode_attention(q, k, v, cur_pos=cur)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-6)
+
+    def test_inference_only_grad_raises(self):
+        q, k, v = _gqa_case(2, 4, 2, 64, 96, seed=19)
+        cur = jnp.asarray([5, 90], jnp.int32)
+
+        def loss(q_):
+            return jnp.sum(
+                ops.fused_decode_attention(q_, k, v, cur_pos=cur) ** 2)
+
+        with pytest.raises(Exception):
+            jax.grad(loss)(q)
+
+
+class TestFusedMLA:
+    def test_matches_oracle(self):
+        B, H, R, Dr, S = 3, 8, 64, 32, 96
+        qa = _mk((B, H, R), 23)
+        qr = _mk((B, H, Dr), 29)
+        lat = _mk((B, S, R), 31)
+        rope = _mk((B, S, Dr), 37)
+        cur = jnp.asarray([0, 50, S - 1], jnp.int32)
+        ref = att.mla_decode_attention(qa, qr, lat, rope, cur_pos=cur,
+                                       head_dim_for_scale=R + Dr)
+        got = ops.fused_mla_decode_attention(qa, qr, lat, rope,
+                                             cur_pos=cur,
+                                             head_dim_for_scale=R + Dr)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-6)
+
+    def test_odd_heads_and_ranks_are_padded(self):
+        B, H, R, Dr, S = 2, 5, 48, 20, 40
+        qa = _mk((B, H, R), 41)
+        qr = _mk((B, H, Dr), 43)
+        lat = _mk((B, S, R), 47)
+        rope = _mk((B, S, Dr), 53)
+        cur = jnp.asarray([3, S - 1], jnp.int32)
+        ref = att.mla_decode_attention(qa, qr, lat, rope, cur_pos=cur,
+                                       head_dim_for_scale=R + Dr)
+        got = ops.fused_mla_decode_attention(qa, qr, lat, rope,
+                                             cur_pos=cur,
+                                             head_dim_for_scale=R + Dr)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-6)
+
+    def test_inference_only_grad_raises(self):
+        B, H, R, Dr, S = 2, 8, 64, 32, 64
+        qa = _mk((B, H, R), 59)
+        qr = _mk((B, H, Dr), 61)
+        lat = _mk((B, S, R), 67)
+        rope = _mk((B, S, Dr), 71)
+        cur = jnp.asarray([5, 60], jnp.int32)
+
+        def loss(qa_):
+            return jnp.sum(ops.fused_mla_decode_attention(
+                qa_, qr, lat, rope, cur_pos=cur,
+                head_dim_for_scale=R + Dr) ** 2)
+
+        with pytest.raises(Exception):
+            jax.grad(loss)(qa)
+
+
+class TestEngineComposition:
+    def test_fused_serve_engine_token_exact_with_zero_resizing(self):
+        """The tentpole composition: fused attention selected through the
+        shared ControlConfig, running UNDER the ZERO-resized control
+        plane, must generate the same tokens as the oracle path."""
+        from repro.control import ControlConfig
+        from repro.launch.serve import Request, ServeEngine
+
+        def run(fused):
+            control = ControlConfig(
+                mode="zero", hetero_kind="contention", chi=4.0,
+                contention_p=0.15, sim_ranks=8, fused_attention=fused,
+                psum_chunks=2 if fused else 1, seed=0)
+            eng = ServeEngine("yi-6b", num_slots=2, max_len=16, seed=0,
+                              control=control)
+            rng = np.random.default_rng(0)
+            reqs = [Request(uid=i,
+                            prompt=rng.integers(
+                                0, eng.cfg.vocab_size, (4,)).astype(np.int32),
+                            max_new_tokens=4, arrival_step=2 * i)
+                    for i in range(3)]
+            comps = eng.run(reqs)
+            eng.close()
+            return {c.uid: c.tokens for c in comps}
+
+        ref, got = run(False), run(True)
+        assert set(ref) == set(got)
+        for uid in ref:
+            assert np.array_equal(ref[uid], got[uid]), f"req {uid} diverged"

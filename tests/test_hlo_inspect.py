@@ -36,3 +36,50 @@ def test_reshape_churn():
     assert churn["transpose"] == 1
     assert churn["reshape"] == 1
     assert churn["copy"] == 1
+
+
+# ---- ISSUE 7: collective-overlap report & occupancy-aware decode bytes ----
+
+ASYNC_HLO = """
+HloModule jit_step
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ars = f32[128,256]{1,0} all-reduce-start(%p0), to_apply=%add
+  %m1 = f32[128,256]{1,0} multiply(%p0, %p0)
+  %m2 = f32[128,256]{1,0} add(%m1, %p0)
+  %ard = f32[128,256]{1,0} all-reduce-done(%ars)
+  %ags = f32[128,512]{1,0} all-gather-start(%p0), dimensions={1}
+  %agd = f32[128,512]{1,0} all-gather-done(%ags)
+  %sync = f32[128,256]{1,0} all-reduce(%p0), to_apply=%add
+  ROOT %out = f32[128,256]{1,0} copy(%ard)
+}
+"""
+
+
+def test_collective_overlap_report():
+    from repro.launch.hlo_analysis import collective_overlap_report
+    rep = collective_overlap_report(ASYNC_HLO)
+    assert rep["async_pairs"] == 2
+    assert rep["sync_collectives"] == 1
+    # the all-reduce pair hides 2 compute ops; the all-gather pair and
+    # the sync collective hide 0
+    by_overlap = sorted(p["intervening_compute_ops"] for p in rep["pairs"])
+    assert by_overlap == [0, 0, 2]
+    # overlapped = only the pair with compute in its window
+    assert rep["overlapped_bytes"] == 128 * 256 * 4
+    assert 0.0 < rep["fraction_overlapped"] < 1.0
+
+
+def test_decode_bytes_scale_with_occupancy():
+    from repro.config import INPUT_SHAPES, get_config
+    from repro.launch.hlo_analysis import analytic_step_bytes
+    from repro.launch.specs import effective_model_cfg
+    shape = next(s for s in INPUT_SHAPES.values() if s.kind == "decode")
+    cfg = effective_model_cfg(get_config("yi-6b"), shape)
+    full = analytic_step_bytes(cfg, shape, decode_occupancy=1.0)
+    half = analytic_step_bytes(cfg, shape, decode_occupancy=0.5)
+    params = float(cfg.param_count()) * 2.0
+    # cache term halves exactly; param traffic is occupancy-independent
+    assert abs((full - params) * 0.5 - (half - params)) < 1e-6 * full
+    # default argument reproduces the old full-rows bound
+    assert analytic_step_bytes(cfg, shape) == full

@@ -5,7 +5,19 @@ gather/scatter ops (the pruning rides the Pallas BlockSpec index maps).
 
 The XLA zero-imputation path is compiled alongside as a positive control:
 it MUST show gathers, proving the detector sees them when present.
+
+ISSUE 7 adds the chunked-epilogue check: with ``psum_chunks=k`` the
+controlled projection must compile to k independent chunk-width
+all-reduces — async-overlappable by the latency-hiding scheduler —
+and NO single fat full-width all-reduce (the positive control with
+``psum_chunks=1`` shows exactly that fat one).  Multi-device HLO is
+compiled in a subprocess (the main pytest process keeps 1 device).
 """
+import os
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -13,6 +25,8 @@ import jax.numpy as jnp
 from repro.core import resizing
 from repro.kernels import ops
 from repro.launch.hlo_inspect import op_histogram
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 BLOCK = 32
 BANNED = ("scatter", "select-and-scatter", "gather", "all-gather")
@@ -80,3 +94,58 @@ def test_fused_ffn_forward_is_one_fusion_no_hidden_roundtrip():
 
     hist = op_histogram(jax.jit(fwd).lower(x).compile().as_text())
     assert not any(k in BANNED for k in hist), hist
+
+
+def test_chunked_psum_hlo_splits_the_epilogue_all_reduce():
+    """ISSUE 7: with psum_chunks=4 the controlled row-projection epilogue
+    compiles to 4 independent chunk-width all-reduces and NO full-width
+    one; the psum_chunks=1 positive control shows exactly the single fat
+    all-reduce the chunking is meant to break up."""
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+        import json, re
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.workload import PlanStatic
+        from repro.layers.tp_linear import ControlContext, controlled_proj
+
+        e, B, S, d, N, block = 8, 2, 8, 128, 256, 8
+        nb_loc = (d // e) // block
+        mesh = Mesh(np.array(jax.devices()).reshape(1, e), ("data", "model"))
+        rng = np.random.default_rng(0)
+        x = jnp.array(rng.standard_normal((B, S, d)), jnp.float32)
+        w = jnp.array(rng.standard_normal((d, N)) * .1, jnp.float32)
+        st = PlanStatic(buckets=(0.0, 0.25, 0.5), block_size=block,
+                        mig_blocks=0, tp_size=e)
+        pri = jnp.tile(jnp.arange(nb_loc, dtype=jnp.int32)[None], (e, 1))
+
+        def run(k):
+            ctx = ControlContext(mesh=mesh, axis="model", static=st,
+                                 bucket_by_rank=jnp.zeros((e,), jnp.int32),
+                                 mig_src=jnp.array(-1, jnp.int32),
+                                 pri={"proj": pri}, psum_chunks=k)
+            fn = jax.jit(lambda x_, w_: controlled_proj(
+                x_, w_, ctx, "proj", split="row"))
+            y = fn(x, w)
+            assert np.allclose(np.asarray(y), np.asarray(x @ w), atol=1e-3)
+            hlo = fn.lower(x, w).compile().as_text()
+            # shapes of every all-reduce / all-reduce-start (NOT -done)
+            return [m.group(1) for line in hlo.splitlines()
+                    for m in [re.search(r"f32\\[([0-9,]*)\\]", line)]
+                    if m and re.search(r"all-reduce(?:-start)?\\(", line)]
+
+        print(json.dumps({"k1": run(1), "k4": run(4)}))
+        """)],
+        capture_output=True, text=True, timeout=420,
+        env={**os.environ,
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "PYTHONPATH": os.path.join(ROOT, "src")})
+    assert out.returncode == 0, \
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    import json
+    shapes = json.loads(out.stdout.strip().splitlines()[-1])
+    # positive control: one fat full-width [B, S, N] all-reduce
+    assert shapes["k1"] == ["2,8,256"], shapes
+    # chunked: 4 chunk-width all-reduces, and the fat one is GONE
+    assert len(shapes["k4"]) == 4, shapes
+    assert all(s == "2,8,64" for s in shapes["k4"]), shapes
