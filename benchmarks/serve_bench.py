@@ -48,6 +48,11 @@ SIM_RANKS = 8                     # paper-scale TP group for the χ schedule
 SEMI_TP = 4                       # real mesh for the semi-migration run
 CHI = 4.0
 CONTENTION_P = 0.15
+PAGE_SIZE = 8                     # paged-KV legs (multiple of 8: fused-ready)
+PREFILL_CHUNK = 4                 # chunked-prefill substeps per engine step
+TRACE_FIXTURE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "examples", "traces", "bursty_contention.jsonl")
 
 
 def make_trace(vocab: int, n_requests: int, prompt_len: int, gen_len: int,
@@ -61,6 +66,34 @@ def make_trace(vocab: int, n_requests: int, prompt_len: int, gen_len: int,
         reqs.append(Request(
             uid=i, prompt=rng.integers(0, vocab, (p,)).astype(np.int32),
             max_new_tokens=g, arrival_step=i * arrival_every))
+    return reqs
+
+
+def make_mixed_trace(vocab: int, n_requests: int, max_len: int,
+                     seed: int = 0):
+    """Bursty mixed-length trace for the paged-capacity leg.
+
+    Arrival bursts reuse the ``bursty_contention`` fixture's burst
+    geometry (requests land in groups, not a steady drip), and lengths
+    follow a short-heavy mix with a long tail — the regime where a fixed
+    ``num_slots x max_len`` cache strands most of its HBM."""
+    with open(TRACE_FIXTURE) as f:
+        hdr = json.loads(f.readline())
+    burst = max(2, int(hdr["burst_len"]) // 3)     # requests per burst
+    gap = max(2, int(hdr["burst_every"]) // 5)     # steps between bursts
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        if rng.random() < 0.3:                     # long tail
+            p = int(rng.integers(max_len // 3, max_len // 2 + 1))
+            g = int(rng.integers(max_len // 4, max_len // 2 + 1))
+        else:                                      # short-heavy bulk
+            p = int(rng.integers(2, max(max_len // 6, 3)))
+            g = int(rng.integers(2, max(max_len // 6, 3)))
+        g = min(g, max_len - p)
+        reqs.append(Request(
+            uid=i, prompt=rng.integers(0, vocab, (p,)).astype(np.int32),
+            max_new_tokens=g, arrival_step=(i // burst) * gap))
     return reqs
 
 
@@ -130,6 +163,82 @@ def run_decode_path_engine(leg: str, *, num_slots: int, max_len: int,
     return comps, stats
 
 
+def _ttft_ms(comps) -> float:
+    """Mean time-to-first-token (first per-request token latency, which
+    includes queue wait + prefill) in ms."""
+    return float(np.mean([c.token_latencies[0] for c in comps
+                          if c.token_latencies])) * 1e3
+
+
+def run_mixed_lengths_leg(*, num_slots: int, max_len: int, n_requests: int,
+                          seed: int = 0) -> dict:
+    """Paged-KV capacity leg (ISSUE 8): 2N slots over a page pool sized
+    to the FIXED engine's N-slot HBM budget, against the fixed 2N-slot
+    engine on the same bursty mixed-length trace.
+
+    All engines run 2N decode lanes, so per-step compute pricing is
+    identical — the paging win is pure HBM capacity: the fixed cache at
+    this budget holds N resident requests; the paged pool holds 2N
+    because short requests only occupy the pages they use. Two paged
+    variants run:
+
+    * ``paged`` (prefill_chunk=1) — paging alone must be FREE: gated on
+      exact p50 per-token parity with the fixed engine;
+    * ``paged_chunked`` (prefill_chunk=PREFILL_CHUNK) — chunked prefill
+      trades a small priced p50 cost (decode tokens share steps with
+      prefill chunks) for a large tail win: gated on token-exactness and
+      beating the fixed engine's p95 and mean TTFT.
+
+    Equal-HBM and >= 2x resident-capacity gates apply to the shipping
+    (chunked) configuration."""
+    slots2 = 2 * num_slots
+    pps = -(-max_len // PAGE_SIZE)
+    ctl = lambda: ControlConfig(
+        mode="off", hetero_kind="contention", chi=CHI,
+        contention_p=CONTENTION_P, sim_ranks=SIM_RANKS, seed=seed)
+
+    # the equal-HBM yardstick: the fixed cache's bytes at N slots
+    fixed_n = ServeEngine(ARCH, num_slots=num_slots, max_len=max_len,
+                          control=ctl(), seed=seed)
+    budget_bytes = fixed_n.kv_cache_bytes()
+    fixed_n.close()
+
+    def run_one(**eng_kw):
+        eng = ServeEngine(ARCH, num_slots=slots2, max_len=max_len,
+                          control=ctl(), seed=seed, **eng_kw)
+        comps = eng.run(make_mixed_trace(eng.cfg.vocab_size, n_requests,
+                                         max_len, seed=seed))
+        eng.close()
+        stats = latency_percentiles(comps, total_time_s=eng.clock)
+        stats["ttft_ms"] = _ttft_ms(comps)
+        stats["steps"] = len(eng.history)
+        stats["peak_resident"] = max(h["active"] for h in eng.history)
+        return eng, comps, stats
+
+    paged_kw = dict(page_size=PAGE_SIZE, num_pages=num_slots * pps)
+    ref, ref_comps, ref_stats = run_one()
+    _, p1_comps, p1_stats = run_one(prefill_chunk=1, **paged_kw)
+    eng, pc_comps, pc_stats = run_one(prefill_chunk=PREFILL_CHUNK,
+                                      **paged_kw)
+
+    tok_ref = {c.uid: c.tokens for c in ref_comps}
+    exact = lambda comps: bool(all(
+        np.array_equal(c.tokens, tok_ref[c.uid]) for c in comps))
+    return {
+        "fixed": ref_stats, "paged": p1_stats, "paged_chunked": pc_stats,
+        "kv_cache_bytes": eng.kv_cache_bytes(),
+        "fixed_kv_cache_bytes": budget_bytes,
+        "fixed_2n_kv_cache_bytes": ref.kv_cache_bytes(),
+        "peak_resident": pc_stats["peak_resident"],
+        "fixed_slot_capacity": num_slots,
+        "preemptions": eng.preemptions,
+        "page_size": PAGE_SIZE, "prefill_chunk": PREFILL_CHUNK,
+        "num_pages": num_slots * pps,
+        "token_exact": exact(p1_comps),
+        "chunked_token_exact": exact(pc_comps),
+    }
+
+
 _SEMI_CHILD = """
 import json
 import numpy as np
@@ -141,12 +250,12 @@ from benchmarks.serve_bench import (ARCH, CHI, CONTENTION_P, SEMI_TP,
 
 p = json.loads(__SEMI_PARAMS__)
 
-def run(mode, hetero):
+def run(mode, hetero, **eng_kw):
     control = ControlConfig(
         mode=mode, hetero_kind=hetero, chi=CHI, contention_p=CONTENTION_P,
         sim_ranks=SIM_RANKS, max_sources=SIM_RANKS - 1, seed=p["seed"])
     eng = ServeEngine(ARCH, num_slots=p["num_slots"], max_len=p["max_len"],
-                      tp=SEMI_TP, control=control, seed=p["seed"])
+                      tp=SEMI_TP, control=control, seed=p["seed"], **eng_kw)
     comps = eng.run(make_trace(eng.cfg.vocab_size, *p["trace_args"]))
     eng.close()
     stats = latency_percentiles(comps, total_time_s=eng.clock)
@@ -158,11 +267,21 @@ ref_eng, ref, ref_stats = run("off", "none")
 eng, comps, stats = run("semi", "contention")
 tok_ref = {c.uid: c.tokens for c in ref}
 exact = all(np.array_equal(c.tokens, tok_ref[c.uid]) for c in comps)
+# paged KV under SEMI on the real mesh: the block-paged pool must be
+# invisible to the control plane — token-exact vs the SAME dense ref
+peng, pcomps, pstats = run("semi", "contention",
+                           page_size=p["page_size"])
+paged_exact = all(np.array_equal(c.tokens, tok_ref[c.uid])
+                  for c in pcomps)
 out = {
     "semi": stats,
     "dense_ref": ref_stats,
     "token_exact": bool(exact),
+    "semi_paged": pstats,
+    "paged_token_exact": bool(paged_exact),
     "migrated_steps": sum(1 for h in eng.history if h.get("mig_srcs")),
+    "paged_migrated_steps": sum(1 for h in peng.history
+                                if h.get("mig_srcs")),
     "resize_steps": sum(1 for h in eng.history
                         if h.get("max_bucket", 0) > 0),
     "straggler_steps": sum(1 for h in eng.history if h.get("stragglers")),
@@ -178,7 +297,8 @@ def run_semi_subprocess(*, num_slots, max_len, trace_args, seed=0) -> dict:
     host-device-count flag must be set before jax initializes — the
     parent process is already running single-device legs."""
     params = json.dumps({"num_slots": num_slots, "max_len": max_len,
-                         "trace_args": list(trace_args), "seed": seed})
+                         "trace_args": list(trace_args), "seed": seed,
+                         "page_size": PAGE_SIZE})
     code = _SEMI_CHILD.replace("__SEMI_PARAMS__", repr(params))
     stdout = run_subprocess_py(code, devices=SEMI_TP, timeout=1800,
                                with_bench_path=True)
@@ -255,6 +375,21 @@ def main() -> list:
         f"roof_dist_unfused={u['roofline_distance_s']*1e3:.3f}ms,"
         f"roof_dist_both={fo['roofline_distance_s']*1e3:.3f}ms"))
 
+    # -- mixed-length paged-capacity leg (ISSUE 8) ------------------------
+    mixed = run_mixed_lengths_leg(num_slots=num_slots, max_len=max_len,
+                                  n_requests=n_requests * 2)
+    mf, mp, mc = mixed["fixed"], mixed["paged"], mixed["paged_chunked"]
+    rows.append(csv_row(
+        "serve_mixed_lengths", mc["p50_ms"] * 1e3,
+        f"p50={mc['p50_ms']:.3f}ms(fixed={mf['p50_ms']:.3f}),"
+        f"p95={mc['p95_ms']:.3f}ms(fixed={mf['p95_ms']:.3f}),"
+        f"ttft={mc['ttft_ms']:.3f}ms(fixed={mf['ttft_ms']:.3f}),"
+        f"resident={mixed['peak_resident']}"
+        f"/{mixed['fixed_slot_capacity']}fixed,"
+        f"kv_kb={mixed['kv_cache_bytes']/1024:.0f},"
+        f"preempt={mixed['preemptions']},"
+        f"token_exact={mixed['token_exact'] and mixed['chunked_token_exact']}"))
+
     d, r = results["dense"], results["resized"]
     speedup_p95 = d["p95_ms"] / max(r["p95_ms"], 1e-12)
     speedup_tput = r["tok_per_s"] / max(d["tok_per_s"], 1e-12)
@@ -273,8 +408,12 @@ def main() -> list:
     metrics = {"dense": results["dense"], "resized": results["resized"],
                "semi": s, "semi_dense_ref": semi["dense_ref"],
                "semi_token_exact": semi["token_exact"],
+               "semi_paged": semi["semi_paged"],
+               "semi_paged_token_exact": semi["paged_token_exact"],
+               "semi_paged_migrated_steps": semi["paged_migrated_steps"],
                "semi_migrated_steps": semi["migrated_steps"],
                "semi_resize_steps": semi["resize_steps"],
+               "mixed_lengths": mixed,
                "p95_speedup": speedup_p95, "tput_speedup": speedup_tput,
                "semi_p95_speedup": semi_speedup_p95,
                "decode_path": {
@@ -319,6 +458,44 @@ def main() -> list:
             f"serve bench regression: fused+overlap decode is not closer "
             f"to the roofline bound ({fo['roofline_distance_s']:.6f}s vs "
             f"unfused {u['roofline_distance_s']:.6f}s)")
+    # paged-KV gates (ISSUE 8): the paged engine must be invisible to the
+    # control plane (token-exact under SEMI migration on the real mesh)...
+    if not semi["paged_token_exact"]:
+        raise RuntimeError(
+            "serve bench regression: paged-KV semi decode diverged from "
+            "the uncontended dense baseline — paging must not change a "
+            "single token")
+    # ... and on the mixed-length leg it must hold >= 2x the fixed
+    # cache's resident requests at the SAME HBM budget, token-for-token,
+    # without regressing p50 per-token latency
+    if mixed["kv_cache_bytes"] > mixed["fixed_kv_cache_bytes"]:
+        raise RuntimeError(
+            f"serve bench regression: paged pool "
+            f"{mixed['kv_cache_bytes']}B exceeds the fixed "
+            f"{mixed['fixed_slot_capacity']}-slot cache budget "
+            f"{mixed['fixed_kv_cache_bytes']}B")
+    if mixed["peak_resident"] < 2 * mixed["fixed_slot_capacity"]:
+        raise RuntimeError(
+            f"serve bench regression: paged engine peaked at "
+            f"{mixed['peak_resident']} resident requests — expected >= 2x "
+            f"the fixed cache's {mixed['fixed_slot_capacity']} at equal "
+            "HBM on the mixed-length trace")
+    if not (mixed["token_exact"] and mixed["chunked_token_exact"]):
+        raise RuntimeError(
+            "serve bench regression: paged/chunked engine diverged from "
+            "the fixed-slot engine on the mixed-length trace")
+    # paging alone must be latency-FREE (p50 per-token parity) ...
+    if mp["p50_ms"] > mf["p50_ms"] * 1.001:
+        raise RuntimeError(
+            f"serve bench regression: paged p50 {mp['p50_ms']:.3f}ms "
+            f"regressed vs fixed p50 {mf['p50_ms']:.3f}ms")
+    # ... and chunked prefill must buy its priced p50 cost back in the
+    # tail: better p95 AND better mean TTFT than single-token prefill
+    if mc["p95_ms"] >= mf["p95_ms"] or mc["ttft_ms"] >= mf["ttft_ms"]:
+        raise RuntimeError(
+            f"serve bench regression: chunked prefill did not improve the "
+            f"tail (p95 {mc['p95_ms']:.3f} vs {mf['p95_ms']:.3f}ms, ttft "
+            f"{mc['ttft_ms']:.3f} vs {mf['ttft_ms']:.3f}ms)")
     return rows
 
 

@@ -173,16 +173,24 @@ class DecodeOverheadModel:
     hbm_bw: float               # bytes/s at the calibrated scale
     comm_time: float            # modeled exposed all-reduce time (1 chunk), s
 
-    def attn_s(self, cur_pos, fused: bool) -> float:
+    def attn_s(self, cur_pos, fused: bool, active=None) -> float:
+        """``active``: optional [num_slots] mask of OCCUPIED slots. An
+        empty slot holds pos=0 in the engine's per-step vector; without
+        the mask it is billed as one occupied cache row (tile), which
+        inflated the occupancy roofline serve_bench gates on (ISSUE 8
+        bugfix). The unfused path ignores it: that path physically
+        reads every ``max_len`` row of every slot regardless."""
         cur = np.asarray(cur_pos, np.float64)
         if fused:
             # a tile can't be wider than the cache itself (a short
             # max_len is covered by a single tile), and a slot never
             # reads more rows than it has
             ts = min(self.tile, self.max_len)
-            rows = float(np.minimum(np.ceil((cur + 1.0) / ts) * ts,
-                                    self.max_len).sum())
-            return rows * self.kv_bytes_per_pos / self.hbm_bw
+            per_slot = np.minimum(np.ceil((cur + 1.0) / ts) * ts,
+                                  self.max_len)
+            if active is not None:
+                per_slot = per_slot * np.asarray(active, np.float64)
+            return float(per_slot.sum()) * self.kv_bytes_per_pos / self.hbm_bw
         rows = float(self.num_slots * self.max_len)
         return rows * (self.kv_bytes_per_pos
                        + self.score_bytes_per_pos) / self.hbm_bw
@@ -190,9 +198,15 @@ class DecodeOverheadModel:
     def comm_exposed_s(self, psum_chunks: int) -> float:
         return self.comm_time / max(int(psum_chunks), 1)
 
-    def overhead_s(self, cur_pos, *, fused: bool, psum_chunks: int) -> float:
-        return self.attn_s(cur_pos, fused) \
-            - (self.comm_time - self.comm_exposed_s(psum_chunks))
+    def overhead_s(self, cur_pos, *, fused: bool, psum_chunks: int,
+                   active=None) -> float:
+        # the chunking credit (comm_time - exposed) can only hide the
+        # all-reduce behind the attention-read phase that actually
+        # exists this step: clamp at zero so modeled latency never
+        # drops below the compute-only IterationModel floor (ISSUE 8
+        # bugfix — tiny occupancy + large psum_chunks went negative)
+        return max(0.0, self.attn_s(cur_pos, fused, active=active)
+                   - (self.comm_time - self.comm_exposed_s(psum_chunks)))
 
 
 def decode_overhead_model(model_cfg, num_slots: int, max_len: int,

@@ -370,3 +370,222 @@ def unfused_gqa_decode_attn_2d(cur_pos: jax.Array, q: jax.Array,
         interpret=interpret,
         compiler_params=_params("parallel", "parallel", "arbitrary"),
     )(probs, v)
+
+
+# ---------------------------------------------------------------------------
+# paged variants (ISSUE 8): the per-slot seq axis is replaced by a shared
+# [num_pages, ...] pool + a page table. The table rides scalar prefetch
+# exactly like cur_pos: the k/v BlockSpec index maps look the page id up
+# IN SMEM, so the pipeline streams pool pages (not slot rows), and every
+# unallocated entry clamps to the same page-0 block — consecutive
+# invalid grid steps re-use the resident block instead of issuing a new
+# copy, and ``pl.when`` keeps their tiles out of the online softmax.
+# ---------------------------------------------------------------------------
+
+
+def _paged_gqa_kernel(cur_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *, scale: float, window: int,
+                      ps: int, pps: int, hkv: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = cur_ref[b]
+    page = pt_ref[b * pps + j]
+    base = j * ps
+
+    @pl.when(jnp.logical_and(page >= 0,
+                             _tile_valid(base, cur, ts=ps, window=window)))
+    def _tile():
+        G = q_ref.shape[2]
+        scores = jnp.concatenate(
+            [jax.lax.dot_general(
+                q_ref[0, h], k_ref[0, h], (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+             for h in range(hkv)], axis=0) * scale        # [Hkv*G, ps]
+        R = scores.shape[0]
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (R, ps), 1)
+        ok = pos <= cur
+        if window > 0:
+            ok = jnp.logical_and(ok, pos > cur - window)
+        scores = jnp.where(ok, scores, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev,
+                            jnp.max(scores, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_ref[...] = l_ref[...] * corr \
+            + jnp.sum(p, axis=1, keepdims=True)
+        pv = jnp.concatenate(
+            [jax.lax.dot_general(
+                p[h * G:(h + 1) * G], v_ref[0, h].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+             for h in range(hkv)], axis=0)               # [Hkv*G, Dv]
+        acc_ref[...] = acc_ref[...] * corr[:, 0:1] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == pps - 1)
+    def _emit():
+        G, Dv = q_ref.shape[2], acc_ref.shape[1]
+        l = jnp.maximum(l_ref[:, 0:1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(
+            o_ref.dtype).reshape(q_ref.shape[1], G, Dv)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "window", "interpret"))
+def gqa_paged_decode_attn_2d(cur_pos: jax.Array, pages: jax.Array,
+                             q: jax.Array, k: jax.Array, v: jax.Array, *,
+                             scale: float, window: int = 0,
+                             interpret: bool = True) -> jax.Array:
+    """q [B, Hkv, G, D]; pools k [num_pages, Hkv, ps, D] /
+    v [num_pages, Hkv, ps, Dv]; pages int32 [B, pps] (-1 = unallocated);
+    cur_pos int32 [B]. Returns [B, Hkv, G, Dv] in q.dtype.
+    ps % 8 == 0, G % 8 == 0, D/Dv % 128 == 0 required (ops.py pads
+    G/D/Dv; the page size is a layout constant the engine validates)."""
+    B, Hkv, G, D = q.shape
+    ps, Dv = k.shape[2], v.shape[3]
+    pps = pages.shape[1]
+    if ps % 8 or G % 8 or D % 128 or Dv % 128:
+        raise ValueError(
+            f"gqa_paged_decode_attn_2d: q {q.shape}, k {k.shape}, "
+            f"v {v.shape} — need page_size % 8 == 0, G % 8 == 0, "
+            "D/Dv % 128 == 0 (ops.py pads heads/dims; pick a page size "
+            "that is a multiple of 8)")
+    pt = pages.reshape(-1).astype(jnp.int32)
+    kernel = functools.partial(_paged_gqa_kernel, scale=scale,
+                               window=window, ps=ps, pps=pps, hkv=Hkv)
+
+    def _page_map(b, j, cur, pt):
+        return (jnp.maximum(pt[b * pps + j], 0), 0, 0, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, pps),
+            in_specs=[
+                pl.BlockSpec((1, Hkv, G, D),
+                             lambda b, j, cur, pt: (b, 0, 0, 0)),
+                pl.BlockSpec((1, Hkv, ps, D), _page_map),
+                pl.BlockSpec((1, Hkv, ps, Dv), _page_map),
+            ],
+            out_specs=pl.BlockSpec((1, Hkv, G, Dv),
+                                   lambda b, j, cur, pt: (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Hkv * G, ps), jnp.float32),   # running max m
+                pltpu.VMEM((Hkv * G, ps), jnp.float32),   # running sum l
+                pltpu.VMEM((Hkv * G, Dv), jnp.float32),   # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        interpret=interpret,
+        compiler_params=_params("parallel", "arbitrary"),
+    )(cur_pos, pt, q, k, v)
+
+
+def _paged_mla_kernel(cur_ref, pt_ref, qa_ref, qr_ref, lat_ref, rope_ref,
+                      o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                      ps: int, pps: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = cur_ref[b]
+    page = pt_ref[b * pps + j]
+    base = j * ps
+
+    @pl.when(jnp.logical_and(page >= 0,
+                             _tile_valid(base, cur, ts=ps, window=0)))
+    def _tile():
+        qa = qa_ref[0]                                    # [H, R]
+        qr = qr_ref[0]                                    # [H, Dr]
+        lat = lat_ref[0]                                  # [ps, R]
+        rope = rope_ref[0]                                # [ps, Dr]
+        scores = (jax.lax.dot_general(
+            qa, lat, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+            + jax.lax.dot_general(
+                qr, rope, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)) * scale    # [H, ps]
+        H = scores.shape[0]
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (H, ps), 1)
+        scores = jnp.where(pos <= cur, scores, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev,
+                            jnp.max(scores, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_ref[...] = l_ref[...] * corr \
+            + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr[:, 0:1] + jax.lax.dot_general(
+            p, lat.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == pps - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[:, 0:1], 1e-30)
+        o_ref[0] = acc_ref[...] / l
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def mla_paged_decode_attn_2d(cur_pos: jax.Array, pages: jax.Array,
+                             q_abs: jax.Array, q_rope: jax.Array,
+                             latent: jax.Array, rope: jax.Array, *,
+                             scale: float,
+                             interpret: bool = True) -> jax.Array:
+    """q_abs [B, H, R]; q_rope [B, H, Dr]; pools latent
+    [num_pages, ps, R] / rope [num_pages, ps, Dr]; pages [B, pps];
+    cur_pos [B]. Returns f32 [B, H, R]."""
+    B, H, R = q_abs.shape
+    Dr, ps = q_rope.shape[2], latent.shape[1]
+    pps = pages.shape[1]
+    if ps % 8 or H % 8 or R % 128 or Dr % 128:
+        raise ValueError(
+            f"mla_paged_decode_attn_2d: q_abs {q_abs.shape}, latent "
+            f"{latent.shape} — need page_size % 8 == 0, H % 8 == 0, "
+            "R/Dr % 128 == 0 (ops.py pads heads/dims)")
+    pt = pages.reshape(-1).astype(jnp.int32)
+    kernel = functools.partial(_paged_mla_kernel, scale=scale, ps=ps,
+                               pps=pps)
+
+    def _page_map(b, j, cur, pt):
+        return (jnp.maximum(pt[b * pps + j], 0), 0, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, pps),
+            in_specs=[
+                pl.BlockSpec((1, H, R), lambda b, j, cur, pt: (b, 0, 0)),
+                pl.BlockSpec((1, H, Dr), lambda b, j, cur, pt: (b, 0, 0)),
+                pl.BlockSpec((1, ps, R), _page_map),
+                pl.BlockSpec((1, ps, Dr), _page_map),
+            ],
+            out_specs=pl.BlockSpec((1, H, R),
+                                   lambda b, j, cur, pt: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, ps), jnp.float32),
+                pltpu.VMEM((H, ps), jnp.float32),
+                pltpu.VMEM((H, R), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, R), jnp.float32),
+        interpret=interpret,
+        compiler_params=_params("parallel", "arbitrary"),
+    )(cur_pos, pt, q_abs, q_rope, latent, rope)

@@ -442,3 +442,79 @@ def fused_mla_decode_attention(q_nope_abs, q_rope, latent_cache,
         cur_pos.astype(jnp.int32), qa, qr, lat, rope, scale=scale,
         interpret=interpret_mode())
     return out[:, :H, :R]
+
+
+def fused_paged_decode_attention(q, k_pool, v_pool, *, pages, cur_pos,
+                                 window: int = 0):
+    """Fused GQA decode attention over the block-paged KV pool.
+
+    q [B, Hq, 1, D]; pools [num_pages, Hkv, page_size, D] /
+    [num_pages, Hkv, page_size, Dv]; pages int32 [B, pages_per_slot]
+    (-1 = unallocated); cur_pos [B]. Same ragged-position contract as
+    ``fused_decode_attention`` — the page table rides scalar prefetch,
+    so unallocated pages are never streamed. Returns [B, Hq, 1, Dv].
+    """
+    B, Hq, S1, D = q.shape
+    Hkv, ps = k_pool.shape[1], k_pool.shape[2]
+    if S1 != 1:
+        raise ValueError(
+            f"fused_paged_decode_attention: q {q.shape} must carry "
+            "exactly one query token")
+    if Hq % Hkv != 0:
+        raise ValueError(
+            f"fused_paged_decode_attention: Hq={Hq} not a multiple of "
+            f"Hkv={Hkv}")
+    if ps % 8 != 0:
+        raise ValueError(
+            f"fused_paged_decode_attention: page_size={ps} must be a "
+            "multiple of 8 (f32 sublane tiling) — use the oracle path "
+            "or pick a multiple-of-8 --page-size")
+    if pages.shape[0] != B or cur_pos.shape != (B,):
+        raise ValueError(
+            f"fused_paged_decode_attention: pages {pages.shape} / "
+            f"cur_pos {cur_pos.shape} do not match q batch {B}")
+    Dv = v_pool.shape[3]
+    G = Hq // Hkv
+    scale = float(1.0 / (D ** 0.5))
+    qg = _pad_to(_pad_to(q.reshape(B, Hkv, G, D), 8, 2), 128, 3)
+    k = _pad_to(k_pool, 128, 3)
+    v = _pad_to(v_pool, 128, 3)
+    out = _dk.gqa_paged_decode_attn_2d(
+        cur_pos.astype(jnp.int32), pages.astype(jnp.int32), qg, k, v,
+        scale=scale, window=int(window), interpret=interpret_mode())
+    return out[:, :, :G, :Dv].reshape(B, Hq, 1, Dv).astype(q.dtype)
+
+
+def fused_paged_mla_decode_attention(q_nope_abs, q_rope, latent_pool,
+                                     rope_pool, *, pages, cur_pos,
+                                     head_dim_for_scale: int):
+    """Fused absorbed-MLA decode attention over the paged latent pool.
+
+    q_nope_abs [B, H, R]; q_rope [B, H, Dr]; pools
+    [num_pages, page_size, R] / [num_pages, page_size, Dr]; pages
+    [B, pages_per_slot]; returns f32 [B, H, R]. Inference-only.
+    """
+    B, H, R = q_nope_abs.shape
+    ps = latent_pool.shape[1]
+    if q_rope.shape[:2] != (B, H):
+        raise ValueError(
+            f"fused_paged_mla_decode_attention: q_rope {q_rope.shape} "
+            f"must lead with [B={B}, H={H}]")
+    if ps % 8 != 0:
+        raise ValueError(
+            f"fused_paged_mla_decode_attention: page_size={ps} must be "
+            "a multiple of 8 — use the oracle path or a multiple-of-8 "
+            "--page-size")
+    if pages.shape[0] != B or cur_pos.shape != (B,):
+        raise ValueError(
+            f"fused_paged_mla_decode_attention: pages {pages.shape} / "
+            f"cur_pos {cur_pos.shape} do not match batch {B}")
+    scale = float(1.0 / (head_dim_for_scale ** 0.5))
+    qa = _pad_to(_pad_to(q_nope_abs, 8, 1), 128, 2)
+    qr = _pad_to(_pad_to(q_rope, 8, 1), 128, 2)
+    lat = _pad_to(latent_pool, 128, 2)
+    rope = _pad_to(rope_pool, 128, 2)
+    out = _dk.mla_paged_decode_attn_2d(
+        cur_pos.astype(jnp.int32), pages.astype(jnp.int32), qa, qr,
+        lat, rope, scale=scale, interpret=interpret_mode())
+    return out[:, :H, :R]

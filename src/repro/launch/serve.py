@@ -69,6 +69,7 @@ from repro.config import ShapeConfig, get_config, smoke_variant
 from repro.control import ControlConfig, ControlPlane
 from repro.core import geometry as geom_lib
 from repro.core import hetero as hetero_lib
+from repro.core import paging as paging_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_small_mesh
 from repro.models import get_api
@@ -112,10 +113,12 @@ class Completion:
 class _Slot:
     req: Request
     admitted_step: int
-    pos: int = 0                       # cache position fed THIS step
-    next_token: int = 0                # token to feed this step
+    pos: int = 0                       # NEXT cache position to feed
+    next_token: int = 0                # token to feed this step (decode)
     generated: Optional[list] = None
     t_mark: float = 0.0                # engine clock at last token emission
+    t_elig: float = 0.0                # clock at TTFT eligibility (fixed;
+    #                                    restored on page-pool preemption)
     latencies: Optional[list] = None
 
 
@@ -153,7 +156,21 @@ class ServeEngine:
                  tp: int = 1, ckpt_dir: Optional[str] = None, seed: int = 0,
                  control: Optional[ControlConfig] = None,
                  param_dtype: str = "float32",
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 page_size: int = 0, prefill_chunk: int = 1,
+                 kv_int8: bool = False,
+                 num_pages: Optional[int] = None):
+        """``page_size`` > 0 switches the KV cache to the block-paged
+        pool layout (core/paging.py): attention cache leaves live in a
+        shared ``[num_pages, page_size, ...]`` pool (``num_pages``
+        defaults to full fixed-cache capacity; pass less to hold more
+        resident slots than the pool could serve at max_len — the
+        engine preempts on exhaustion). ``prefill_chunk`` teacher-forces
+        up to that many prompt tokens per engine step inside ONE jitted
+        step (decode slots still advance one token), so a long prompt
+        no longer serializes the batch. ``kv_int8`` stores the GQA K/V
+        pool in int8 with per-row f32 scales (half the pool HBM; not
+        bit-exact, oracle attention path only)."""
         self.cfg = smoke_variant(get_config(arch))
         cfg_canonical = self.cfg
         self.api = get_api(self.cfg)
@@ -168,6 +185,26 @@ class ServeEngine:
         self.control = control or ControlConfig()
         self.max_queue = max_queue
         dtype = jnp.dtype(param_dtype)
+
+        # ---- paged KV layout + chunked prefill --------------------------
+        if kv_int8 and not page_size:
+            raise ValueError("kv_int8 requires the paged cache "
+                             "(--page-size > 0)")
+        self.paging = (paging_lib.paged_layout(
+            max_len, page_size, num_slots, num_pages=num_pages,
+            kv_int8=kv_int8) if page_size else None)
+        if self.paging is not None and self.control.fused_attention:
+            if kv_int8:
+                raise ValueError("kv_int8 has no fused-kernel path; drop "
+                                 "--fused-attn (oracle dequant attention)")
+            if page_size % 8:
+                raise ValueError(f"--page-size {page_size} must be a "
+                                 "multiple of 8 for the fused paged "
+                                 "kernel (f32 sublane tiling)")
+        self.alloc = (paging_lib.PageAllocator(self.paging, num_slots)
+                      if self.paging is not None else None)
+        self.prefill_chunk = max(1, int(prefill_chunk))
+        self.preemptions = 0
 
         # ---- workload control wiring (the unified control plane) --------
         c = self.control
@@ -195,16 +232,39 @@ class ServeEngine:
         # every step is always a previous step's output — a separate reset
         # executable produces different buffer layouts and costs a
         # spurious one-time retrace (observed on the mamba conv cache).
-        cache_ax = self.api.cache_axes(self.cfg)
+        cache_ax = (self.api.cache_axes(self.cfg, paging=self.paging)
+                    if self.paging is not None
+                    else self.api.cache_axes(self.cfg))
 
         def _clear_slots(cache, clear):
             def one(leaf, ax):
                 ax_full = (None,) * (leaf.ndim - len(ax)) + tuple(ax)
+                if "batch" not in ax_full:
+                    # paged pool leaf: recycling is the allocator's job
+                    # (reads mask by position; no zeroing needed)
+                    return leaf
                 b = ax_full.index("batch")
                 shp = [1] * leaf.ndim
                 shp[b] = num_slots
                 return leaf * (1.0 - clear).reshape(shp).astype(leaf.dtype)
             return jax.tree.map(one, cache, cache_ax)
+
+        # chunked-prefill lane merge: a substep's INVALID lanes (idle
+        # slots, decode slots past substep 0, prefill lanes past the
+        # prompt chunk) must not advance that slot's state. Attention
+        # scatters already drop invalid positions; recurrent SSM/conv
+        # leaves update unconditionally, so batch-axis leaves are
+        # where-merged back to their pre-substep values.
+        def _merge_invalid(old, new, valid):
+            def one(o, n, ax):
+                ax_full = (None,) * (n.ndim - len(ax)) + tuple(ax)
+                if "batch" not in ax_full:
+                    return n
+                b = ax_full.index("batch")
+                shp = [1] * n.ndim
+                shp[b] = num_slots
+                return jnp.where((valid > 0.0).reshape(shp), n, o)
+            return jax.tree.map(one, old, new, cache_ax)
 
         # plan-signature compile cache over serve-step executables: the
         # controller's static shed counts select the executable; dynamic
@@ -212,29 +272,43 @@ class ServeEngine:
         from jax.sharding import NamedSharding, PartitionSpec
         replicated = NamedSharding(self.mesh, PartitionSpec())
 
+        invalid_pos = jnp.int32(paging_lib.INVALID_POS)
+
         def _build(static):
             fn, _, in_sh, out_sh = steps_lib.build_serve_step(
                 self.cfg, self.shape, self.mesh, dtype,
                 control_static=static, use_kernel=wc.use_kernel,
                 fused_attention=wc.fused_attention,
-                psum_chunks=wc.psum_chunks)
+                psum_chunks=wc.psum_chunks, paging=self.paging)
 
-            def stepper(params, cache, tokens, pos, clear, *rest):
-                # the full-cache sweep only runs on admission steps; the
-                # common decode step skips it (clear is all-zeros)
+            def stepper(params, cache, tokens, pos, valid, clear, *rest):
+                # tokens/pos/valid are [C, num_slots] — C chunked-prefill
+                # substeps scanned INSIDE the one jitted step (C=1 is the
+                # plain decode step). rest = (pages?, plan?). The
+                # full-cache sweep only runs on admission steps; the
+                # common decode step skips it (clear is all-zeros).
                 cache = jax.lax.cond(jnp.any(clear > 0.0),
                                      lambda c: _clear_slots(c, clear),
                                      lambda c: c, cache)
-                logits, new_cache = fn(params, cache, tokens, pos, *rest)
-                # greedy argmax in-graph: only [num_slots] token ids cross
-                # the host boundary per step, not the full logits
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
-                    new_cache
+
+                def substep(c, xs):
+                    tok, p, v = xs
+                    p_eff = jnp.where(v > 0.0, p, invalid_pos)
+                    logits, nc = fn(params, c, tok, p_eff, *rest)
+                    nc = _merge_invalid(c, nc, v)
+                    # greedy argmax in-graph: only [C, num_slots] token
+                    # ids cross the host boundary, not the full logits
+                    return nc, jnp.argmax(logits, -1).astype(jnp.int32)
+
+                cache, toks = jax.lax.scan(substep, cache,
+                                           (tokens, pos, valid))
+                return toks, cache
 
             jitted = jax.jit(stepper,
-                             in_shardings=in_sh[:4] + (replicated,)
-                             + in_sh[4:],
-                             out_shardings=(in_sh[2], out_sh[1]),
+                             in_shardings=(in_sh[0], in_sh[1], replicated,
+                                           replicated, replicated,
+                                           replicated) + in_sh[4:],
+                             out_shardings=(replicated, out_sh[1]),
                              donate_argnums=(1,))
             n_plan_slots = (max(1, static.num_sources)
                             if static is not None else 0)
@@ -253,7 +327,9 @@ class ServeEngine:
         # stay bit-identical (tests pin them)
         self.overhead = (hetero_lib.decode_overhead_model(
             cfg_canonical, num_slots, max_len, self.it_model,
-            peak_flops=c.peak_flops)
+            peak_flops=c.peak_flops,
+            tile=(self.paging.page_size if self.paging is not None
+                  else 128))
             if c.model_decode_overheads else None)
         self.plane = ControlPlane(
             self.cfg, wc, mesh=self.mesh, tp=tp, builder=_build,
@@ -288,12 +364,15 @@ class ServeEngine:
             params = geom_lib.expand_ffn_params(params, self.geometry)
         self.params = jax.device_put(params, in_sh[0])
         self.cache = jax.device_put(
-            self.api.init_cache(self.cfg, num_slots, max_len, dtype),
+            self.api.init_cache(self.cfg, num_slots, max_len, dtype,
+                                paging=self.paging)
+            if self.paging is not None
+            else self.api.init_cache(self.cfg, num_slots, max_len, dtype),
             in_sh[1])
 
         # ---- host-side state ---------------------------------------------
         self.queue: collections.deque = collections.deque()
-        self._eligible_clock: Dict[int, float] = {}   # id(req) -> TTFT start
+        self._eligible_clock: Dict[int, float] = {}   # req.uid -> TTFT start
         self.slots: List[Optional[_Slot]] = [None] * num_slots
         self.free: List[int] = list(range(num_slots))[::-1]
         self.step_count = 0
@@ -319,9 +398,12 @@ class ServeEngine:
             return False
         self.queue.append(req)
         # time-to-first-token starts when the request becomes ELIGIBLE
-        # (arrival), not when a slot frees up — queue wait is part of TTFT
+        # (arrival), not when a slot frees up — queue wait is part of
+        # TTFT. Keyed by req.uid: keying by id(req) handed a NEW request
+        # a stale clock whenever CPython recycled a completed request's
+        # address (ISSUE 8 bugfix).
         if req.arrival_step <= self.step_count:
-            self._eligible_clock.setdefault(id(req), self.clock)
+            self._eligible_clock.setdefault(req.uid, self.clock)
         return True
 
     def _admit(self):
@@ -336,31 +418,125 @@ class ServeEngine:
         # mark queue members that just became eligible (TTFT clock start)
         for req in self.queue:
             if req.arrival_step <= self.step_count:
-                self._eligible_clock.setdefault(id(req), self.clock)
+                self._eligible_clock.setdefault(req.uid, self.clock)
         while self.free and self.queue \
                 and self.queue[0].arrival_step <= self.step_count:
+            if self.alloc is not None \
+                    and not self.alloc.can_fit(len(self.queue[0].prompt)):
+                break          # pool can't hold the prompt; wait for frees
             req = self.queue.popleft()
             slot = self.free.pop()
+            t0 = self._eligible_clock.pop(req.uid, self.clock)
             self.slots[slot] = _Slot(
                 req=req, admitted_step=self.step_count, pos=0,
                 next_token=int(req.prompt[0]), generated=[],
-                t_mark=self._eligible_clock.pop(id(req), self.clock),
-                latencies=[])
+                t_mark=t0, t_elig=t0, latencies=[])
             clear[slot] = 1.0
             admitted.append(req.uid)
         return admitted, clear
 
+    # -- page-pool bookkeeping (paged engine only) ---------------------------
+    def _planned_feed(self, s: "_Slot") -> int:
+        """Positions this slot writes THIS step: a prefill chunk or one
+        decode token."""
+        P = len(s.req.prompt)
+        return min(self.prefill_chunk, P - s.pos) if s.pos < P else 1
+
+    def _preempt(self, slot: int) -> int:
+        """Evict a slot back to the FRONT of the queue, returning its
+        pages. Deterministic greedy decode regenerates the identical
+        tokens on re-admission, so preemption preserves token-exactness;
+        the TTFT clock is restored to the original eligibility time so
+        queue-wait (including the preemption) stays in TTFT."""
+        s = self.slots[slot]
+        self.alloc.free_slot(slot)
+        self.slots[slot] = None
+        self.free.append(slot)
+        self.queue.appendleft(s.req)
+        self._eligible_clock[s.req.uid] = s.t_elig
+        self.preemptions += 1
+        return s.req.uid
+
+    def _ensure_pages(self) -> list:
+        """Grow each active slot's page list to cover this step's writes,
+        preempting the most recently admitted other slot on exhaustion
+        (oldest requests keep their pages — FIFO service order). Returns
+        the uids preempted this step."""
+        preempted = []
+        order = sorted(
+            (i for i, s in enumerate(self.slots) if s is not None),
+            key=lambda i: (self.slots[i].admitted_step, i))
+        for i in order:
+            s = self.slots[i]
+            if s is None:                      # preempted earlier this pass
+                continue
+            while not self.alloc.ensure(i, s.pos + self._planned_feed(s) - 1):
+                victims = [j for j, v in enumerate(self.slots)
+                           if v is not None and j != i]
+                if not victims:
+                    raise RuntimeError(
+                        f"page pool exhausted: slot {i} (uid "
+                        f"{s.req.uid}) needs a page and no other slot "
+                        "can be preempted — the pool is too small for a "
+                        "single request")
+                victim = max(victims,
+                             key=lambda j: (self.slots[j].admitted_step, j))
+                preempted.append(self._preempt(victim))
+        return preempted
+
+    def kv_cache_bytes(self) -> int:
+        """Total bytes of the engine's cache pytree (KV pools/rows plus
+        recurrent state) — the equal-HBM axis of serve_bench's
+        mixed_lengths capacity gate."""
+        return int(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree.leaves(self.cache)))
+
     # -- one decode step -----------------------------------------------------
     def step(self) -> Dict:
-        """Admit, run one jitted decode step over all slots, harvest."""
-        admitted, clear = self._admit()
+        """Admit, run one jitted step over all slots, harvest.
 
-        tokens = np.zeros((self.num_slots,), np.int32)
-        pos = np.zeros((self.num_slots,), np.int32)
+        Each step feeds every active slot either a CHUNK of its prompt
+        (up to ``prefill_chunk`` teacher-forced positions, scanned inside
+        the one jitted executable) or one greedy decode token — chunked
+        prefill and decode interleave freely across slots with no
+        retrace. On the paged engine, page lists are grown to cover this
+        step's writes first, preempting the newest-admitted slot when the
+        pool runs dry."""
+        admitted, clear = self._admit()
+        preempted = self._ensure_pages() if self.alloc is not None else []
+
+        C = self.prefill_chunk
+        B = self.num_slots
+        tokens_cb = np.zeros((C, B), np.int32)
+        pos_cb = np.full((C, B), paging_lib.INVALID_POS, np.int32)
+        valid_cb = np.zeros((C, B), np.float32)
+        feed = np.zeros((B,), np.int32)       # positions fed per slot
+        last_pos = np.zeros((B,), np.int32)   # highest position fed
+        active = np.zeros((B,), np.float32)
         for i, s in enumerate(self.slots):
-            if s is not None:
-                tokens[i] = s.next_token
-                pos[i] = s.pos
+            if s is None:
+                continue
+            active[i] = 1.0
+            P = len(s.req.prompt)
+            if s.pos < P:                     # teacher-forced prefill chunk
+                n = min(C, P - s.pos)
+                tokens_cb[:n, i] = np.asarray(s.req.prompt[s.pos:s.pos + n],
+                                              np.int32)
+                pos_cb[:n, i] = np.arange(s.pos, s.pos + n)
+            else:                             # one greedy decode token
+                n = 1
+                tokens_cb[0, i] = s.next_token
+                pos_cb[0, i] = s.pos
+            valid_cb[:n, i] = 1.0
+            feed[i] = n
+            last_pos[i] = s.pos + n - 1
+
+        # chunked prefill feeds MORE than one token per occupied slot;
+        # price the extra substep work as extra workload fraction so the
+        # modeled clock stays honest (C=1 → scale 1.0, bit-identical to
+        # the single-token trajectories the classic legs pin)
+        chunk_scale = 1.0 + max(0.0, float(valid_cb.sum())
+                                - float(active.sum())) / self.num_slots
 
         # -- straggler model + plan selection -----------------------------
         step_idx = self.step_count
@@ -381,29 +557,35 @@ class ServeEngine:
             # keyed on the projected signature in the compile cache
             step_fn, plan_arrays, proj = self.plane.dispatch(plan)
             frac = self.plane.work_frac(plan)
-            latency = self.it_model.step_time(chis, frac)
+            latency = self.it_model.step_time(chis, frac * chunk_scale)
         else:
             step_fn, plan_arrays = self._base_step, None
-            latency = dense_latency
+            latency = (dense_latency if chunk_scale == 1.0
+                       else self.it_model.step_time(
+                           chis, np.ones(self.sim_ranks) * chunk_scale))
 
         self.plane.timer.start()
         with use_mesh(self.mesh):
-            args = (self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(pos), jnp.asarray(clear))
+            args = (self.params, self.cache, jnp.asarray(tokens_cb),
+                    jnp.asarray(pos_cb), jnp.asarray(valid_cb),
+                    jnp.asarray(clear))
+            if self.alloc is not None:
+                args = args + (jnp.asarray(self.alloc.table()),)
             if plan_arrays is not None:
                 args = args + (plan_arrays,)
             tok_ids, self.cache = step_fn(*args)
         wall = self.plane.timer.stop(tok_ids)
-        nxt = np.asarray(jax.device_get(tok_ids))
+        nxt = np.asarray(jax.device_get(tok_ids))      # [C, num_slots]
         overhead = 0.0
         if self.schedule is None:
             latency = dense_latency = wall       # no simulation: real time
         elif self.overhead is not None:
             # occupancy-priced attention reads + (reduced) collective
-            # exposure, from THIS step's actual per-slot positions
+            # exposure, from THIS step's actual per-slot positions —
+            # masked by `active` so empty slots bill zero tiles
             overhead = self.overhead.overhead_s(
-                pos, fused=self._wc.fused_attention,
-                psum_chunks=self._wc.psum_chunks)
+                last_pos, fused=self._wc.fused_attention,
+                psum_chunks=self._wc.psum_chunks, active=active)
             latency += overhead
 
         # -- telemetry: what each simulated rank measured THIS step -------
@@ -415,20 +597,27 @@ class ServeEngine:
         # -- harvest per slot ---------------------------------------------
         completed = []
         for i, s in enumerate(self.slots):
-            if s is None:
+            if s is None or feed[i] == 0:
                 continue
+            n = int(feed[i])
+            prev = s.pos
+            s.pos = prev + n
             P = len(s.req.prompt)
-            if s.pos + 1 < P:                    # teacher-forced prefill
-                s.next_token = int(s.req.prompt[s.pos + 1])
-                s.pos += 1
-                continue
-            tok = int(nxt[i])                    # greedy decode
-            s.generated.append(tok)
-            s.latencies.append(self.clock - s.t_mark)
-            s.t_mark = self.clock
+            if prev < P and s.pos < P:
+                continue                         # still mid-prefill
+            # the last fed position's logits carry the next token (chunk
+            # end == prompt end for the prefill→decode handoff)
+            tok = int(nxt[n - 1, i])
+            emitted = False
+            if len(s.generated) < s.req.max_new_tokens:
+                s.generated.append(tok)
+                s.latencies.append(self.clock - s.t_mark)
+                s.t_mark = self.clock
+                emitted = True
             done = (len(s.generated) >= s.req.max_new_tokens
-                    or (s.req.eos_id is not None and tok == s.req.eos_id))
-            if done or s.pos + 1 >= self.max_len:
+                    or (emitted and s.req.eos_id is not None
+                        and tok == s.req.eos_id))
+            if done or s.pos >= self.max_len:
                 self.completions.append(Completion(
                     uid=s.req.uid, prompt=s.req.prompt,
                     tokens=np.asarray(s.generated, np.int32),
@@ -436,23 +625,32 @@ class ServeEngine:
                     finished_step=self.step_count, slot=i,
                     token_latencies=list(s.latencies)))
                 completed.append(s.req.uid)
+                self._eligible_clock.pop(s.req.uid, None)
                 self.slots[i] = None
                 self.free.append(i)
+                if self.alloc is not None:
+                    self.alloc.free_slot(i)
             else:
                 s.next_token = tok
-                s.pos += 1
 
         report = {"step": self.step_count, "latency_s": latency,
                   "dense_latency_s": dense_latency, "wall_s": wall,
                   "active": sum(s is not None for s in self.slots),
                   "admitted": admitted, "completed": completed,
                   "queued": len(self.queue)}
+        if preempted:
+            report["preempted"] = preempted
         if self.overhead is not None:
             report["overhead_s"] = overhead
             # slot-cache occupancy + the minimum (fused, occupied-tiles)
-            # attention read time: the roofline terms serve_bench gates on
-            report["occupancy"] = float((pos + 1).mean() / self.max_len)
-            report["attn_bound_s"] = self.overhead.attn_s(pos, fused=True)
+            # attention read time: the roofline terms serve_bench gates
+            # on. Both are masked by the ACTIVE slots — an empty slot's
+            # pos of 0 is vacancy, not a resident length-1 sequence.
+            report["occupancy"] = float(
+                ((last_pos + 1.0) * active).sum()
+                / (self.num_slots * self.max_len))
+            report["attn_bound_s"] = self.overhead.attn_s(
+                last_pos, fused=True, active=active)
         if plan_report is not None:
             report["stragglers"] = list(plan_report.stragglers)
             report["max_bucket"] = int(plan_report.bucket_by_rank.max())
@@ -641,6 +839,16 @@ def main():
     ap.add_argument("--geometry", default=None,
                     help="static ragged TP shard geometry: per-rank FFN "
                          "block counts 'a,b,...' (DESIGN_SHARDING.md)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="block-paged KV cache page size in tokens "
+                         "(0 = fixed per-slot cache); with --fused-attn "
+                         "must be a multiple of 8")
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="prompt positions fed per step during prefill "
+                         "(scanned inside the one jitted step)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8-quantize the paged K/V pools (per-row "
+                         "scales; oracle attention path only)")
     args = ap.parse_args()
 
     control = ControlConfig(
@@ -652,7 +860,10 @@ def main():
         geometry=geom_lib.parse_geometry_arg(args.geometry, args.tp))
     eng = ServeEngine(args.arch, num_slots=args.slots,
                       max_len=args.prompt_len + args.gen_len, tp=args.tp,
-                      ckpt_dir=args.ckpt_dir, control=control)
+                      ckpt_dir=args.ckpt_dir, control=control,
+                      page_size=args.page_size,
+                      prefill_chunk=args.prefill_chunk,
+                      kv_int8=args.kv_int8)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, eng.cfg.vocab_size,

@@ -105,14 +105,21 @@ def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 
 
 def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, paging=None):
     """(SDS dict, sharding dict) for one SERVE step: token + cache at
-    seq_len, writing position seq_len-1."""
+    seq_len, writing position seq_len-1. ``paging``
+    (core.paging.PagedLayout) swaps the attention cache leaves to the
+    block-paged pool layout and adds a per-step page-table input."""
     rules = rules_for(shape, mesh, cfg)
     api = get_api(cfg)
     B, S = shape.global_batch, shape.seq_len
-    cache_sds = jax.eval_shape(lambda: api.init_cache(cfg, B, S, dtype))
-    cache_ax = api.cache_axes(cfg)
+    if paging is not None:
+        cache_sds = jax.eval_shape(
+            lambda: api.init_cache(cfg, B, S, dtype, paging=paging))
+        cache_ax = api.cache_axes(cfg, paging=paging)
+    else:
+        cache_sds = jax.eval_shape(lambda: api.init_cache(cfg, B, S, dtype))
+        cache_ax = api.cache_axes(cfg)
     # pad missing leading dims (scan-stacked) with None
     cache_shards = jax.tree.map(
         lambda sds, ax: _ns(mesh, rules,
@@ -126,6 +133,9 @@ def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     shards = {"cache": cache_shards,
               "tokens": _ns(mesh, rules, "batch"),
               "cur_pos": _ns(mesh, rules, "batch")}
+    if paging is not None:
+        specs["pages"] = SDS((B, paging.pages_per_slot), jnp.int32)
+        shards["pages"] = _ns(mesh, rules, "batch", None)
     if cfg.encdec is not None:
         specs["encoder_out"] = SDS(
             (B, cfg.encdec.encoder_seq_len, cfg.d_model), dtype)

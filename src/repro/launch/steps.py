@@ -229,7 +229,7 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                      dtype=jnp.bfloat16,
                      control_static: Optional[PlanStatic] = None,
                      use_kernel: bool = False, fused_attention: bool = False,
-                     psum_chunks: int = 1):
+                     psum_chunks: int = 1, paging=None):
     """One-token decode against a seq_len KV cache.
 
     With ``control_static`` the step takes an extra ``plan`` dict (same
@@ -241,6 +241,9 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     ``fused_attention`` routes the decode-attention call through the
     fused Pallas kernel (cfg-level, so the DENSE ctx=None path gets it
     too); ``psum_chunks`` chunk-splits the controlled epilogue psums.
+    ``paging`` (core.paging.PagedLayout) swaps the attention cache to
+    the block-paged pool and adds a ``pages`` [B, pages_per_slot] arg
+    right after ``cur_pos``.
     """
     cfg = specs_lib.effective_model_cfg(cfg, shape)
     if fused_attention:
@@ -249,7 +252,8 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     api = get_api(cfg)
     rules = specs_lib.rules_for(shape, mesh, cfg)
     p_sds, _, p_shards = specs_lib.param_specs(cfg, mesh, rules, dtype)
-    d_sds, d_shards = specs_lib.decode_specs(cfg, shape, mesh, dtype)
+    d_sds, d_shards = specs_lib.decode_specs(cfg, shape, mesh, dtype,
+                                             paging=paging)
 
     logits_spec = sh.filter_spec_for_mesh(
         sh.logical_to_spec(("batch", "vocab"), rules), mesh)
@@ -270,6 +274,9 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         pl_sds = pl_shards = None
 
     if cfg.encdec is not None:
+        if paging is not None:
+            raise ValueError("paged decode does not cover encoder-decoder "
+                             "models (the serve engine rejects them)")
         def serve_step(params, cache, tokens, cur_pos, encoder_out):
             with sh.use_rules(rules):
                 return api.decode_step(params, cfg, cache, tokens, cur_pos,
@@ -278,6 +285,18 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                 d_sds["encoder_out"])
         in_sh = (p_shards, d_shards["cache"], d_shards["tokens"],
                  d_shards["cur_pos"], d_shards["encoder_out"])
+    elif control_static is not None and paging is not None:
+        def serve_step(params, cache, tokens, cur_pos, pages, plan):
+            with sh.use_rules(rules):
+                ctx = make_ctx(mesh, control_static, plan,
+                               use_kernel=use_kernel,
+                               psum_chunks=psum_chunks)
+                return api.decode_step(params, cfg, cache, tokens, cur_pos,
+                                       ctx=ctx, pages=pages)
+        args = (p_sds, d_sds["cache"], d_sds["tokens"], d_sds["cur_pos"],
+                d_sds["pages"], pl_sds)
+        in_sh = (p_shards, d_shards["cache"], d_shards["tokens"],
+                 d_shards["cur_pos"], d_shards["pages"], pl_shards)
     elif control_static is not None:
         def serve_step(params, cache, tokens, cur_pos, plan):
             with sh.use_rules(rules):
@@ -290,6 +309,15 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                 pl_sds)
         in_sh = (p_shards, d_shards["cache"], d_shards["tokens"],
                  d_shards["cur_pos"], pl_shards)
+    elif paging is not None:
+        def serve_step(params, cache, tokens, cur_pos, pages):
+            with sh.use_rules(rules):
+                return api.decode_step(params, cfg, cache, tokens, cur_pos,
+                                       pages=pages)
+        args = (p_sds, d_sds["cache"], d_sds["tokens"], d_sds["cur_pos"],
+                d_sds["pages"])
+        in_sh = (p_shards, d_shards["cache"], d_shards["tokens"],
+                 d_shards["cur_pos"], d_shards["pages"])
     else:
         def serve_step(params, cache, tokens, cur_pos):
             with sh.use_rules(rules):

@@ -193,3 +193,61 @@ def mla_decode_attention(q_nope_abs: jax.Array, q_rope: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhs,bsr->bhr", p, latent_cache,
                       preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (oracle): gather pool pages through the page table, then
+# run the exact fixed-layout decode attention. The gather clips the table
+# (unallocated entries are -1), which is safe: every position <= cur_pos
+# lies in an allocated page, and positions beyond cur_pos are masked.
+# ---------------------------------------------------------------------------
+
+
+def gather_paged_kv(pool: jax.Array, pages: jax.Array) -> jax.Array:
+    """pool [num_pages, KV, ps, d]; pages [B, pps] int32 (-1 = unset).
+    Returns the linearized per-slot cache [B, KV, pps*ps, d]."""
+    num_pages = pool.shape[0]
+    B, pps = pages.shape
+    k = pool[jnp.clip(pages, 0, num_pages - 1)]    # [B, pps, KV, ps, d]
+    KV, ps, d = k.shape[2], k.shape[3], k.shape[4]
+    return k.transpose(0, 2, 1, 3, 4).reshape(B, KV, pps * ps, d)
+
+
+def gather_paged_rows(pool: jax.Array, pages: jax.Array) -> jax.Array:
+    """pool [num_pages, ps, d]; pages [B, pps] -> [B, pps*ps, d] (MLA)."""
+    num_pages = pool.shape[0]
+    B, pps = pages.shape
+    x = pool[jnp.clip(pages, 0, num_pages - 1)]    # [B, pps, ps, d]
+    return x.reshape(B, pps * x.shape[2], x.shape[3])
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, *, pages: jax.Array,
+                           cur_pos: jax.Array, window: int = 0,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None) -> jax.Array:
+    """GQA decode over the paged pool: q [B, Hq, 1, D]; pools
+    [num_pages, Hkv, ps, D]; pages [B, pps]; cur_pos [B]. With
+    ``k_scale``/``v_scale`` ([num_pages, Hkv, ps] f32) the pools are
+    int8 and dequantized per row after the gather."""
+    k = gather_paged_kv(k_pool, pages)
+    v = gather_paged_kv(v_pool, pages)
+    if k_scale is not None:
+        ks = gather_paged_kv(k_scale[..., None], pages)
+        vs = gather_paged_kv(v_scale[..., None], pages)
+        k = (k.astype(jnp.float32) * ks).astype(q.dtype)
+        v = (v.astype(jnp.float32) * vs).astype(q.dtype)
+    return decode_attention(q, k, v, cur_pos=cur_pos, window=window)
+
+
+def paged_mla_decode_attention(q_nope_abs: jax.Array, q_rope: jax.Array,
+                               latent_pool: jax.Array, rope_pool: jax.Array,
+                               *, pages: jax.Array, cur_pos: jax.Array,
+                               head_dim_for_scale: int) -> jax.Array:
+    """Absorbed-MLA decode over paged latent/rope pools
+    ([num_pages, ps, R] / [num_pages, ps, Dr])."""
+    lat = gather_paged_rows(latent_pool, pages)
+    rope = gather_paged_rows(rope_pool, pages)
+    return mla_decode_attention(q_nope_abs, q_rope, lat, rope,
+                                cur_pos=cur_pos,
+                                head_dim_for_scale=head_dim_for_scale)

@@ -94,18 +94,40 @@ def init_attention(rng, cfg: ModelConfig, dtype) -> Tuple[Params, Params]:
     return p, ax
 
 
+def _paged_write_ids(pages: jax.Array, cur_pos: jax.Array,
+                     page_size: int, num_pages: int):
+    """Map each slot's write position to a (pool page id, in-page offset).
+
+    Invalid positions — the ``INVALID_POS`` lanes of a chunked-prefill
+    substep, or a position past the slot's allocated frontier — redirect
+    to page id ``num_pages``: POSITIVE out-of-range, which the caller's
+    ``mode="drop"`` scatter discards. (A -1 sentinel would not work:
+    jax's default scatter WRAPS negative indices, silently corrupting
+    the last pool page.)"""
+    pps = pages.shape[1]
+    pi = cur_pos // page_size
+    p = jnp.take_along_axis(pages, jnp.clip(pi, 0, pps - 1)[:, None],
+                            axis=1)[:, 0]
+    ok = jnp.logical_and(jnp.logical_and(pi >= 0, pi < pps), p >= 0)
+    page = jnp.where(ok, p, num_pages)
+    return page, cur_pos % page_size
+
+
 def apply_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
                     ctx: Optional[ControlContext], positions: jax.Array,
                     causal: bool = True, window: int = 0,
                     cache: Optional[Params] = None,
                     cur_pos: Optional[jax.Array] = None,
                     kv_source: Optional[jax.Array] = None,
-                    mrope_positions: Optional[jax.Array] = None
+                    mrope_positions: Optional[jax.Array] = None,
+                    pages: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, Optional[Params]]:
     """Self- (or cross-, via kv_source) attention.
 
     cache None => train/prefill (full sequence). cache given => decode:
     x is [B, 1, d], the cache is updated at cur_pos and attended.
+    ``pages`` [B, pages_per_slot] switches the decode cache to the
+    block-paged pool layout (core/paging.py).
     """
     B, S, d = x.shape
     hd = cfg.resolved_head_dim
@@ -114,7 +136,7 @@ def apply_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
 
     if cfg.mla is not None:
         return _apply_mla(p, x, cfg, ctx=ctx, positions=positions,
-                          cache=cache, cur_pos=cur_pos)
+                          cache=cache, cur_pos=cur_pos, pages=pages)
 
     q = controlled_proj(x, p["wq"], ctx, "qkv", split="col")
     src = x if kv_source is None else kv_source
@@ -142,7 +164,49 @@ def apply_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     v = v.transpose(0, 2, 1, 3)
 
     new_cache = None
-    if cache is not None and S == 1:
+    if cache is not None and S == 1 and pages is not None:
+        # paged decode: scatter into the shared pool through the page
+        # table; invalid lanes redirect to the dropped page id
+        kc, vc = cache["k"], cache["v"]
+        num_pages, ps_len = kc.shape[0], kc.shape[2]
+        page, off = _paged_write_ids(pages, cur_pos, ps_len, num_pages)
+        k_new, v_new = k[:, :, 0, :], v[:, :, 0, :]           # [B, KV, hd]
+        k_scale = v_scale = None
+        if "k_scale" in cache:
+            # int8 pool: per (slot, kv-head) row scale = max|.|/127
+            ksc = jnp.maximum(jnp.abs(k_new).max(axis=-1), 1e-12) / 127.0
+            vsc = jnp.maximum(jnp.abs(v_new).max(axis=-1), 1e-12) / 127.0
+            k_new = jnp.clip(jnp.round(k_new / ksc[..., None]),
+                             -127, 127)
+            v_new = jnp.clip(jnp.round(v_new / vsc[..., None]),
+                             -127, 127)
+            k_scale = cache["k_scale"].at[page, :, off].set(
+                ksc, mode="drop")
+            v_scale = cache["v_scale"].at[page, :, off].set(
+                vsc, mode="drop")
+        kc = kc.at[page, :, off, :].set(k_new.astype(kc.dtype),
+                                        mode="drop")
+        vc = vc.at[page, :, off, :].set(v_new.astype(vc.dtype),
+                                        mode="drop")
+        kc = shard(kc, (None, "kv_heads", None, None), mesh=mesh)
+        vc = shard(vc, (None, "kv_heads", None, None), mesh=mesh)
+        if cfg.fused_decode_attn:
+            if k_scale is not None:
+                raise ValueError(
+                    "kv_int8 paging has no fused kernel path — run with "
+                    "fused_attention off (oracle dequant)")
+            from repro.kernels import ops as _kops
+            o = _kops.fused_paged_decode_attention(
+                q, kc, vc, pages=pages, cur_pos=cur_pos, window=window)
+        else:
+            o = attn_lib.paged_decode_attention(
+                q, kc, vc, pages=pages, cur_pos=cur_pos, window=window,
+                k_scale=k_scale, v_scale=v_scale)
+        new_cache = {"k": kc, "v": vc}
+        if k_scale is not None:
+            new_cache["k_scale"] = k_scale
+            new_cache["v_scale"] = v_scale
+    elif cache is not None and S == 1:
         # decode: write new K/V at each row's OWN cur_pos (continuous
         # batching runs slots at ragged positions), attend over the cache
         kc, vc = cache["k"], cache["v"]
@@ -192,7 +256,7 @@ def apply_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     return y, new_cache
 
 
-def _apply_mla(p, x, cfg, *, ctx, positions, cache, cur_pos):
+def _apply_mla(p, x, cfg, *, ctx, positions, cache, cur_pos, pages=None):
     m = cfg.mla
     B, S, d = x.shape
     H = cfg.num_heads
@@ -222,18 +286,40 @@ def _apply_mla(p, x, cfg, *, ctx, positions, cache, cur_pos):
         prefill_cache = None
 
     if cache is not None:
-        # decode: per-row ragged write (see the GQA decode path above)
-        b_idx = jnp.arange(B)
-        lc = cache["latent"].at[b_idx, cur_pos, :].set(
-            latent[:, 0].astype(cache["latent"].dtype))
-        rc = cache["k_rope"].at[b_idx, cur_pos, :].set(
-            k_rope[:, 0].astype(cache["k_rope"].dtype))
-        lc = shard(lc, ("batch", "decode_seq", None), mesh=mesh)
-        rc = shard(rc, ("batch", "decode_seq", None), mesh=mesh)
+        if pages is not None:
+            # paged decode: pool scatter through the page table
+            lc0, rc0 = cache["latent"], cache["k_rope"]
+            num_pages, ps_len = lc0.shape[0], lc0.shape[1]
+            page, off = _paged_write_ids(pages, cur_pos, ps_len,
+                                         num_pages)
+            lc = lc0.at[page, off, :].set(
+                latent[:, 0].astype(lc0.dtype), mode="drop")
+            rc = rc0.at[page, off, :].set(
+                k_rope[:, 0].astype(rc0.dtype), mode="drop")
+            lc = shard(lc, (None, None, None), mesh=mesh)
+            rc = shard(rc, (None, None, None), mesh=mesh)
+        else:
+            # decode: per-row ragged write (see the GQA decode path above)
+            b_idx = jnp.arange(B)
+            lc = cache["latent"].at[b_idx, cur_pos, :].set(
+                latent[:, 0].astype(cache["latent"].dtype))
+            rc = cache["k_rope"].at[b_idx, cur_pos, :].set(
+                k_rope[:, 0].astype(cache["k_rope"].dtype))
+            lc = shard(lc, ("batch", "decode_seq", None), mesh=mesh)
+            rc = shard(rc, ("batch", "decode_seq", None), mesh=mesh)
         # absorbed decode: q_abs = W_uk^T q_nope per head
         w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, dn)
         q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
-        if cfg.fused_decode_attn:
+        if pages is not None and cfg.fused_decode_attn:
+            from repro.kernels import ops as _kops
+            o_lat = _kops.fused_paged_mla_decode_attention(
+                q_abs, q_rope[:, 0], lc, rc, pages=pages,
+                cur_pos=cur_pos, head_dim_for_scale=dn + dr)
+        elif pages is not None:
+            o_lat = attn_lib.paged_mla_decode_attention(
+                q_abs, q_rope[:, 0], lc, rc, pages=pages,
+                cur_pos=cur_pos, head_dim_for_scale=dn + dr)
+        elif cfg.fused_decode_attn:
             from repro.kernels import ops as _kops
             o_lat = _kops.fused_mla_decode_attention(
                 q_abs, q_rope[:, 0], lc, rc, cur_pos=cur_pos,
@@ -431,7 +517,8 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
                 cur_pos: Optional[jax.Array] = None,
                 encoder_out: Optional[jax.Array] = None,
                 mrope_positions: Optional[jax.Array] = None,
-                causal: bool = True):
+                causal: bool = True,
+                pages: Optional[jax.Array] = None):
     """Returns (x_out, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     eps = cfg.norm_eps
@@ -464,7 +551,7 @@ def apply_block(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
         p["attn"], rms_norm(x, p["norm1"], eps), cfg, ctx=ctx,
         positions=positions, causal=causal and kind != "attn_bidir",
         window=window, cache=attn_cache, cur_pos=cur_pos,
-        mrope_positions=mrope_positions)
+        mrope_positions=mrope_positions, pages=pages)
     x = x + h
     if kind == "attn_cross":
         hx, _ = apply_attention(
@@ -562,7 +649,7 @@ def init_stack(rng, cfg: ModelConfig, dtype, kind_override=None
 def apply_stack(stack: Params, x: jax.Array, cfg: ModelConfig, *,
                 ctx=None, positions=None, caches=None, cur_pos=None,
                 encoder_out=None, mrope_positions=None, causal=True,
-                remat: str = "none", kind_override=None):
+                remat: str = "none", kind_override=None, pages=None):
     """Run all layers. caches: {"prefix": [...], "scan": stacked, ...} or None.
 
     Returns (x, new_caches, total_aux)."""
@@ -587,7 +674,7 @@ def apply_stack(stack: Params, x: jax.Array, cfg: ModelConfig, *,
                 plist[i], x, cfg, kind, ctx=ctx_at(base + i),
                 positions=positions, cache=c, cur_pos=cur_pos,
                 encoder_out=encoder_out, mrope_positions=mrope_positions,
-                causal=causal)
+                causal=causal, pages=pages)
             aux_tot = aux_tot + aux
             ncs.append(nc)
         return x, ncs, aux_tot
@@ -626,7 +713,7 @@ def apply_stack(stack: Params, x: jax.Array, cfg: ModelConfig, *,
             x, nc, aux = apply_block(
                 group_params[j], x, cfg, kind, ctx=ctx_j, positions=positions,
                 cache=c, cur_pos=cur_pos, encoder_out=encoder_out,
-                mrope_positions=mrope_positions, causal=causal)
+                mrope_positions=mrope_positions, causal=causal, pages=pages)
             aux_g = aux_g + aux
             ncs.append(nc)
         ys = tuple(ncs) if group_caches is not None else None

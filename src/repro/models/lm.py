@@ -140,7 +140,12 @@ def loss_fn(p: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
 # ---------------------------------------------------------------------------
 
 
-def _layer_cache(cfg: ModelConfig, kind: str, B: int, S: int, dtype):
+def _layer_cache(cfg: ModelConfig, kind: str, B: int, S: int, dtype,
+                 paging=None):
+    """``paging`` (core.paging.PagedLayout): attention leaves trade the
+    per-slot ``[B, ..., S, ...]`` seq axis for the shared
+    ``[num_pages, page_size, ...]`` pool; recurrent state leaves have no
+    seq axis and keep their slot-batch layout either way."""
     d = cfg.d_model
     if kind == "mamba":
         s = cfg.ssm
@@ -154,23 +159,57 @@ def _layer_cache(cfg: ModelConfig, kind: str, B: int, S: int, dtype):
                 "conv": jnp.zeros((B, g.conv1d_width - 1, W), dtype)}
     if cfg.mla is not None:
         m = cfg.mla
+        if paging is not None:
+            if paging.kv_int8:
+                raise ValueError(
+                    "kv_int8 paging covers the GQA K/V pools only — the "
+                    "MLA latent is already compressed")
+            return {"attn": {
+                "latent": jnp.zeros(
+                    (paging.num_pages, paging.page_size, m.kv_lora_rank),
+                    dtype),
+                "k_rope": jnp.zeros(
+                    (paging.num_pages, paging.page_size,
+                     m.qk_rope_head_dim), dtype)}}
         return {"attn": {
             "latent": jnp.zeros((B, S, m.kv_lora_rank), dtype),
             "k_rope": jnp.zeros((B, S, m.qk_rope_head_dim), dtype)}}
     hd = cfg.resolved_head_dim
+    if paging is not None:
+        shape = (paging.num_pages, cfg.num_kv_heads, paging.page_size, hd)
+        if paging.kv_int8:
+            return {"attn": {
+                "k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                "v_scale": jnp.zeros(shape[:3], jnp.float32)}}
+        return {"attn": {"k": jnp.zeros(shape, dtype),
+                         "v": jnp.zeros(shape, dtype)}}
     return {"attn": {
         "k": jnp.zeros((B, cfg.num_kv_heads, S, hd), dtype),
         "v": jnp.zeros((B, cfg.num_kv_heads, S, hd), dtype)}}
 
 
-def _cache_axes(cfg: ModelConfig, kind: str):
+def _cache_axes(cfg: ModelConfig, kind: str, paging=None):
     if kind == "mamba":
         return {"h": ("batch", "lru", None), "conv": ("batch", None, "lru")}
     if kind == "rglru":
         return {"h": ("batch", "lru"), "conv": ("batch", None, "lru")}
     if cfg.mla is not None:
+        if paging is not None:
+            # the pool axis is NOT the slot batch: pages from different
+            # slots interleave freely, so it must stay unsharded
+            return {"attn": {"latent": (None, None, None),
+                             "k_rope": (None, None, None)}}
         return {"attn": {"latent": ("batch", "decode_seq", None),
                          "k_rope": ("batch", "decode_seq", None)}}
+    if paging is not None:
+        ax = {"k": (None, "kv_heads", None, None),
+              "v": (None, "kv_heads", None, None)}
+        if paging.kv_int8:
+            ax["k_scale"] = (None, "kv_heads", None)
+            ax["v_scale"] = (None, "kv_heads", None)
+        return {"attn": ax}
     return {"attn": {"k": ("batch", "kv_heads", "decode_seq", None),
                      "v": ("batch", "kv_heads", "decode_seq", None)}}
 
@@ -180,24 +219,27 @@ def _fix_rglru_cache(c):
     return c
 
 
-def _empty_caches(cfg: ModelConfig, B: int, S: int, dtype):
+def _empty_caches(cfg: ModelConfig, B: int, S: int, dtype, paging=None):
     prefix, pattern, repeat, suffix = blocks.split_layers(cfg)
     out: Params = {}
     if prefix:
-        out["prefix"] = [_layer_cache(cfg, k, B, S, dtype) for k in prefix]
-    group = tuple(_layer_cache(cfg, k, B, S, dtype) for k in pattern)
+        out["prefix"] = [_layer_cache(cfg, k, B, S, dtype, paging)
+                         for k in prefix]
+    group = tuple(_layer_cache(cfg, k, B, S, dtype, paging) for k in pattern)
     out["scan"] = jax.tree.map(
         lambda t: jnp.broadcast_to(t[None], (repeat,) + t.shape), group)
     if suffix:
-        out["suffix"] = [_layer_cache(cfg, k, B, S, dtype) for k in suffix]
+        out["suffix"] = [_layer_cache(cfg, k, B, S, dtype, paging)
+                         for k in suffix]
     return out
 
 
-def init_cache(cfg: ModelConfig, B: int, S: int, dtype=jnp.float32) -> Params:
-    return _empty_caches(cfg, B, S, dtype)
+def init_cache(cfg: ModelConfig, B: int, S: int, dtype=jnp.float32,
+               paging=None) -> Params:
+    return _empty_caches(cfg, B, S, dtype, paging)
 
 
-def cache_axes(cfg: ModelConfig) -> Params:
+def cache_axes(cfg: ModelConfig, paging=None) -> Params:
     prefix, pattern, repeat, suffix = blocks.split_layers(cfg)
     out: Params = {}
     lift = lambda ax: jax.tree.map(
@@ -205,10 +247,10 @@ def cache_axes(cfg: ModelConfig) -> Params:
         is_leaf=lambda t: isinstance(t, tuple)
         and all(e is None or isinstance(e, str) for e in t))
     if prefix:
-        out["prefix"] = [_cache_axes(cfg, k) for k in prefix]
-    out["scan"] = tuple(lift(_cache_axes(cfg, k)) for k in pattern)
+        out["prefix"] = [_cache_axes(cfg, k, paging) for k in prefix]
+    out["scan"] = tuple(lift(_cache_axes(cfg, k, paging)) for k in pattern)
     if suffix:
-        out["suffix"] = [_cache_axes(cfg, k) for k in suffix]
+        out["suffix"] = [_cache_axes(cfg, k, paging) for k in suffix]
     return out
 
 
@@ -218,8 +260,11 @@ def cache_axes(cfg: ModelConfig) -> Params:
 
 
 def decode_step(p: Params, cfg: ModelConfig, cache: Params,
-                tokens: jax.Array, cur_pos: jax.Array, *, ctx=None):
-    """One-token decode. tokens [B]; cur_pos [B] (uniform). Returns
+                tokens: jax.Array, cur_pos: jax.Array, *, ctx=None,
+                pages: Optional[jax.Array] = None):
+    """One-token decode. tokens [B]; cur_pos [B] (uniform). ``pages``
+    [B, pages_per_slot] int32 routes cache reads/writes through the
+    block-paged pool (cache leaves must be paged-shape). Returns
     (logits [B, V], new_cache)."""
     mesh = ctx.mesh if ctx else None
     x = _embed(p, tokens[:, None], cfg, mesh)
@@ -230,6 +275,6 @@ def decode_step(p: Params, cfg: ModelConfig, cache: Params,
         mpos = jnp.broadcast_to(cur_pos[:, None, None], (B, 1, 3)).astype(jnp.int32)
     x, new_cache, _ = blocks.apply_stack(
         p["stack"], x, cfg, ctx=ctx, positions=positions, caches=cache,
-        cur_pos=cur_pos, mrope_positions=mpos)
+        cur_pos=cur_pos, mrope_positions=mpos, pages=pages)
     x = rms_norm(x, p["norm_f"], cfg.norm_eps)
     return _logits(p, x[:, 0], cfg, mesh), new_cache

@@ -1,0 +1,182 @@
+"""Paged KV cache + chunked prefill (ISSUE 8).
+
+The load-bearing claims: the block-paged cache is INVISIBLE — a request
+decoded through the shared page pool (any page order, recycled pages,
+chunked prefill, preemption/restart) produces exactly the tokens the
+fixed ``num_slots x max_len`` slot cache produces — and the page
+allocator never hands one slot another slot's pages.
+"""
+import numpy as np
+import pytest
+
+from repro.control import ControlConfig
+from repro.core import paging
+from repro.launch.serve import Request, ServeEngine
+
+
+def _mk(vocab, specs, seed=0):
+    """specs: list of (prompt_len, gen_len, arrival_step)."""
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, vocab, (p,)).astype(np.int32),
+                    max_new_tokens=g, arrival_step=a)
+            for i, (p, g, a) in enumerate(specs)]
+
+
+def _tokens(comps):
+    return {c.uid: list(c.tokens) for c in comps}
+
+
+def _run(arch, specs, **kw):
+    eng = ServeEngine(arch, seed=0, **kw)
+    comps = eng.run(_mk(eng.cfg.vocab_size, specs))
+    eng.close()
+    return eng, _tokens(comps)
+
+
+class TestPageAllocator:
+    def test_layout_math(self):
+        lay = paging.paged_layout(max_len=10, page_size=4, num_slots=3)
+        assert lay.pages_per_slot == 3
+        assert lay.num_pages == 9            # defaults to full capacity
+        assert lay.padded_len == 12
+        assert lay.pages_for(0) == 0
+        assert lay.pages_for(1) == 1
+        assert lay.pages_for(4) == 1
+        assert lay.pages_for(5) == 2
+
+    def test_grow_free_and_recycle(self):
+        lay = paging.paged_layout(max_len=8, page_size=4, num_slots=2)
+        al = paging.PageAllocator(lay, num_slots=2)
+        assert al.free_pages == 4
+        assert al.ensure(0, upto_pos=0)          # 1 page
+        assert al.ensure(0, upto_pos=5)          # grows to 2
+        assert al.used_pages(0) == 2 and al.free_pages == 2
+        assert al.ensure(0, upto_pos=3)          # no shrink, no-op
+        assert al.used_pages(0) == 2
+        t = al.table()
+        assert t.shape == (2, 2) and (t[1] == -1).all()
+        assert (t[0] >= 0).all()
+        owned = set(t[0].tolist())
+        al.free_slot(0)
+        assert al.free_pages == 4
+        assert (al.table() == -1).all()
+        # recycled pages are re-issued (free list, not a bump allocator)
+        assert al.ensure(1, upto_pos=7)
+        assert set(al.table()[1].tolist()) == owned
+
+    def test_exhaustion_is_all_or_nothing(self):
+        lay = paging.paged_layout(max_len=8, page_size=4, num_slots=2,
+                                  num_pages=3)
+        al = paging.PageAllocator(lay, num_slots=2)
+        assert al.ensure(0, upto_pos=7)          # slot 0 takes 2 of 3
+        assert al.ensure(1, upto_pos=3)          # slot 1 takes the last
+        before = al.table().copy()
+        assert not al.ensure(1, upto_pos=7)      # needs 1 more: refused...
+        np.testing.assert_array_equal(al.table(), before)  # ...atomically
+        assert not al.can_fit(5)
+        assert al.can_fit(0)
+
+    def test_over_capacity_request_raises(self):
+        lay = paging.paged_layout(max_len=8, page_size=4, num_slots=2)
+        al = paging.PageAllocator(lay, num_slots=2)
+        with pytest.raises(ValueError):
+            al.ensure(0, upto_pos=8)             # needs 3 > pages_per_slot
+
+
+class TestPagedServe:
+    def test_paged_and_chunked_token_exact_gqa(self):
+        """Paged (C=1) and paged+chunked (C=3, chunks CROSS the page_size=4
+        boundary) both reproduce the fixed-slot engine token-for-token
+        through slot recycling, with one trace of the jitted step."""
+        specs = [(5, 6, 0), (7, 4, 2), (4, 5, 6)]
+        kw = dict(num_slots=2, max_len=16)
+        _, ref = _run("yi-6b", specs, **kw)
+        _, got1 = _run("yi-6b", specs, page_size=4, **kw)
+        eng3, got3 = _run("yi-6b", specs, page_size=4, prefill_chunk=3, **kw)
+        assert got1 == ref
+        assert got3 == ref
+        tc = eng3.trace_counts()
+        assert tc["plan_compiles"] == 1
+        assert tc["base_step_traces"] in (1, -1)
+
+    def test_paged_token_exact_mla(self):
+        """The MLA (latent + rope row) cache family through the paged
+        pool, chunked prefill crossing a page boundary."""
+        specs = [(5, 4, 0), (6, 3, 2)]
+        kw = dict(num_slots=2, max_len=12)
+        _, ref = _run("deepseek-v2-lite-16b", specs, **kw)
+        _, got = _run("deepseek-v2-lite-16b", specs, page_size=4,
+                      prefill_chunk=3, **kw)
+        assert got == ref
+
+    def test_exhaustion_preempts_without_corrupting_neighbors(self):
+        """A pool too small for both requests at full length (5 pages for
+        2 slots x 4) forces a preemption mid-flight: the evicted request
+        restarts and STILL matches the fixed-slot engine, and the
+        surviving neighbor's pages are untouched (its tokens match too)."""
+        specs = [(5, 6, 0), (7, 4, 0)]
+        kw = dict(num_slots=2, max_len=16)
+        _, ref = _run("yi-6b", specs, **kw)
+        eng, got = _run("yi-6b", specs, page_size=4, num_pages=5, **kw)
+        assert eng.preemptions > 0
+        assert got == ref
+        assert eng.alloc.free_pages == 5         # everything returned
+
+    def test_exhaustion_with_no_victim_raises(self):
+        """A single request that outgrows a pool with nobody to preempt
+        must fail loudly, not scatter out-of-bounds."""
+        eng = ServeEngine("yi-6b", num_slots=1, max_len=16, seed=0,
+                          page_size=4, num_pages=2)
+        req = _mk(eng.cfg.vocab_size, [(6, 8, 0)])
+        with pytest.raises(RuntimeError, match="page pool exhausted"):
+            eng.run(req)
+        eng.close()
+
+    def test_max_new_zero_completes_with_empty_generation(self):
+        """max_new_tokens=0 completes on the final teacher-forced prefill
+        step with ``generated == []`` — the engine must not emit the
+        spurious post-prefill token (ISSUE 8 bugfix), on both cache
+        layouts."""
+        for kw in ({}, {"page_size": 4, "prefill_chunk": 2}):
+            eng, toks = _run("yi-6b", [(3, 0, 0), (4, 2, 0)],
+                             num_slots=2, max_len=8, **kw)
+            assert toks[0] == []
+            assert len(toks[1]) == 2
+
+    def test_semi_control_paged_token_exact(self):
+        """Under SEMI control with chi=4 contention, the paged engine
+        matches the fixed engine on the SAME stepping trajectory (equal
+        prefill_chunk — the tp=1 projection folds migration to lossy
+        resize, so plan trajectories must line up for exactness)."""
+        specs = [(5, 4, 0), (6, 3, 2)]
+        ctl = lambda: ControlConfig(mode="semi", hetero_kind="contention",
+                                    chi=4.0, contention_p=0.15,
+                                    sim_ranks=8, seed=3)
+        kw = dict(num_slots=2, max_len=12, prefill_chunk=2)
+        _, ref = _run("yi-6b", specs, control=ctl(), **kw)
+        _, got = _run("yi-6b", specs, control=ctl(), page_size=4, **kw)
+        assert got == ref
+
+    def test_kv_int8_runs_and_shrinks_pool(self):
+        """int8 K/V pool: same completion lengths (tokens may differ —
+        quantization is not bit-exact) at well under half the f32 pool
+        bytes, and the config validations reject unsupported combos."""
+        specs = [(5, 4, 0), (6, 3, 2)]
+        kw = dict(num_slots=2, max_len=12, page_size=4)
+        q = ServeEngine("yi-6b", seed=0, kv_int8=True, **kw)
+        comps = q.run(_mk(q.cfg.vocab_size, specs))
+        q.close()
+        assert sorted(len(c.tokens) for c in comps) == [3, 4]
+        f = ServeEngine("yi-6b", seed=0, **kw)
+        assert q.kv_cache_bytes() < f.kv_cache_bytes() / 2
+        f.close()
+        with pytest.raises(ValueError, match="kv_int8"):
+            ServeEngine("yi-6b", num_slots=2, max_len=12, kv_int8=True)
+        fused = ControlConfig(fused_attention=True)
+        with pytest.raises(ValueError, match="fused"):
+            ServeEngine("yi-6b", num_slots=2, max_len=12, page_size=8,
+                        kv_int8=True, control=fused)
+        with pytest.raises(ValueError, match="multiple of 8"):
+            ServeEngine("yi-6b", num_slots=2, max_len=12, page_size=4,
+                        control=fused)

@@ -1,0 +1,143 @@
+"""Serve-engine accounting bugfix pins (ISSUE 8).
+
+Three regressions, each with the failure mode it pins:
+
+* occupancy / ``attn_bound_s`` billed empty slots (pos=0 read as a
+  resident length-1 sequence) — now masked by the active set;
+* the TTFT eligibility clock was keyed by ``id(req)``, so CPython
+  address reuse could hand a new request a stale (earlier) clock — now
+  keyed by ``req.uid`` and dropped on completion;
+* ``DecodeOverheadModel.overhead_s`` subtracted the full psum-chunking
+  credit unconditionally, going NEGATIVE at tiny occupancy — now clamped
+  so modeled latency never drops below the IterationModel floor.
+"""
+import numpy as np
+import pytest
+
+from repro.control import ControlConfig
+from repro.core.hetero import DecodeOverheadModel
+from repro.launch.serve import Request, ServeEngine
+
+
+def _req(vocab, uid, p, g, arrival=0, seed=0):
+    rng = np.random.default_rng(seed + uid)
+    return Request(uid=uid,
+                   prompt=rng.integers(0, vocab, (p,)).astype(np.int32),
+                   max_new_tokens=g, arrival_step=arrival)
+
+
+class TestOccupancyMasking:
+    def test_attn_s_masks_empty_slots(self):
+        m = DecodeOverheadModel(kv_bytes_per_pos=1.0, score_bytes_per_pos=0.0,
+                                num_slots=4, max_len=64, tile=16,
+                                hbm_bw=1.0, comm_time=0.0)
+        pos = np.zeros(4, np.int32)              # engine vector: empty = 0
+        active = np.array([1.0, 0.0, 0.0, 0.0])
+        # one occupied slot reads ONE 16-row tile; the raw-pos bug billed
+        # all four (the pinned pre-fix value: 64.0)
+        assert m.attn_s(pos, fused=True, active=active) == 16.0
+        assert m.attn_s(pos, fused=True) == 64.0
+        # the unfused path physically reads every row either way
+        assert m.attn_s(pos, fused=False, active=active) \
+            == m.attn_s(pos, fused=False)
+
+    def test_engine_occupancy_excludes_idle_slots(self):
+        """4 slots, ONE short request: the occupancy report must track
+        only the occupied slot's positions, not credit the 3 idle slots
+        with a row each."""
+        ctl = ControlConfig(mode="zero", hetero_kind="contention", chi=4.0,
+                            contention_p=0.15, sim_ranks=8,
+                            model_decode_overheads=True, seed=0)
+        eng = ServeEngine("yi-6b", num_slots=4, max_len=16, seed=0,
+                          control=ctl)
+        eng.run([_req(eng.cfg.vocab_size, 0, 3, 3)])
+        eng.close()
+        denom = 4 * 16.0
+        # first step: the lone slot feeds position 0 -> exactly one row
+        assert eng.history[0]["occupancy"] == pytest.approx(1.0 / denom)
+        # occupancy grows with the slot's position, one row per step
+        occ = [h["occupancy"] for h in eng.history]
+        np.testing.assert_allclose(
+            occ, [(i + 1) / denom for i in range(len(occ))])
+        # attn_bound_s prices ONE slot's tile, not four
+        one_tile = min(eng.overhead.tile, 16) * eng.overhead.kv_bytes_per_pos
+        assert eng.history[0]["attn_bound_s"] == pytest.approx(
+            one_tile / eng.overhead.hbm_bw)
+
+
+class TestTTFTUidKeying:
+    def test_ttft_survives_id_reuse(self):
+        """Force CPython to hand a new Request the SAME address as a
+        completed one: its TTFT clock must start at ITS OWN eligibility
+        (keyed by uid), not inherit anything tied to the recycled id."""
+        eng = ServeEngine("yi-6b", num_slots=1, max_len=16, seed=0)
+        ra = _req(eng.cfg.vocab_size, 0, 4, 8)
+        addr = id(ra)
+        eng.submit(ra)
+        while any(s is not None for s in eng.slots) or eng.queue:
+            eng.step()
+        t1 = eng.clock                           # wall so far >> one step
+        assert t1 > 0
+        del ra                                   # free the address
+        rb = None
+        for uid in range(1, 4097):               # same-shape dataclass:
+            cand = _req(eng.cfg.vocab_size, uid, 4, 4)   # address recycles
+            if id(cand) == addr:
+                rb = cand
+                break
+        if rb is None:
+            pytest.skip("allocator never reused the address")
+        rb.arrival_step = eng.step_count
+        eng.submit(rb)
+        # the clock entry is keyed by uid and starts NOW, not at t=0
+        assert eng._eligible_clock[rb.uid] == pytest.approx(t1)
+        while any(s is not None for s in eng.slots) or eng.queue:
+            eng.step()
+        eng.close()
+        comp = [c for c in eng.completions if c.uid == rb.uid][0]
+        # a stale clock would fold the FIRST request's entire service
+        # time into rb's TTFT (>= t1); the real TTFT is its own prefill
+        assert 0 < comp.token_latencies[0] < t1
+        # entries are dropped on completion — no unbounded growth
+        assert eng._eligible_clock == {}
+
+
+class TestOverheadClamp:
+    def test_overhead_never_negative(self):
+        m = DecodeOverheadModel(kv_bytes_per_pos=1.0, score_bytes_per_pos=0.0,
+                                num_slots=4, max_len=64, tile=16,
+                                hbm_bw=1.0, comm_time=100.0)
+        pos = np.zeros(4, np.int32)
+        active = np.array([1.0, 0.0, 0.0, 0.0])
+        # attn_s = 16, chunking credit = 100 - 25 = 75: the un-clamped
+        # model returned 16 - 75 = -59, dragging modeled latency BELOW
+        # the IterationModel floor
+        assert m.overhead_s(pos, fused=True, psum_chunks=4,
+                            active=active) == 0.0
+        m2 = DecodeOverheadModel(kv_bytes_per_pos=1.0,
+                                 score_bytes_per_pos=0.0,
+                                 num_slots=4, max_len=64, tile=16,
+                                 hbm_bw=1.0, comm_time=16.0)
+        # credit = 16 - 16/k; at k=1 credit is 0 -> full attn_s survives
+        assert m2.overhead_s(pos, fused=True, psum_chunks=1,
+                             active=active) == 16.0
+        # exact boundary: attn_s == credit + exposed remainder
+        assert m2.overhead_s(pos, fused=True, psum_chunks=2,
+                             active=active) == pytest.approx(8.0)
+
+    def test_engine_latency_keeps_iteration_floor(self):
+        """With overhead modeling ON and aggressive psum chunking, every
+        step's modeled latency stays >= the plain IterationModel step
+        time (the pre-fix engine dipped below it at low occupancy because
+        the over-subtracted chunking credit went negative)."""
+        ctl = ControlConfig(mode="off", hetero_kind="contention", chi=4.0,
+                            contention_p=0.15, sim_ranks=8,
+                            model_decode_overheads=True,
+                            fused_attention=True, psum_chunks=64, seed=0)
+        eng = ServeEngine("yi-6b", num_slots=4, max_len=16, seed=0,
+                          control=ctl)
+        eng.run([_req(eng.cfg.vocab_size, 0, 3, 4)])
+        eng.close()
+        for h in eng.history:
+            assert h["overhead_s"] >= 0.0
+            assert h["latency_s"] >= h["dense_latency_s"] - 1e-12
