@@ -1,0 +1,221 @@
+"""Multi-replica cluster serving benchmark: routing policies under
+persistent per-replica skew, with mid-run drain + warm-spare promotion.
+
+Replays the committed ``examples/traces/replica_skew.jsonl`` fixture —
+3 replicas x 4 TP ranks, replica 1 carrying a PERSISTENT χ=4 rank,
+replica 2 periodic transient bursts, plus the bursty request-arrival
+trace shipped in the fixture header — through a
+:class:`repro.cluster.ReplicaManager` once per routing policy:
+
+* ``round_robin`` — load-blind rotation (the naive baseline);
+* ``least_queue`` — queue-depth greedy (χ-blind: it only avoids the slow
+  replica after requests have already piled up on it);
+* ``chi_aware``   — the headline policy: prices each request against
+  every replica's PLAN-ADJUSTED residual capacity
+  (``ControlPlane.capacity``), so the outer routing loop sees exactly
+  the residual slowdown the inner SEMI loop could not migrate away —
+  the paper's workload control nested at cluster scope.
+
+Every replica runs ``mode="semi"`` (nested control: the inner loop
+mitigates within the replica while the router steers across replicas),
+and every leg executes the SAME mid-run lifecycle event: the uncontended
+replica 0 is drained at the midpoint and a warm spare (replaying the
+same χ lanes) is promoted in its place — so the comparison includes the
+drain/promotion machinery and the zero-drop reassignment path.
+
+Emits stable-schema ``BENCH_cluster.json`` (trajectory point) and FAILS
+unless:
+
+* chi_aware beats round_robin on cluster p95 per-token latency AND mean
+  TTFT;
+* every leg completes EVERY request exactly once (zero dropped, zero
+  duplicated) through the drain + promotion;
+* every completion is token-exact against a single-replica UNCONTENDED
+  baseline (routing/reassignment must never change a token);
+* the chi_aware leg's recorded cluster trace splits back into R
+  per-replica replay schedules (one-JSONL cluster replay).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import OUT_DIR, csv_row, is_dry_run, save_bench_json
+from repro.cluster import ReplicaHandle, ReplicaManager, Router
+from repro.control import ControlConfig
+from repro.launch.serve import Request, ServeEngine
+from repro.telemetry import replica_schedules
+
+ARCH = "yi-6b"
+NUM_SLOTS = 4                   # wide enough that bursts decode together:
+# occupancy-dependent attention makes steps on the contended replica
+# visibly slower, which is exactly the residual the router must price
+MAX_LEN = 16                    # fixture lengths: prompt 3..8 + gen 3..8
+PREFILL_CHUNK = 2
+FIXTURE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "examples", "traces", "replica_skew.jsonl")
+POLICIES = ("round_robin", "least_queue", "chi_aware")
+
+
+def load_fixture_header() -> dict:
+    with open(FIXTURE) as f:
+        return json.loads(f.readline())
+
+
+def make_requests(arrivals, vocab: int, limit=None):
+    """Materialize the fixture's arrival trace as Requests (prompt token
+    CONTENT is generated sequentially, so a dry-run prefix sees the same
+    prompts as the full run)."""
+    rng = np.random.default_rng(np.random.SeedSequence((0xC1, 5)))
+    reqs = []
+    for uid, step, p, g in arrivals:
+        prompt = rng.integers(0, vocab, (p,)).astype(np.int32)
+        if limit is None or len(reqs) < limit:
+            reqs.append(Request(uid=int(uid), prompt=prompt,
+                                max_new_tokens=int(g),
+                                arrival_step=int(step)))
+    return reqs
+
+
+def replica_factory(lane: int, W: int):
+    """Engine factory for the replica replaying χ-lane block ``lane``
+    of the shared fixture, running the full inner SEMI loop."""
+    def build():
+        control = ControlConfig(
+            mode="semi", hetero_kind="trace", sim_ranks=W,
+            trace_in=FIXTURE, trace_rank_offset=lane * W)
+        return ServeEngine(ARCH, num_slots=NUM_SLOTS, max_len=MAX_LEN,
+                           control=control, prefill_chunk=PREFILL_CHUNK,
+                           trace_tag={"replica_lane": lane})
+    return build
+
+
+def run_baseline(reqs):
+    """Single UNCONTENDED replica: the token-exactness reference (and
+    the no-cluster latency floor)."""
+    eng = ServeEngine(ARCH, num_slots=NUM_SLOTS, max_len=MAX_LEN,
+                      control=ControlConfig(mode="off"),
+                      prefill_chunk=PREFILL_CHUNK)
+    comps = eng.run(reqs)
+    eng.close()
+    return {c.uid: c.tokens for c in comps}
+
+
+def run_policy(policy: str, reqs, R: int, W: int, drain_step: int,
+               record_trace=None):
+    handles = [ReplicaHandle(f"r{i}", replica_factory(i, W))
+               for i in range(R)]
+    # warm spare replays replica 0's (uncontended) lanes: promotion is
+    # capacity-neutral, so the legs compare ROUTING, not fleet size
+    handles.append(ReplicaHandle("spare", replica_factory(0, W),
+                                 spare=True))
+    mgr = ReplicaManager(handles, Router(policy),
+                         record_trace=record_trace)
+
+    def hook(m):
+        if m.cluster_step == drain_step:
+            m.drain("r0")                 # promotes the spare
+
+    comps = mgr.run(reqs, on_step=hook)
+    stats = mgr.stats()
+    stats["routes"] = sum(1 for e in mgr.events if e["kind"] == "route")
+    stats["events"] = [e["kind"] for e in mgr.events
+                       if e["kind"] != "route"]
+    tokens = {c.uid: c.tokens for c in comps}
+    mgr.close()
+    return tokens, stats
+
+
+def main() -> list:
+    dry = is_dry_run()
+    hdr = load_fixture_header()
+    R, W = int(hdr["replicas"]), int(hdr["ranks_per_replica"])
+    reqs = make_requests(hdr["arrivals"], 100,
+                         limit=8 if dry else None)
+    drain_step = max(4, max(r.arrival_step for r in reqs) // 2)
+
+    baseline = run_baseline(reqs)
+    want = set(baseline)
+    assert want == {r.uid for r in reqs}, "baseline dropped requests"
+
+    rows = []
+    results = {}
+    exact = {}
+    trace_out = os.path.join(OUT_DIR, "traces", "cluster_chi_aware.jsonl")
+    for policy in POLICIES:
+        tokens, stats = run_policy(
+            policy, reqs, R, W, drain_step,
+            record_trace=trace_out if policy == "chi_aware" else None)
+        results[policy] = stats
+        exact[policy] = (set(tokens) == want and all(
+            np.array_equal(tokens[uid], baseline[uid]) for uid in want))
+        rows.append(csv_row(
+            f"cluster_{policy}", stats["p95_ms"] * 1e3,
+            f"p95={stats['p95_ms']:.3f}ms,ttft={stats['ttft_mean_ms']:.3f}"
+            f"ms,tok_s={stats['tok_per_s']:.1f},"
+            f"reassigned={stats['reassigned']},"
+            f"dupes={stats['duplicates']},exact={exact[policy]}"))
+
+    rr, cq = results["round_robin"], results["chi_aware"]
+    p95_speedup = rr["p95_ms"] / max(cq["p95_ms"], 1e-12)
+    ttft_speedup = rr["ttft_mean_ms"] / max(cq["ttft_mean_ms"], 1e-12)
+    rows.append(csv_row(
+        "cluster_speedup", 0.0,
+        f"p95_speedup={p95_speedup:.2f}x,ttft_speedup={ttft_speedup:.2f}x,"
+        f"vs=round_robin,replicas={R}x{W}"))
+
+    n_sched = len(replica_schedules(trace_out))
+
+    config = {"arch": ARCH, "replicas": R, "ranks_per_replica": W,
+              "num_slots": NUM_SLOTS, "max_len": MAX_LEN,
+              "prefill_chunk": PREFILL_CHUNK,
+              "n_requests": len(reqs), "drain_step": drain_step,
+              "fixture": os.path.basename(FIXTURE), "dry_run": dry}
+    metrics = {policy: results[policy] for policy in POLICIES}
+    metrics.update({
+        "token_exact": {p: bool(exact[p]) for p in POLICIES},
+        "p95_speedup": p95_speedup, "ttft_speedup": ttft_speedup,
+        "replayable_schedules": n_sched})
+    save_bench_json("cluster", config, metrics, trajectory=True)
+
+    # regression gates — the cluster acceptance criteria
+    for policy in POLICIES:
+        s = results[policy]
+        if s["requests"] != len(reqs) or s["duplicates"]:
+            raise RuntimeError(
+                f"cluster bench regression: {policy} completed "
+                f"{s['requests']}/{len(reqs)} requests with "
+                f"{s['duplicates']} duplicates through drain+promotion "
+                "(zero-drop invariant broken)")
+        if not exact[policy]:
+            raise RuntimeError(
+                f"cluster bench regression: {policy} completions diverged "
+                "from the single-replica uncontended baseline — routing/"
+                "reassignment must never change a token")
+        if "drain" not in s["events"] or "promote" not in s["events"]:
+            raise RuntimeError(
+                f"cluster bench regression: {policy} leg skipped the "
+                f"mid-run drain/promotion (events: {s['events']})")
+    if cq["p95_ms"] >= rr["p95_ms"]:
+        raise RuntimeError(
+            f"cluster bench regression: chi_aware p95 {cq['p95_ms']:.3f}ms "
+            f"did not beat round_robin p95 {rr['p95_ms']:.3f}ms under "
+            "persistent replica skew")
+    if cq["ttft_mean_ms"] >= rr["ttft_mean_ms"]:
+        raise RuntimeError(
+            f"cluster bench regression: chi_aware mean TTFT "
+            f"{cq['ttft_mean_ms']:.3f}ms did not beat round_robin "
+            f"{rr['ttft_mean_ms']:.3f}ms under persistent replica skew")
+    if n_sched != R + 1:                  # R actives + the spare
+        raise RuntimeError(
+            f"cluster bench regression: recorded cluster trace split into "
+            f"{n_sched} replica schedules, expected {R + 1}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

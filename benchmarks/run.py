@@ -29,6 +29,7 @@ JOBS = [
     ("fig10", "benchmarks.single_straggler", True, False),
     ("fig11", "benchmarks.multi_straggler", False, True),
     ("serve", "benchmarks.serve_bench", False, True),
+    ("cluster", "benchmarks.cluster_bench", False, True),
     ("xla_flags", "benchmarks.xla_flags_sweep", False, True),
     ("telemetry", "benchmarks.telemetry_bench", False, True),
     ("ablate", "benchmarks.ablations", True, False),
@@ -40,6 +41,7 @@ SUITES = {
     "kernels": {"kernel", "xla_flags"},
     "migration": {"fig11", "tab1"},
     "serve": {"serve"},
+    "cluster": {"cluster"},
     "telemetry": {"telemetry"},
     "smoke": {key for key, _, _, smoke in JOBS if smoke},
 }
@@ -49,10 +51,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig56,fig9,tab1,fig10,fig11,"
-                         "kernel,roofline,serve,telemetry")
+                         "kernel,roofline,serve,cluster,telemetry")
     ap.add_argument("--suite", default=None, choices=sorted(SUITES),
                     help="named subset (CI): kernels | migration | serve "
-                         "| telemetry | smoke")
+                         "| cluster | telemetry | smoke")
     ap.add_argument("--fast", action="store_true",
                     help="skip the slow real-training ACC benchmarks")
     ap.add_argument("--dry-run", action="store_true",

@@ -165,9 +165,9 @@ def run_decode_path_engine(leg: str, *, num_slots: int, max_len: int,
 
 def _ttft_ms(comps) -> float:
     """Mean time-to-first-token (first per-request token latency, which
-    includes queue wait + prefill) in ms."""
-    return float(np.mean([c.token_latencies[0] for c in comps
-                          if c.token_latencies])) * 1e3
+    includes queue wait + prefill) in ms — the shared stats field, so an
+    empty completion list reads 0.0 rather than a nan mean."""
+    return latency_percentiles(comps)["ttft_mean_ms"]
 
 
 def run_mixed_lengths_leg(*, num_slots: int, max_len: int, n_requests: int,

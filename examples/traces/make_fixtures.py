@@ -16,6 +16,12 @@ noise:
   Bursts PERSIST across steps — unlike iid per-step contention — so a
   closed measurement loop can lock on within its regime-change window
   (the e2e telemetry tests replay this one).
+* ``replica_skew.jsonl``      — a 12-lane CLUSTER trace (3 replicas x 4
+  TP ranks, header-tagged for :func:`repro.telemetry.replica_schedules`):
+  replica 1 carries a persistent χ=4 rank, replica 2 periodic transient
+  bursts; the header also ships a bursty request-arrival trace
+  (``arrivals``) so benchmarks/cluster_bench.py and the cluster e2e test
+  replay one identical workload.
 
 Every recorded contention episode is a deterministic regression
 scenario: replay with  ``--hetero trace --trace-in <fixture>``.
@@ -38,12 +44,13 @@ NOISE = 0.03
 def record(name: str, chi_rows: np.ndarray, meta: dict, seed: int) -> str:
     rng = np.random.default_rng(np.random.SeedSequence((0xF1C, seed)))
     path = os.path.join(HERE, f"{name}.jsonl")
-    with TraceWriter(path, RANKS, matmul_time=M, other_time=C,
+    ranks = chi_rows.shape[1]
+    with TraceWriter(path, ranks, matmul_time=M, other_time=C,
                      meta={"fixture": name, **meta}) as w:
         for step, chi in enumerate(chi_rows):
-            t = (M * chi + C) * (1.0 + rng.uniform(-NOISE, NOISE, RANKS))
+            t = (M * chi + C) * (1.0 + rng.uniform(-NOISE, NOISE, ranks))
             w.append(StepSample(step=step, rank_times=t,
-                                work_frac=np.ones(RANKS)))
+                                work_frac=np.ones(ranks)))
     return path
 
 
@@ -71,14 +78,60 @@ def bursty_contention(steps: int = 200, every: int = 25,
     return chi
 
 
+# -- cluster fixture (repro.cluster) -----------------------------------------
+
+CLUSTER_R, CLUSTER_W = 3, 4          # replicas x TP ranks per replica
+
+
+def replica_skew(steps: int = 160) -> np.ndarray:
+    """R·W-lane cluster trace: replica 1 is PERSISTENTLY contended —
+    TWO of its four ranks at χ=4 for the whole run (a bad host), so its
+    inner SEMI loop (2 stragglers, only 2 helpers) can only partially
+    absorb the imbalance and a large residual slowdown leaks into the
+    replica's plan-adjusted capacity. Replica 2 catches periodic
+    transient bursts (χ=2, 10 of every 40 steps). The scenario where
+    load-blind routing keeps feeding the slow replica while chi_aware
+    steers around the residual its inner loop cannot hide."""
+    chi = np.ones((steps, CLUSTER_R * CLUSTER_W))
+    chi[:, 1 * CLUSTER_W + 0] = 4.0                   # replica 1, lane 0
+    chi[:, 1 * CLUSTER_W + 1] = 4.0                   # replica 1, lane 1
+    for start in range(20, steps, 40):                # replica 2 bursts
+        chi[start:start + 10, 2 * CLUSTER_W + 1] = 2.0
+    return chi
+
+
+def replica_skew_arrivals(n: int = 24, seed: int = 7) -> list:
+    """Bursty request-arrival trace for the cluster bench/e2e test:
+    ``[[uid, arrival_step, prompt_len, gen_len], ...]`` — bursts of 3-5
+    requests every ~12 cluster steps, prompts 3..8, gens 3..8. Shipped in
+    the fixture header so the bench and the e2e test replay the SAME
+    workload from one file."""
+    rng = np.random.default_rng(np.random.SeedSequence((0xF1C, seed)))
+    arrivals, uid, step = [], 0, 0
+    while uid < n:
+        for _ in range(int(rng.integers(3, 6))):      # one burst
+            if uid >= n:
+                break
+            arrivals.append([uid, step + int(rng.integers(0, 3)),
+                             int(rng.integers(3, 9)),
+                             int(rng.integers(3, 9))])
+            uid += 1
+        step += int(rng.integers(8, 16))
+    return arrivals
+
+
 def main():
     for seed, (name, rows, meta) in enumerate((
             ("static_skew", static_skew(), {"chis": [4.0, 2.0]}),
             ("round_robin", round_robin(), {"chi": 4.0, "period": 30}),
             ("bursty_contention", bursty_contention(),
-             {"chi": 4.0, "burst_every": 25, "burst_len": 12}))):
+             {"chi": 4.0, "burst_every": 25, "burst_len": 12}),
+            ("replica_skew", replica_skew(),
+             {"chi": 4.0, "replicas": CLUSTER_R,
+              "ranks_per_replica": CLUSTER_W,
+              "arrivals": replica_skew_arrivals()}))):
         path = record(name, rows, meta, seed)
-        print(f"wrote {path}: {len(rows)} steps x {RANKS} ranks")
+        print(f"wrote {path}: {len(rows)} steps x {rows.shape[1]} ranks")
 
 
 if __name__ == "__main__":

@@ -248,3 +248,39 @@ def load_params(directory: str, step: int, like: Any,
     full = manifest.get("extra", {}).get("layout") == TRAIN_STATE_LAYOUT
     return restore(directory, step, like, shardings,
                    prefix="params" if full else None)
+
+
+def load_latest_params(directory: str, like: Any, shardings: Any = None,
+                       retries: int = 2):
+    """Warm-spare promotion path: ``(step, params)`` of the newest
+    COMMITTED checkpoint, tolerant of a writer racing the read.
+
+    A trainer overwriting a step retracts its manifest before rewriting
+    the npz (see :func:`save`), so a reader that scanned just before the
+    retraction can pick a step whose manifest vanishes by the time it
+    opens it. Readers of a *different* process (a cluster manager
+    promoting a spare while the trainer checkpoints) must not crash on
+    that benign race: re-scan and fall back to the previous committed
+    step. Returns ``(None, None)`` when the directory holds no committed
+    checkpoint at all.
+    """
+    skip: set = set()
+    for _ in range(max(1, retries + 1)):
+        steps = [] if not os.path.isdir(directory) else sorted(
+            (int(f[5:13]) for f in os.listdir(directory)
+             if f.startswith("ckpt_") and f.endswith(".npz")
+             and int(f[5:13]) not in skip
+             and os.path.exists(_manifest_path(directory, int(f[5:13])))),
+            reverse=True)
+        if not steps:
+            return None, None
+        step = steps[0]
+        try:
+            return step, load_params(directory, step, like, shardings)
+        except FileNotFoundError:
+            # manifest retracted between the scan and the read — the
+            # writer is mid-overwrite of this step; try the next-newest
+            skip.add(step)
+    raise RuntimeError(
+        f"checkpoint directory {directory} kept changing under the "
+        f"reader ({retries + 1} attempts) — is a writer looping?")

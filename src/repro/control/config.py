@@ -67,6 +67,10 @@ class ControlConfig:
     # replay (hetero_kind="trace") and replayable trace capture
     times: str = "modeled"             # modeled | measured
     trace_in: Optional[str] = None
+    # replay a SLICE of a wider recorded trace: χ lanes [offset,
+    # offset + sim_ranks). How one cluster trace feeds R replicas —
+    # replica i runs offset = i * ranks_per_replica (repro.cluster).
+    trace_rank_offset: int = 0
     trace_out: Optional[str] = None
     measure_noise: float = 0.0
     measure_interval: int = 1

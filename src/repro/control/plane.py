@@ -56,17 +56,20 @@ from repro.telemetry import (EstimatorConfig, RankTimer, StragglerEstimator,
 
 def make_schedule(kind: str, num_ranks: int, *, chi: float = 2.0,
                   period: int = 10, contention_p: float = 0.15,
-                  seed: int = 0, trace_in: Optional[str] = None):
+                  seed: int = 0, trace_in: Optional[str] = None,
+                  trace_rank_offset: int = 0):
     """χ-schedule factory shared by the drivers (``None`` = homogeneous).
 
-    ``kind="trace"`` replays a recorded telemetry trace (``trace_in``);
-    the other kinds are the paper's Sec. V-A simulation regimes.
+    ``kind="trace"`` replays a recorded telemetry trace (``trace_in``;
+    ``trace_rank_offset`` selects a lane slice of a wider cluster
+    trace); the other kinds are the paper's Sec. V-A simulation regimes.
     """
     if kind == "trace":
         if not trace_in:
             raise ValueError("hetero kind 'trace' needs trace_in "
                              "(a telemetry trace to replay)")
-        return schedule_from_trace(trace_in, num_ranks=num_ranks)
+        return schedule_from_trace(trace_in, num_ranks=num_ranks,
+                                   rank_offset=trace_rank_offset)
     if kind == "none":
         return None
     return hetero_lib.HeteroSchedule(
@@ -74,6 +77,31 @@ def make_schedule(kind: str, num_ranks: int, *, chi: float = 2.0,
         chis=(chi,) if kind in ("static", "round_robin") else (),
         period=period, contention_p=contention_p, contention_chi=chi,
         seed=seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCapacity:
+    """Plan-adjusted capacity snapshot the cluster router consumes.
+
+    ``step_time_s`` is the modeled bulk-synchronous step time at this
+    step's χ feed under the ACTIVE plan's retained-work fractions — the
+    inner SEMI loop's mitigation is already priced in, so the outer
+    (routing) loop sees what the replica can actually sustain, not its
+    raw heterogeneity. ``dense_step_time_s`` is the homogeneous (χ=1,
+    neutral-plan) floor for normalization.
+    """
+
+    step: int
+    chi: np.ndarray
+    work_frac: np.ndarray
+    step_time_s: float
+    dense_step_time_s: float
+
+    @property
+    def effective_speed(self) -> float:
+        """Fraction of homogeneous throughput this replica sustains
+        under its active plan (1.0 = uncontended-equivalent)."""
+        return self.dense_step_time_s / max(self.step_time_s, 1e-12)
 
 
 class ControlPlane:
@@ -106,6 +134,7 @@ class ControlPlane:
                  hetero_kind: str = "none", chi: float = 2.0,
                  period: int = 10, contention_p: float = 0.15,
                  seed: int = 0, trace_in: Optional[str] = None,
+                 trace_rank_offset: int = 0,
                  trace_out: Optional[str] = None,
                  trace_meta: Optional[Dict[str, Any]] = None,
                  measure_noise: float = 0.0,
@@ -194,7 +223,8 @@ class ControlPlane:
         # -- χ schedule + telemetry ----------------------------------------
         self.schedule = make_schedule(
             hetero_kind, self.sim_ranks, chi=chi, period=period,
-            contention_p=contention_p, seed=seed, trace_in=trace_in)
+            contention_p=contention_p, seed=seed, trace_in=trace_in,
+            trace_rank_offset=trace_rank_offset)
         measured = self.controller is not None and wc.times == "measured"
         self.estimator = (StragglerEstimator(
             it_model, self.sim_ranks, EstimatorConfig.from_control(wc))
@@ -207,6 +237,9 @@ class ControlPlane:
             other_time=it_model.other_time, meta=trace_meta or {})
             if trace_out else None)
         self.measure_rng = measurement_rng(seed)
+        # retained-work fractions of the last DISPATCHED plan (None until
+        # the first controlled step) — what `capacity` prices against
+        self._active_frac: Optional[np.ndarray] = None
 
     # -- per-iteration loop ---------------------------------------------------
     def chis(self, step: int) -> np.ndarray:
@@ -290,8 +323,35 @@ class ControlPlane:
         return step_fn, arrays, proj
 
     def work_frac(self, plan: WorkloadPlan) -> np.ndarray:
-        """Retained-work fraction per simulated rank implied by a plan."""
-        return work_fraction(plan, self.sim_nb)
+        """Retained-work fraction per simulated rank implied by a plan.
+
+        Also records the vector as the ACTIVE plan for :meth:`capacity`
+        (the drivers call this once per dispatched plan)."""
+        f = work_fraction(plan, self.sim_nb)
+        self._active_frac = np.asarray(f, np.float64)
+        return f
+
+    # -- cluster-router feed --------------------------------------------------
+    def chi_feed(self, step: int) -> np.ndarray:
+        """Per-rank χ the cluster router consumes: the estimator's χ̂
+        once the measured loop is locked, else the schedule's oracle for
+        this step (ones when homogeneous)."""
+        if self.estimator is not None and self.estimator.ready:
+            return np.asarray(self.estimator.chi_hat, np.float64)
+        return np.asarray(self.chis(step), np.float64)
+
+    def capacity(self, step: int) -> PlanCapacity:
+        """Plan-adjusted capacity at this step's χ feed (see
+        :class:`PlanCapacity`). Pure — never runs the controller, so the
+        router can poll it without perturbing the control trajectory."""
+        chi = self.chi_feed(step)
+        frac = (self._active_frac if self._active_frac is not None
+                else np.ones(self.sim_ranks))
+        ones = np.ones_like(chi)
+        return PlanCapacity(
+            step=step, chi=chi, work_frac=frac,
+            step_time_s=self.it_model.step_time(chi, frac),
+            dense_step_time_s=self.it_model.step_time(ones, ones))
 
     def capture(self, chis, work_frac, *, step: int, plan, wall: float):
         """Simulated-measurement capture: feed the estimator + the trace.

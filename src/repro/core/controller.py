@@ -314,7 +314,12 @@ class SemiController:
 
         def _quantized_shed(want: float, nb: Optional[int] = None) -> int:
             nb = self.num_blocks if nb is None else nb
-            m_q = quantize_shed(int(round(want)), nb, cfg.gamma_buckets)
+            # ceil BEFORE the grid round-up: `round()` here let a
+            # fractional request (e.g. 8.42 blocks) quantize DOWN onto
+            # the grid, leaving a residual resize bucket on a source the
+            # lossless β-policy promises is output-preserving
+            m_q = quantize_shed(int(np.ceil(want - 1e-9)), nb,
+                                cfg.gamma_buckets)
             if self.shed_cap:
                 m_q = min(m_q, self.shed_cap)
             if self.geometry:

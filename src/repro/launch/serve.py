@@ -109,6 +109,35 @@ class Completion:
     # first entry includes queue wait + prefill (time-to-first-token)
 
 
+@dataclasses.dataclass(frozen=True)
+class LoadSnapshot:
+    """What the cluster router sees of one engine (repro.cluster).
+
+    ``chi`` is the per-rank χ feed — the estimator's χ̂ once the measured
+    loop is locked, else the schedule's current oracle (ones when
+    homogeneous). ``step_time_s`` prices one engine step under the
+    ACTIVE control plan (``ControlPlane.capacity``), so a straggling
+    replica whose SEMI loop already migrated its imbalance reads as
+    (nearly) full capacity — the two nested control loops share one
+    telemetry vocabulary. ``backlog_steps`` counts the token-steps
+    still owed: active slots' remaining prefill chunks + decode tokens,
+    plus every queued request's full cost.
+    """
+
+    step: int
+    clock: float
+    queue_depth: int
+    active: int
+    free_slots: int
+    free_pages: Optional[int]          # None = fixed (non-paged) cache
+    num_slots: int
+    chi: np.ndarray
+    work_frac: np.ndarray
+    step_time_s: float
+    dense_step_time_s: float
+    backlog_steps: int
+
+
 @dataclasses.dataclass
 class _Slot:
     req: Request
@@ -159,7 +188,8 @@ class ServeEngine:
                  max_queue: Optional[int] = None,
                  page_size: int = 0, prefill_chunk: int = 1,
                  kv_int8: bool = False,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 trace_tag: Optional[Dict] = None):
         """``page_size`` > 0 switches the KV cache to the block-paged
         pool layout (core/paging.py): attention cache leaves live in a
         shared ``[num_pages, page_size, ...]`` pool (``num_pages``
@@ -343,9 +373,13 @@ class ServeEngine:
             controller_blocks="local", clamp_sheds=True,
             hetero_kind=c.hetero_kind, chi=c.chi, period=c.period,
             contention_p=c.contention_p, seed=c.seed,
-            trace_in=c.trace_in, trace_out=c.trace_out,
+            trace_in=c.trace_in, trace_rank_offset=c.trace_rank_offset,
+            trace_out=c.trace_out,
+            # trace_tag: per-replica tagging (repro.cluster) so traces
+            # from one cluster run identify their lane in the shared set
             trace_meta={"arch": arch, "engine": "serve", "mode": c.mode,
-                        "hetero": c.hetero_kind, "seed": c.seed},
+                        "hetero": c.hetero_kind, "seed": c.seed,
+                        **(trace_tag or {})},
             measure_noise=c.measure_noise)
         self._base_step, self._base_plan_slots, in_sh = self.plane.base
         self.schedule = self.plane.schedule
@@ -357,9 +391,11 @@ class ServeEngine:
         params, _ = self.api.init(jax.random.PRNGKey(seed), cfg_canonical,
                                   dtype)
         if ckpt_dir:
-            last = ckpt_store.latest_step(ckpt_dir)
-            if last is not None:
-                params = ckpt_store.load_params(ckpt_dir, last, params)
+            # race-tolerant latest-committed load: a warm spare may be
+            # promoted while a trainer is mid-save in the same directory
+            _, loaded = ckpt_store.load_latest_params(ckpt_dir, params)
+            if loaded is not None:
+                params = loaded
         if self.geometry is not None:
             params = geom_lib.expand_ffn_params(params, self.geometry)
         self.params = jax.device_put(params, in_sh[0])
@@ -405,6 +441,33 @@ class ServeEngine:
         if req.arrival_step <= self.step_count:
             self._eligible_clock.setdefault(req.uid, self.clock)
         return True
+
+    def try_submit(self, req: Request) -> bool:
+        """Non-blocking admission: ``False`` means NOTHING was enqueued.
+
+        The cluster router needs a clean can't-take-it signal instead of
+        an exception — or, worse, a request silently parked behind a
+        bound it can never clear. ``False`` when:
+
+        * the bounded queue is already at ``max_queue``;
+        * the request can never be served by this engine: prompt +
+          ``max_new_tokens`` past ``max_len``, or a paged pool too small
+          to EVER hold the request even running alone (without this
+          check the admit loop deadlocks on the queue head and the whole
+          run times out, or the pool raises mid-decode).
+
+        :meth:`submit` keeps its raising contract for the standalone
+        driver, where a never-fits request is a caller bug.
+        """
+        need = len(req.prompt) + req.max_new_tokens
+        if len(req.prompt) == 0 or need > self.max_len:
+            return False
+        if self.paging is not None \
+                and self.paging.pages_for(need) > self.paging.num_pages:
+            return False
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            return False
+        return self.submit(req)
 
     def _admit(self):
         """Returns (admitted uids, slot-clear mask for this step's reset).
@@ -668,6 +731,95 @@ class ServeEngine:
         self.history.append(report)
         return report
 
+    # -- cluster-driver API (repro.cluster) ----------------------------------
+    @property
+    def idle(self) -> bool:
+        """No active slots and nothing queued (e.g. a drained replica)."""
+        return not self.queue and all(s is None for s in self.slots)
+
+    def tick(self) -> Dict:
+        """One cluster-driver step: a full jitted step when any slot is
+        occupied or a queued request is admissible, otherwise an IDLE
+        tick — the step counter still advances (χ-schedule lanes stay
+        aligned with the cluster step across replicas) but the modeled
+        clock does not (an idle engine isn't burning time any request
+        can observe) and no device work runs. Lets one host loop
+        interleave R engines deterministically without paying a jitted
+        step per idle replica."""
+        admissible = bool(
+            self.free and self.queue
+            and self.queue[0].arrival_step <= self.step_count
+            and (self.alloc is None
+                 or self.alloc.can_fit(len(self.queue[0].prompt))))
+        if admissible or any(s is not None for s in self.slots):
+            return self.step()
+        # a queued request blocked from admission still waits: mark its
+        # TTFT eligibility so the wait is charged when it lands
+        for req in self.queue:
+            if req.arrival_step <= self.step_count:
+                self._eligible_clock.setdefault(req.uid, self.clock)
+        self.step_count += 1
+        report = {"step": self.step_count, "idle": True, "latency_s": 0.0,
+                  "dense_latency_s": 0.0, "wall_s": 0.0, "active": 0,
+                  "admitted": [], "completed": [],
+                  "queued": len(self.queue)}
+        self.history.append(report)
+        return report
+
+    def request_cost_steps(self, prompt_len: int,
+                           max_new_tokens: int) -> int:
+        """Engine steps a request will occupy a slot for: its prefill
+        chunks plus one step per generated token — the cost the
+        chi_aware router prices against a replica's capacity."""
+        return -(-int(prompt_len) // self.prefill_chunk) \
+            + int(max_new_tokens)
+
+    def load_snapshot(self) -> LoadSnapshot:
+        """Queue/slot/pool load + plan-adjusted capacity, for routing."""
+        backlog = 0
+        for s in self.slots:
+            if s is None:
+                continue
+            P = len(s.req.prompt)
+            backlog += -(-(P - min(s.pos, P)) // self.prefill_chunk) \
+                + (s.req.max_new_tokens - len(s.generated))
+        for req in self.queue:
+            backlog += self.request_cost_steps(len(req.prompt),
+                                               req.max_new_tokens)
+        cap = self.plane.capacity(self.step_count)
+        return LoadSnapshot(
+            step=self.step_count, clock=self.clock,
+            queue_depth=len(self.queue),
+            active=sum(s is not None for s in self.slots),
+            free_slots=len(self.free),
+            free_pages=(self.alloc.free_pages if self.alloc is not None
+                        else None),
+            num_slots=self.num_slots,
+            chi=cap.chi, work_frac=cap.work_frac,
+            step_time_s=cap.step_time_s,
+            dense_step_time_s=cap.dense_step_time_s,
+            backlog_steps=backlog)
+
+    def evict_queue(self) -> List[Request]:
+        """Pop every queued (not yet admitted) request — the cluster
+        manager reassigns them when a replica drains or fails. Their
+        TTFT eligibility clocks go with them; the receiving replica
+        restarts the wait clock in its own timeline."""
+        out = list(self.queue)
+        self.queue.clear()
+        for req in out:
+            self._eligible_clock.pop(req.uid, None)
+        return out
+
+    def active_requests(self) -> List[Request]:
+        """Requests currently holding a slot, in admission order — what
+        a failed replica's manager must re-route (greedy decode is
+        deterministic, so a from-scratch re-run is token-identical)."""
+        order = sorted((i for i, s in enumerate(self.slots)
+                        if s is not None),
+                       key=lambda i: (self.slots[i].admitted_step, i))
+        return [self.slots[i].req for i in order]
+
     # -- drivers -------------------------------------------------------------
     def run(self, requests: List[Request],
             max_steps: Optional[int] = None) -> List[Completion]:
@@ -710,26 +862,42 @@ class ServeEngine:
         return out
 
 
+#: The well-defined zero-traffic stats record: what a drained or
+#: never-routed replica reports. Every key the non-empty record carries,
+#: all-zero — so aggregation code can sum/compare without key checks.
+EMPTY_LATENCY_STATS = {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0,
+                       "mean_ms": 0.0, "ttft_mean_ms": 0.0, "tokens": 0,
+                       "requests": 0, "tok_per_s": 0.0}
+
+
 def latency_percentiles(completions: List[Completion],
                         total_time_s: Optional[float] = None
                         ) -> Dict[str, float]:
-    """p50/p95/p99 per-token latency (ms) + tokens/s over a run.
+    """p50/p95/p99 per-token latency (ms), mean TTFT + tokens/s.
 
     Pass the engine's elapsed clock as ``total_time_s`` for true ENGINE
     throughput: concurrently-decoding slots each bill the full step
     latency to their own token, so summing per-token latencies would
     understate throughput by ~the number of active slots. Without it the
-    sum-based figure (per-slot serial throughput) is returned."""
+    sum-based figure (per-slot serial throughput) is returned.
+
+    A run with no emitted tokens — a drained or zero-traffic replica, or
+    completions that are all ``max_new_tokens=0`` — returns a copy of
+    :data:`EMPTY_LATENCY_STATS` instead of crashing percentile math on
+    an empty vector (pinned by tests/test_serve_engine.py)."""
     lats = np.asarray([l for c in completions for l in c.token_latencies])
     if lats.size == 0:
-        return {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0,
-                "mean_ms": 0.0, "tokens": 0, "tok_per_s": 0.0}
+        return dict(EMPTY_LATENCY_STATS)
+    # TTFT = each request's FIRST token latency (queue wait + prefill)
+    ttft = [c.token_latencies[0] for c in completions if c.token_latencies]
     span = total_time_s if total_time_s is not None else float(lats.sum())
     return {"p50_ms": float(np.percentile(lats, 50) * 1e3),
             "p95_ms": float(np.percentile(lats, 95) * 1e3),
             "p99_ms": float(np.percentile(lats, 99) * 1e3),
             "mean_ms": float(lats.mean() * 1e3),
+            "ttft_mean_ms": float(np.mean(ttft) * 1e3),
             "tokens": int(lats.size),
+            "requests": len(completions),
             "tok_per_s": float(lats.size / max(span, 1e-12))}
 
 

@@ -24,11 +24,12 @@ from repro.telemetry.timing import (RankTimer, StepSample, capture_sample,
                                     measurement_rng)
 from repro.telemetry.trace import (TRACE_SCHEMA, TRACE_VERSION,
                                    TraceFormatError, TraceReader,
-                                   TraceWriter, schedule_from_trace)
+                                   TraceWriter, replica_schedules,
+                                   schedule_from_trace)
 
 __all__ = [
     "EstimatorConfig", "StragglerEstimator", "RankTimer", "StepSample",
     "capture_sample", "measurement_rng",
     "TRACE_SCHEMA", "TRACE_VERSION", "TraceFormatError", "TraceReader",
-    "TraceWriter", "schedule_from_trace",
+    "TraceWriter", "replica_schedules", "schedule_from_trace",
 ]

@@ -155,16 +155,55 @@ def trace_chis(reader: TraceReader) -> np.ndarray:
     return np.stack(rows)
 
 
-def schedule_from_trace(path: str,
-                        num_ranks: Optional[int] = None) -> HeteroSchedule:
+def schedule_from_trace(path: str, num_ranks: Optional[int] = None,
+                        rank_offset: int = 0) -> HeteroSchedule:
     """Build a replaying ``HeteroSchedule(kind="trace")`` from a trace.
 
     ``num_ranks`` overrides the recorded rank count (χ rows are truncated
     or padded with 1.0 by ``HeteroSchedule.chi``); steps past the end of
     the trace wrap around, so short traces replay as periodic schedules.
+
+    ``rank_offset`` replays a SLICE of a wider trace: χ lanes
+    ``[rank_offset, rank_offset + num_ranks)``. This is how one recorded
+    cluster trace feeds R replicas — each replica replays its own lane
+    block of the shared JSONL (see :func:`replica_schedules`).
     """
     reader = TraceReader(path)
     chis = trace_chis(reader)
+    if rank_offset:
+        if num_ranks is None:
+            raise ValueError("rank_offset needs an explicit num_ranks "
+                             "(the width of the slice to replay)")
+        if rank_offset + num_ranks > reader.num_ranks:
+            raise TraceFormatError(
+                f"{path}: slice [{rank_offset}, {rank_offset + num_ranks})"
+                f" exceeds the recorded {reader.num_ranks} ranks")
+        chis = chis[:, rank_offset:rank_offset + num_ranks]
     return HeteroSchedule(
         num_ranks=num_ranks or reader.num_ranks, kind="trace",
         trace_chis=tuple(tuple(float(c) for c in row) for row in chis))
+
+
+def replica_schedules(path: str) -> List[HeteroSchedule]:
+    """Split ONE recorded cluster trace into per-replica replay schedules.
+
+    The header must carry the cluster tagging written by
+    :class:`repro.cluster.ReplicaManager` (or a fixture): ``replicas``
+    (R) and ``ranks_per_replica`` (W), with ``num_ranks == R * W`` —
+    replica i replays χ lanes ``[i*W, (i+1)*W)``. One JSONL set thus
+    replays a whole cluster run deterministically.
+    """
+    reader = TraceReader(path)
+    meta = reader.meta
+    if "replicas" not in meta or "ranks_per_replica" not in meta:
+        raise TraceFormatError(
+            f"{path}: not a cluster trace — header lacks 'replicas'/"
+            "'ranks_per_replica' tagging (record one via "
+            "repro.cluster.ReplicaManager(record_trace=...))")
+    R, W = int(meta["replicas"]), int(meta["ranks_per_replica"])
+    if R * W != reader.num_ranks:
+        raise TraceFormatError(
+            f"{path}: header declares {R} replicas x {W} ranks but the "
+            f"trace is {reader.num_ranks} lanes wide")
+    return [schedule_from_trace(path, num_ranks=W, rank_offset=i * W)
+            for i in range(R)]

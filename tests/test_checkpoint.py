@@ -153,6 +153,80 @@ class TestValidation:
             store.restore(d, 1, _tree())
 
 
+class TestConcurrentReaders:
+    """The warm-spare promotion path: a cluster manager reading the
+    checkpoint directory while a trainer is mid-save must get the newest
+    COMMITTED state or a clean miss — never a crash, never torn data."""
+
+    def _like(self):
+        return {"w": np.zeros((2,), np.float32)}
+
+    def test_load_latest_params_picks_newest_committed(self, tmp_path):
+        d = str(tmp_path)
+        store.save(d, 1, {"w": np.full((2,), 1.0, np.float32)})
+        store.save(d, 5, {"w": np.full((2,), 5.0, np.float32)})
+        step, params = store.load_latest_params(d, self._like())
+        assert step == 5
+        np.testing.assert_array_equal(params["w"], np.full((2,), 5.0))
+
+    def test_empty_or_missing_directory_is_a_clean_miss(self, tmp_path):
+        assert store.load_latest_params(str(tmp_path), self._like()) \
+            == (None, None)
+        assert store.load_latest_params(
+            os.path.join(str(tmp_path), "never_made"), self._like()) \
+            == (None, None)
+
+    def test_orphan_npz_is_skipped_mid_save(self, tmp_path):
+        """The npz of step 9 landed but its manifest hasn't yet (the
+        writer is between the two atomic writes): readers must resolve
+        to the previous committed step."""
+        d = str(tmp_path)
+        store.save(d, 2, {"w": np.full((2,), 2.0, np.float32)})
+        store.save(d, 9, {"w": np.full((2,), 9.0, np.float32)})
+        os.unlink(os.path.join(d, "ckpt_00000009.json"))  # not committed
+        assert store.latest_step(d) == 2
+        step, params = store.load_latest_params(d, self._like())
+        assert step == 2
+        np.testing.assert_array_equal(params["w"], np.full((2,), 2.0))
+
+    def test_manifest_retracted_between_scan_and_read(self, tmp_path,
+                                                      monkeypatch):
+        """The benign race: the scan saw step 7 committed, but the
+        trainer retracted its manifest (overwrite-in-progress) before the
+        reader opened it — fall back to the previous committed step."""
+        d = str(tmp_path)
+        store.save(d, 3, {"w": np.full((2,), 3.0, np.float32)})
+        store.save(d, 7, {"w": np.full((2,), 7.0, np.float32)})
+        orig = store.read_manifest
+
+        def retracted(directory, step):
+            if step == 7:
+                raise FileNotFoundError(
+                    f"checkpoint step {step} in {directory} has no "
+                    "manifest")
+            return orig(directory, step)
+
+        monkeypatch.setattr(store, "read_manifest", retracted)
+        step, params = store.load_latest_params(d, self._like())
+        assert step == 3
+        np.testing.assert_array_equal(params["w"], np.full((2,), 3.0))
+
+    def test_reader_gives_up_on_a_churning_directory(self, tmp_path,
+                                                     monkeypatch):
+        """Every scan loses the race (a writer looping over the same
+        steps): after the retry budget the reader raises instead of
+        spinning forever."""
+        d = str(tmp_path)
+        for s in range(1, 5):
+            store.save(d, s, {"w": np.full((2,), float(s), np.float32)})
+        monkeypatch.setattr(
+            store, "read_manifest",
+            lambda directory, step: (_ for _ in ()).throw(
+                FileNotFoundError("no manifest")))
+        with pytest.raises(RuntimeError, match="kept changing"):
+            store.load_latest_params(d, self._like(), retries=2)
+
+
 class TestTrainStateLayout:
     def test_prefix_restore_and_load_params(self, tmp_path):
         d = str(tmp_path)

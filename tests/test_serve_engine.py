@@ -17,8 +17,8 @@ import numpy as np
 import pytest
 
 from repro.control import ControlConfig
-from repro.launch.serve import (FixedBatchEngine, Request,
-                                ServeEngine, latency_percentiles)
+from repro.launch.serve import (EMPTY_LATENCY_STATS, FixedBatchEngine,
+                                Request, ServeEngine, latency_percentiles)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -82,6 +82,69 @@ class TestServeEngine:
         # FIFO: request 0 finished before request 1 was admitted
         c0, c1 = sorted(eng.completions, key=lambda c: c.uid)
         assert c1.admitted_step >= c0.finished_step
+
+
+class TestTrySubmit:
+    """Non-blocking admission (the cluster router's contract): False
+    means NOTHING was enqueued — never an exception, never a request
+    parked behind a bound it can never clear."""
+
+    def test_full_queue_rejects_without_enqueueing(self):
+        eng = ServeEngine("yi-6b", num_slots=1, max_len=8, seed=0,
+                          max_queue=1)
+        reqs = _mk_requests(eng.cfg.vocab_size, [(3, 2, 0), (3, 2, 0)])
+        assert eng.try_submit(reqs[0])
+        assert len(eng.queue) == 1
+        assert not eng.try_submit(reqs[1])       # bounded queue at capacity
+        assert len(eng.queue) == 1               # nothing was enqueued
+
+    def test_oversize_and_empty_requests_rejected_up_front(self):
+        eng = ServeEngine("yi-6b", num_slots=1, max_len=8, seed=0)
+        big = _mk_requests(eng.cfg.vocab_size, [(6, 4, 0)])[0]  # 10 > 8
+        assert not eng.try_submit(big)
+        empty = Request(uid=9, prompt=np.zeros((0,), np.int32),
+                        max_new_tokens=2, arrival_step=0)
+        assert not eng.try_submit(empty)
+        assert len(eng.queue) == 0
+
+    def test_never_fits_paged_request_rejected_not_deadlocked(self):
+        """A request whose pages can NEVER be satisfied by the pool (even
+        running alone) must be refused at admission — accepted, it would
+        deadlock the admit loop at the queue head."""
+        eng = ServeEngine("yi-6b", num_slots=2, max_len=16, seed=0,
+                          page_size=4, num_pages=2)     # pool: 8 tokens
+        never = _mk_requests(eng.cfg.vocab_size, [(8, 4, 0)])[0]  # 12 > 8
+        assert not eng.try_submit(never)
+        fits = _mk_requests(eng.cfg.vocab_size, [(4, 3, 0)])[0]   # 7 <= 8
+        assert eng.try_submit(fits)
+        while not eng.idle:                      # drive the admitted one
+            eng.tick()
+        assert [c.uid for c in eng.completions] == [0]
+
+
+class TestLatencyStatsContract:
+    """latency_percentiles' empty-stats record is API: the cluster
+    manager and the benches key on these exact fields."""
+
+    def test_empty_completions_pinned_record(self):
+        stats = latency_percentiles([])
+        assert stats == {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0,
+                         "mean_ms": 0.0, "ttft_mean_ms": 0.0, "tokens": 0,
+                         "requests": 0, "tok_per_s": 0.0}
+        # a COPY: callers mutate their stats dicts freely
+        stats["p50_ms"] = 99.0
+        assert EMPTY_LATENCY_STATS["p50_ms"] == 0.0
+        assert latency_percentiles([]) == EMPTY_LATENCY_STATS
+
+    def test_nonempty_stats_carry_ttft_and_request_count(self):
+        eng = ServeEngine("yi-6b", num_slots=1, max_len=8, seed=0)
+        comps = eng.run(_mk_requests(eng.cfg.vocab_size,
+                                     [(3, 2, 0), (3, 2, 1)]))
+        stats = latency_percentiles(comps)
+        assert stats["requests"] == 2 and stats["tokens"] == 4
+        # TTFT (queue wait + prefill) dominates the steady-state token
+        assert stats["ttft_mean_ms"] >= stats["p50_ms"]
+        assert set(stats) == set(EMPTY_LATENCY_STATS)
 
 
 class TestServeSemiMigration:
