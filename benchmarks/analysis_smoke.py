@@ -1,0 +1,71 @@
+"""Static-analysis smoke leg (ISSUE 10): runs the invariant linter as a
+benchmark job so the smoke set exercises the same gate CI's ``analyze``
+job does — ``python -m repro.analysis --check --mutate`` over the full
+registered step matrix, in a subprocess with forced host devices and
+Pallas interpret mode.
+
+Reported numbers: wall time of the check, case count, and mutant
+coverage (every R1–R5 mutant must FIRE). Raises — failing the bench
+run — on any HEAD violation or silent mutant.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+from benchmarks.common import ROOT, csv_row, is_dry_run, save_bench_json
+
+DEVICES = 8
+
+
+def _run_cli(*flags: str) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["REPRO_PALLAS_INTERPRET"] = "1"
+    env.pop("XLA_FLAGS", None)  # the CLI forces its own device count
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *flags,
+         "--devices", str(DEVICES), "--json"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"repro.analysis {' '.join(flags)} failed:\n"
+            f"{out.stdout}\n{out.stderr}")
+    return json.loads(out.stdout)
+
+
+def main():
+    t0 = time.perf_counter()
+    check = _run_cli("--check")["check"]
+    t_check = time.perf_counter() - t0
+    if check["violations"]:
+        raise RuntimeError(f"HEAD violates invariants: {check['violations']}")
+
+    t0 = time.perf_counter()
+    mutate = _run_cli("--mutate")["mutate"]
+    t_mutate = time.perf_counter() - t0
+    silent = sorted(n for n, r in mutate.items() if not r["fired"])
+    if silent:
+        raise RuntimeError(f"mutants stayed silent (dead rules): {silent}")
+
+    save_bench_json(
+        "analysis_smoke",
+        {"devices": DEVICES, "dry_run": is_dry_run()},
+        {"cases": len(check["cases"]),
+         "violations": 0,
+         "mutants": len(mutate),
+         "silent_mutants": 0,
+         "check_s": t_check,
+         "mutate_s": t_mutate})
+    yield csv_row("analysis_check", t_check * 1e6,
+                  f"cases={len(check['cases'])} violations=0")
+    yield csv_row("analysis_mutate", t_mutate * 1e6,
+                  f"mutants={len(mutate)} silent=0")
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -23,7 +23,7 @@ import numpy as np, jax, jax.numpy as jnp, json
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import migration
 from repro.sharding import shard_map
-from repro.launch.hlo_analysis import parse_collectives
+from repro.analysis.hlo import parse_collectives
 e, T, d, H, block = 8, 64, 128, 512, 16
 mesh = Mesh(np.array(jax.devices()).reshape(e), ("model",))
 x = jnp.zeros((T, d), jnp.float32)

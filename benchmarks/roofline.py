@@ -16,7 +16,7 @@ import os
 
 from benchmarks.common import ROOT, csv_row
 from repro.config import INPUT_SHAPES, get_config
-from repro.launch import hlo_analysis as H
+from repro.analysis import hlo as H
 
 DRYRUN_DIR = os.path.join(ROOT, "experiments", "dryrun")
 

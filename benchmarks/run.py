@@ -32,6 +32,7 @@ JOBS = [
     ("cluster", "benchmarks.cluster_bench", False, True),
     ("xla_flags", "benchmarks.xla_flags_sweep", False, True),
     ("telemetry", "benchmarks.telemetry_bench", False, True),
+    ("analyze", "benchmarks.analysis_smoke", False, True),
     ("ablate", "benchmarks.ablations", True, False),
 ]
 
@@ -43,6 +44,7 @@ SUITES = {
     "serve": {"serve"},
     "cluster": {"cluster"},
     "telemetry": {"telemetry"},
+    "analysis": {"analyze"},
     "smoke": {key for key, _, _, smoke in JOBS if smoke},
 }
 
@@ -51,10 +53,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig56,fig9,tab1,fig10,fig11,"
-                         "kernel,roofline,serve,cluster,telemetry")
+                         "kernel,roofline,serve,cluster,telemetry,analyze")
     ap.add_argument("--suite", default=None, choices=sorted(SUITES),
                     help="named subset (CI): kernels | migration | serve "
-                         "| cluster | telemetry | smoke")
+                         "| cluster | telemetry | analysis | smoke")
     ap.add_argument("--fast", action="store_true",
                     help="skip the slow real-training ACC benchmarks")
     ap.add_argument("--dry-run", action="store_true",

@@ -1,0 +1,36 @@
+"""repro.analysis — static jaxpr/HLO invariant linter (DESIGN_ANALYSIS.md).
+
+Proves, without running a benchmark, the plan-safety and hot-path rules
+the rest of the system assumes: R1 one-signature-one-jaxpr, R2 no
+host syncs / donated hot state, R3 exact collective shapes, R4 Pallas
+tiles fit VMEM, R5 no f64 leaks. Run ``python -m repro.analysis
+--check [--mutate]``.
+
+Importing this package is cheap (no jax); the engine and rules load
+lazily on first attribute access so the registry can be populated from
+library modules without dragging the analyzer in.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "CaseEnv": "registry", "TraceCase": "registry", "Artifact": "registry",
+    "REQUIRED_STEPS": "registry", "register": "registry",
+    "load_providers": "registry",
+    "RULES": "rules", "RULE_IDS": "rules", "Violation": "rules",
+    "rules_by_id": "rules",
+    "run_check": "engine", "lint": "engine", "trace_artifact": "engine",
+    "run_mutants": "mutants",
+    "DEFAULT_VMEM_BUDGET": "vmem", "VmemBudgetError": "vmem",
+    "assert_fits": "vmem", "check_budget": "vmem",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.analysis' has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"repro.analysis.{mod}"), name)

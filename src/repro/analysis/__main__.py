@@ -1,0 +1,94 @@
+"""``python -m repro.analysis`` — the static invariant gate.
+
+--check  (default) trace the full registered signature/geometry matrix
+         and lint it against R1–R5; exit 1 on any violation.
+--mutate seed the known-bad variants and assert every rule fires;
+         exit 1 if any rule stays silent on its mutant.
+
+Runs on CPU with forced host devices (``--devices``, default 8) and
+Pallas interpret mode, so CI needs no accelerator. ``--rules R2,R3``
+restricts the catalog; ``--steps`` restricts the matrix; ``--json``
+emits a machine-readable report.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _parse(argv):
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static jaxpr/HLO invariant linter (R1-R5)")
+    p.add_argument("--check", action="store_true",
+                   help="lint HEAD across the signature matrix (default)")
+    p.add_argument("--mutate", action="store_true",
+                   help="seed known-bad variants; every rule must fire")
+    p.add_argument("--rules", default="",
+                   help="comma-separated rule ids (default: all)")
+    p.add_argument("--steps", default="",
+                   help="comma-separated step names (default: all)")
+    p.add_argument("--devices", type=int, default=8,
+                   help="forced XLA host device count (default 8)")
+    p.add_argument("--json", action="store_true", dest="as_json")
+    return p.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse(sys.argv[1:] if argv is None else argv)
+    if not args.mutate:
+        args.check = True
+
+    # before any jax import: host devices + interpret-mode kernels
+    from repro.launch._bootstrap import ensure_host_devices
+    ensure_host_devices(args.devices)
+    os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+
+    from repro.analysis import engine, mutants
+    from repro.analysis.registry import CaseEnv
+
+    rule_ids = [r for r in args.rules.split(",") if r.strip()] or None
+    steps = [s for s in args.steps.split(",") if s.strip()] or None
+
+    import jax
+    env = CaseEnv(max_devices=jax.device_count())
+    report = {}
+    failed = False
+
+    if args.check:
+        violations, artifacts = engine.run_check(env, rule_ids, steps)
+        report["check"] = {
+            "cases": [a.case.label for a in artifacts],
+            "violations": [str(v) for v in violations],
+        }
+        if violations:
+            failed = True
+        if not args.as_json:
+            print(f"[analysis] --check: {len(artifacts)} cases, "
+                  f"{len(violations)} violation(s)")
+            for v in violations:
+                print(f"  FAIL {v}")
+
+    if args.mutate:
+        results = mutants.run_mutants(env)
+        report["mutate"] = {name: {"fired": fired, "detail": detail}
+                           for name, (fired, detail) in results.items()}
+        silent = [n for n, (fired, _) in results.items() if not fired]
+        if silent:
+            failed = True
+        if not args.as_json:
+            print(f"[analysis] --mutate: {len(results)} mutants, "
+                  f"{len(silent)} silent")
+            for name, (fired, detail) in sorted(results.items()):
+                print(f"  {'FIRED' if fired else 'SILENT'} "
+                      f"{name}: {detail}")
+
+    if args.as_json:
+        print(json.dumps(report, indent=2))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,91 @@
+"""The analyzer's trace/compile/lint driver.
+
+For every registered :class:`~repro.analysis.registry.TraceCase` it
+abstractly traces the step (``jax.make_jaxpr`` over ShapeDtypeStructs —
+nothing executes), hashes the jaxpr twice plus every declared alternate
+build (R1), optionally lowers+compiles to HLO text (cases flagged
+``compile_hlo``), then runs the R1–R5 rule catalog over the full
+artifact batch. A case that fails to trace or compile is itself a
+violation (rule id ``engine``) — the matrix must stay green, not just
+the rules.
+"""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis import registry as reg
+from repro.analysis import rules as R
+
+
+def jaxpr_hash(text: str) -> str:
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def _lower(case: reg.TraceCase):
+    import jax
+    if hasattr(case.fn, "lower"):          # already jitted (serve stepper)
+        return case.fn.lower(*case.args)
+    kw = {}
+    if case.in_shardings is not None:
+        kw["in_shardings"] = case.in_shardings
+    if case.out_shardings is not None:
+        kw["out_shardings"] = case.out_shardings
+    if case.donate_argnums:
+        kw["donate_argnums"] = case.donate_argnums
+    return jax.jit(case.fn, **kw).lower(*case.args)
+
+
+def trace_artifact(case: reg.TraceCase, env: reg.CaseEnv) -> reg.Artifact:
+    import jax
+    from repro.sharding import use_mesh
+    ctx = use_mesh(case.mesh) if case.mesh is not None \
+        else contextlib.nullcontext()
+    try:
+        with ctx:
+            closed = jax.make_jaxpr(case.fn)(*case.args)
+            text = str(closed)
+            h = jaxpr_hash(text)
+            retr: List[Tuple[str, str]] = [
+                ("double-trace",
+                 jaxpr_hash(str(jax.make_jaxpr(case.fn)(*case.args))))]
+            for label, fn, args in case.retrace:
+                retr.append(
+                    (label, jaxpr_hash(str(jax.make_jaxpr(fn)(*args)))))
+            hlo = ""
+            if case.compile_hlo and env.compile_hlo:
+                hlo = _lower(case).compile().as_text()
+        return reg.Artifact(case=case, jaxpr=closed, jaxpr_text=text,
+                            jaxpr_hash=h, retrace_hashes=tuple(retr),
+                            hlo_text=hlo)
+    except Exception as e:                                # noqa: BLE001
+        return reg.Artifact(case=case,
+                            error=f"{type(e).__name__}: {e}")
+
+
+def lint(artifacts: List[reg.Artifact],
+         rule_ids: Optional[Sequence[str]] = None) -> List[R.Violation]:
+    """Rules over already-traced artifacts (reused by tests/mutants)."""
+    violations: List[R.Violation] = []
+    for a in artifacts:
+        if a.error:
+            violations.append(R.Violation(
+                "engine", a.case.step, a.case.name,
+                f"trace/compile failed: {a.error}"))
+    clean = [a for a in artifacts if not a.error]
+    for rule in R.rules_by_id(rule_ids):
+        violations.extend(rule.check(clean))
+    return violations
+
+
+def run_check(env: Optional[reg.CaseEnv] = None,
+              rule_ids: Optional[Sequence[str]] = None,
+              steps: Optional[List[str]] = None,
+              ) -> Tuple[List[R.Violation], List[reg.Artifact]]:
+    """Trace the whole registered matrix and lint it."""
+    env = env or reg.CaseEnv()
+    reg.load_providers()
+    cases = reg.cases_for(env, steps)
+    artifacts = [trace_artifact(c, env) for c in cases]
+    return lint(artifacts, rule_ids), artifacts

@@ -1,0 +1,484 @@
+"""Shared HLO-text parsing + analytic cost models (the ONE home).
+
+Absorbs the ad-hoc parsers that grew in ``launch/hlo_analysis.py`` and
+``launch/hlo_inspect.py`` (both are deprecation shims now): instruction
+iteration, collective byte accounting, op/collective histograms, the
+overlap report, rooflines and the analytic step-cost floors. The rule
+engine (analysis/rules.py), the dry-run, the roofline bench and the HLO
+tests all read compiled text through this module, so a parser fix lands
+everywhere at once.
+
+Byte-accounting semantics (fixes two long-standing edge cases):
+
+* tuple-shaped collective outputs — a grouped psum like
+  ``%ar = (f32[a], f32[b]) all-reduce(%x, %y)`` moves BOTH elements, so
+  every real element is summed;
+* async ``-start`` tuples — ``all-reduce-start`` carries the operand
+  aliases AND the result in one tuple ``(op, result)``; counting the
+  whole tuple doubled the payload. Mirrored halves are now counted once.
+* ``-done`` lines never contribute bytes, whatever their result shape
+  (a ``(f32[...], token[])`` result tuple used to be ambiguous).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+from typing import Dict, Iterator, List, NamedTuple, Optional, Tuple
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_elements(shape_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """[(dtype, dims)] for every array element in a (possibly tuple)
+    HLO shape string; layout annotations are ignored."""
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        out.append((dtype,
+                    tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes over every known-dtype element of the shape string
+    (tuples sum ALL their elements; token/opaque elements are skipped)."""
+    total = 0
+    for dtype, dims in shape_elements(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+shape_bytes = _shape_bytes     # public name; _shape_bytes kept for the shim
+
+
+class Instr(NamedTuple):
+    """One parsed HLO instruction line."""
+    name: str
+    shape: str
+    op: str
+    line: str
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shape>\((?:[^()]|\([^()]*\))*\)|[\w\[\],{}\s/]*?)\s*"
+    r"(?P<op>[\w\-]+)\(")
+
+
+def iter_instructions(hlo_text: str) -> Iterator[Instr]:
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _INSTR_RE.match(s)
+        if m:
+            yield Instr(m.group("name"), m.group("shape").strip(),
+                        m.group("op"), s)
+
+
+def collective_base_kind(op: str) -> Optional[str]:
+    """The collective family of an opcode (``all-reduce-start`` ->
+    ``all-reduce``) or None for non-collective ops."""
+    base = op
+    for suffix in ("-start", "-done"):
+        if base.endswith(suffix):
+            base = base[: -len(suffix)]
+    return base if base in COLLECTIVE_KINDS else None
+
+
+def collective_payload_bytes(shape_str: str, op: str) -> int:
+    """Payload bytes a collective instruction actually moves.
+
+    ``-done``: 0 (the pair was counted at ``-start``). ``-start`` with a
+    tuple shape: the tuple is ``(operand aliases..., results...)`` — when
+    the two halves mirror (the canonical async form) only the result
+    half is counted; otherwise every known-dtype element once. Sync
+    tuple shapes (grouped psum) count every element."""
+    if op.endswith("-done"):
+        return 0
+    elems = shape_elements(shape_str)
+
+    def total(es):
+        b = 0
+        for dt, dims in es:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims:
+                n *= d
+            b += n * _DTYPE_BYTES[dt]
+        return b
+
+    if op.endswith("-start") and shape_str.lstrip().startswith("("):
+        half = len(elems) // 2
+        if (len(elems) >= 2 and len(elems) % 2 == 0
+                and [d for _, d in elems[:half]] == [d for _, d in elems[half:]]):
+            return total(elems[half:])
+        return total(elems)
+    return _shape_bytes(shape_str)
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Sum payload bytes of every collective op in (per-device) HLO.
+
+    Returns {kind: bytes} + {"total": ...}. ``-start``/``-done`` async
+    pairs are counted once (on ``-start``)."""
+    out = {k: 0 for k in COLLECTIVE_KINDS}
+    for ins in iter_instructions(hlo_text):
+        kind = collective_base_kind(ins.op)
+        if kind is None:
+            continue
+        out[kind] += collective_payload_bytes(ins.shape, ins.op)
+    out["total"] = sum(out[k] for k in COLLECTIVE_KINDS)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# histograms / inspection (from launch/hlo_inspect.py)
+# ---------------------------------------------------------------------------
+
+
+def collective_histogram(hlo_text: str) -> List[Tuple[str, str, int, int]]:
+    """[(kind, shape, count, total_bytes)] sorted by total bytes desc."""
+    hist: Dict[Tuple[str, str], List[int]] = collections.defaultdict(
+        lambda: [0, 0])
+    for ins in iter_instructions(hlo_text):
+        kind = collective_base_kind(ins.op)
+        if kind is None or ins.op.endswith("-done"):
+            continue
+        key = (kind, ins.shape)
+        hist[key][0] += 1
+        hist[key][1] += collective_payload_bytes(ins.shape, ins.op)
+    rows = [(k, s, c, b) for (k, s), (c, b) in hist.items()]
+    return sorted(rows, key=lambda r: -r[3])
+
+
+def find_redundant_collectives(hlo_text: str, min_count: int = 2
+                               ) -> List[Tuple[str, str, int, int]]:
+    """Same-kind same-shape collectives appearing >= min_count times in the
+    TOP-LEVEL computation (outside while bodies) — candidates for CSE or
+    hoisting."""
+    m = re.search(r"ENTRY[^{]*\{(.*)", hlo_text, re.S)
+    body = m.group(1) if m else hlo_text
+    return [r for r in collective_histogram(body) if r[2] >= min_count]
+
+
+def op_histogram(hlo_text: str) -> Dict[str, int]:
+    """Opcode → count over the whole module (entry + nested computations).
+
+    The kernel-backward acceptance rule reads this: the pruned-matmul
+    gradient path must stay free of ``gather``/``scatter`` (the XLA
+    zero-imputation path materializes both)."""
+    counts = collections.Counter()
+    for ins in iter_instructions(hlo_text):
+        counts[ins.op] += 1
+    return dict(counts)
+
+
+def reshape_churn(hlo_text: str) -> Dict[str, int]:
+    counts = collections.Counter()
+    for ins in iter_instructions(hlo_text):
+        if ins.op in ("reshape", "transpose", "copy", "all-to-all"):
+            counts[ins.op] += 1
+    return dict(counts)
+
+
+def report(hlo_text: str, top: int = 10) -> str:
+    lines = ["== collective histogram (top by bytes) =="]
+    for kind, shape, count, nbytes in collective_histogram(hlo_text)[:top]:
+        lines.append(f"  {kind:20s} ×{count:<4d} {nbytes/2**20:8.1f} MiB  {shape[:60]}")
+    red = find_redundant_collectives(hlo_text)
+    lines.append(f"== redundant top-level collectives: {len(red)} ==")
+    for kind, shape, count, nbytes in red[:top]:
+        lines.append(f"  {kind:20s} ×{count:<4d} {nbytes/2**20:8.1f} MiB  {shape[:60]}")
+    lines.append(f"== layout churn: {reshape_churn(hlo_text)} ==")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# collective/compute overlap report (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+# kinds with an async -start/-done form worth pairing (all-to-all excluded:
+# XLA emits it synchronously on the paths we audit)
+_PAIRED_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                 "collective-permute")
+_DONE_OPERAND_RE = re.compile(r"-done\(\s*%?([\w.\-]+)")
+
+# instruction kinds that are bookkeeping, not schedulable compute
+_NON_COMPUTE = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all", "opt-barrier"}
+
+
+def collective_overlap_report(hlo_text: str) -> dict:
+    """Per-step report of how much collective traffic overlaps compute:
+    walks the scheduled HLO, pairs every ``-start`` with its ``-done``,
+    and counts the compute instructions the scheduler placed BETWEEN
+    them. A pair with no intervening compute is async in name only — its
+    bytes are fully exposed. Synchronous collectives (no -start form)
+    are exposed by definition.
+
+    Returns {"pairs": [...], "total_bytes", "overlapped_bytes",
+    "fraction_overlapped", "async_pairs", "sync_collectives"}."""
+    open_pairs: Dict[str, dict] = {}
+    pairs = []
+    sync_count = 0
+    total = overlapped = 0
+    for ins in iter_instructions(hlo_text):
+        kind = collective_base_kind(ins.op)
+        if kind in _PAIRED_KINDS and ins.op.endswith("-start"):
+            open_pairs[ins.name] = {
+                "kind": kind,
+                "bytes": collective_payload_bytes(ins.shape, ins.op),
+                "intervening_compute_ops": 0}
+            continue
+        if kind in _PAIRED_KINDS and ins.op.endswith("-done"):
+            mo = _DONE_OPERAND_RE.search(ins.line)
+            p = open_pairs.pop(mo.group(1), None) if mo else None
+            if p is None:       # -done on a name we never saw start
+                continue
+            p["overlapped"] = p["intervening_compute_ops"] > 0
+            pairs.append(p)
+            total += p["bytes"]
+            if p["overlapped"]:
+                overlapped += p["bytes"]
+            continue
+        if kind in _PAIRED_KINDS:
+            b = collective_payload_bytes(ins.shape, ins.op)
+            pairs.append({"kind": kind, "bytes": b,
+                          "intervening_compute_ops": 0,
+                          "overlapped": False})
+            sync_count += 1
+            total += b
+            continue
+        if open_pairs and ins.op not in _NON_COMPUTE:
+            for p in open_pairs.values():
+                p["intervening_compute_ops"] += 1
+    return {
+        "pairs": pairs,
+        "total_bytes": total,
+        "overlapped_bytes": overlapped,
+        "fraction_overlapped": overlapped / total if total else 0.0,
+        "async_pairs": len(pairs) - sync_count,
+        "sync_collectives": sync_count,
+    }
+
+
+# ---------------------------------------------------------------------------
+# module-header facts (donation / aliasing)
+# ---------------------------------------------------------------------------
+
+
+def input_output_alias_pairs(hlo_text: str) -> List[Tuple[int, int]]:
+    """[(param_number, output_index_head)] parsed from the module header's
+    ``input_output_alias={ {out}: (param, {index}, kind), ... }`` — the
+    compiled proof that donated buffers actually alias (R2)."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return []
+    i = start + len("input_output_alias=")
+    depth = 0
+    for j in range(i, min(len(hlo_text), i + 100_000)):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                body = hlo_text[i + 1:j]
+                break
+    else:
+        return []
+    out = []
+    for m in re.finditer(r"\{\s*(\d*)[\d,\s]*\}\s*:\s*\(\s*(\d+)", body):
+        head = int(m.group(1)) if m.group(1) else 0
+        out.append((int(m.group(2)), head))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# roofline + analytic step-cost floors (from launch/hlo_analysis.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    chips: int
+    coll_breakdown: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(compiled.as_text())
+    return Roofline(flops_per_device=flops, bytes_per_device=nbytes,
+                    coll_bytes_per_device=float(coll["total"]), chips=chips,
+                    coll_breakdown=coll)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D prefill, 2·N_active·B decode."""
+    n = cfg.active_param_count() if cfg.moe is not None else cfg.param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one token per sequence
+
+
+def analytic_step_flops(cfg, shape) -> float:
+    """Analytic FLOOR for the step's global FLOPs: parameter matmuls
+    (MODEL_FLOPS) + attention score/value matmuls (which 6·N·D omits).
+
+    Needed because XLA's ``cost_analysis()`` counts a ``while`` body ONCE,
+    not × trip-count — scan-over-layers models under-report by ~L×. The
+    roofline's compute term uses max(HLO, analytic)."""
+    base = model_flops(cfg, shape)
+    if cfg.is_attention_free:
+        return base
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    L = cfg.num_layers
+    window = cfg.sliding_window or 0
+    if shape.kind == "decode":
+        ctx = min(window, S) if window else S
+        attn = 4.0 * B * ctx * H * hd * L          # one query vs the cache
+    else:
+        eff = (min(window, S) if window else S / 2.0)   # causal halves it
+        attn = 4.0 * B * S * eff * H * hd * L
+        if shape.kind == "train":
+            attn *= 3.0                            # fwd + 2x bwd
+    return base + attn
+
+
+def analytic_step_bytes(cfg, shape, *, decode_occupancy: float = 1.0) -> float:
+    """Analytic FLOOR for global HBM traffic of one step (same rationale
+    as :func:`analytic_step_flops` — scan bodies are under-counted).
+
+    train:   params f32 × (grad + AdamW moments rw ≈ 10 accesses)
+             + activations (fwd write + bwd read) + logits traffic.
+    prefill: params bf16 + activations + KV-cache write.
+    decode:  params bf16 + KV-cache read (the classic decode bound).
+
+    ``decode_occupancy`` is mean((cur_pos+1)/max_len) over the slots:
+    the fused decode kernel reads only the OCCUPIED cache rows, so the
+    decode memory term scales with actual occupancy, not max_len
+    (ISSUE 7 — the old full-rows assumption overstated the roofline
+    bound for mostly-empty slots). Default 1.0 = every row, which is
+    both the unfused path's real traffic and the old behavior."""
+    P = float(cfg.param_count())
+    B, S = shape.global_batch, shape.seq_len
+    d, L, V = cfg.d_model, cfg.num_layers, max(cfg.vocab_size, 1)
+    tokens = B * (S if shape.kind != "decode" else 1)
+    kv = max(cfg.num_kv_heads, 1) * cfg.resolved_head_dim
+    if cfg.mla is not None:
+        kv = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+    if cfg.is_attention_free:
+        kv = 2 * (cfg.ssm.expand * d * cfg.ssm.d_state) // max(L, 1) if cfg.ssm else 0
+    if shape.kind == "train":
+        act = tokens * d * L * 16.0          # fwd write + bwd read, f32-ish
+        logits = tokens * V * 4.0 * 3.0
+        return P * 4.0 * 10.0 + act + logits
+    if shape.kind == "prefill":
+        act = tokens * d * L * 8.0
+        cache_w = 2.0 * B * S * kv * 2.0
+        return P * 2.0 + act + cache_w
+    # decode: read the occupied cache rows (or the window for SWA archs)
+    ctx = min(cfg.sliding_window, S) if cfg.sliding_window else S
+    occ = min(max(float(decode_occupancy), 0.0), 1.0)
+    cache_r = 2.0 * B * ctx * occ * kv * 2.0 * L
+    return P * 2.0 + cache_r
+
+
+def analytic_step_collective_bytes(cfg, shape, mesh_shape) -> float:
+    """Analytic FLOOR for GLOBAL collective traffic of one step under the
+    Megatron-1D sharding (same while-body-undercount rationale).
+
+    Per transformer layer: 2 activation all-reduces over TP in fwd
+    (attention out + FFN out) and 2 in bwd; ring all-reduce moves
+    2·(e−1)/e · size through each device. Training adds the DP gradient
+    all-reduce of the TP-sharded params. MoE (expert-parallel) adds the
+    dispatch/return all-to-alls."""
+    e = mesh_shape.get("model", 1)
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    chips = e * dp
+    if e <= 1:
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * (S if shape.kind != "decode" else 1)
+    d, L = cfg.d_model, cfg.num_layers
+    bytes_el = 4.0 if shape.kind == "train" else 2.0
+    ar_factor = 2.0 * (e - 1) / e
+    n_ar = (4.0 if shape.kind == "train" else 2.0)
+    if cfg.is_attention_free:
+        n_ar /= 2.0                       # single mixer psum per layer
+    # activation all-reduces run per TP group on data-local tokens;
+    # global volume = per-device volume × chips
+    act_coll_global = n_ar * L * ar_factor * (tokens / dp) * d * bytes_el * chips
+    total = act_coll_global
+    if shape.kind == "train":
+        p_local = cfg.param_count() / e
+        total += ar_factor * p_local * 4.0 * chips     # DP grad all-reduce
+    if cfg.moe is not None and cfg.moe.expert_sharding == "expert":
+        # dispatch + combine all-to-alls of the grouped token buffers
+        k = cfg.moe.top_k * cfg.moe.capacity_factor
+        total += 2.0 * k * tokens * d * bytes_el * (3.0 if shape.kind == "train" else 1.0)
+    return total

@@ -1,0 +1,130 @@
+"""Analyzer-owned micro step cases: the collective (R3) and kernel (R4)
+probes that don't belong to any one CLI driver.
+
+``micro_collective`` compiles the controlled row-projection with
+``psum_chunks`` in {1, 4} and the migrating controlled FFN — the exact
+harness tests/test_kernel_hlo.py and tests/test_multidevice.py pin —
+and attaches the R3 expectations (chunk counts, one fused grouped
+migration psum). Needs >= 8 host devices; providers degrade to zero
+cases below that so the registry stays importable anywhere.
+
+``micro_kernel`` abstractly traces the Pallas kernels of
+kernels/pruned_matmul.py and kernels/decode_attn.py at their default
+production tiles so R4 prices every shipped tile configuration each
+run, not just whichever step happened to take the kernel path.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis import registry as reg
+
+_E, _B, _S, _D, _N, _BLOCK = 8, 2, 8, 128, 256, 8
+_H = 256
+
+
+def _collective_cases(env: reg.CaseEnv) -> List[reg.TraceCase]:
+    if env.max_devices < _E:
+        return []
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core.workload import PlanStatic
+    from repro.layers.tp_linear import (ControlContext, controlled_ffn,
+                                        controlled_proj)
+
+    e = _E
+    mesh = Mesh(np.array(jax.devices()[:e]).reshape(1, e), ("data", "model"))
+    sds = jax.ShapeDtypeStruct
+    x = sds((_B, _S, _D), jnp.float32)
+    w = sds((_D, _N), jnp.float32)
+
+    def proj_fn(chunks):
+        st = PlanStatic(buckets=(0.0, 0.25, 0.5), block_size=_BLOCK,
+                        mig_blocks=0, tp_size=e)
+        nb_loc = (_D // e) // _BLOCK
+        pri = jnp.tile(jnp.arange(nb_loc, dtype=jnp.int32)[None], (e, 1))
+        ctx = ControlContext(mesh=mesh, axis="model", static=st,
+                             bucket_by_rank=jnp.zeros((e,), jnp.int32),
+                             mig_src=jnp.array(-1, jnp.int32),
+                             pri={"proj": pri}, psum_chunks=chunks)
+        return lambda x_, w_: controlled_proj(x_, w_, ctx, "proj",
+                                              split="row")
+
+    full = f"{_B},{_S},{_N}"
+    chunk4 = f"{_B},{_S},{_N // 4}"
+    cases = [
+        reg.TraceCase(
+            step="micro_collective", name="proj_psum_chunks1",
+            fn=proj_fn(1), args=(x, w), mesh=mesh, compile_hlo=True,
+            expect={"chunked_all_reduce": {
+                "chunks": 1, "full_dims": full, "chunk_dims": chunk4}}),
+        reg.TraceCase(
+            step="micro_collective", name="proj_psum_chunks4",
+            fn=proj_fn(4), args=(x, w), mesh=mesh, compile_hlo=True,
+            expect={"chunked_all_reduce": {
+                "chunks": 4, "full_dims": full, "chunk_dims": chunk4}}),
+    ]
+
+    # migration: SEMI sheds 2 blocks from rank 5; its helper broadcast
+    # must stay ONE fused grouped (tuple) masked psum (R3)
+    xh = sds((_B, _S, 64), jnp.float32)
+    wu = sds((64, _H), jnp.float32)
+    wd = sds((_H, 64), jnp.float32)
+    st = PlanStatic(buckets=(0.0, 0.25, 0.5), block_size=_BLOCK,
+                    mig_blocks=2, tp_size=e)
+    nb_loc = (_H // e) // _BLOCK
+    pri = jnp.tile(jnp.arange(nb_loc, dtype=jnp.int32)[None], (e, 1))
+    ctx_mig = ControlContext(mesh=mesh, axis="model", static=st,
+                             bucket_by_rank=jnp.zeros((e,), jnp.int32),
+                             mig_src=jnp.array(5, jnp.int32),
+                             pri={"ffn": pri})
+    cases.append(reg.TraceCase(
+        step="micro_collective", name="ffn_migration_broadcast",
+        fn=lambda x_, wu_, wd_: controlled_ffn(
+            x_, wu_, wd_, ctx_mig, "ffn", jax.nn.silu),
+        args=(xh, wu, wd), mesh=mesh,
+        expect={"grouped_psum": {"count": 1}}))
+    return cases
+
+
+def _kernel_cases(env: reg.CaseEnv) -> List[reg.TraceCase]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    sds = jax.ShapeDtypeStruct
+    f32, i32 = jnp.float32, jnp.int32
+    cases = [
+        reg.TraceCase(
+            step="micro_kernel", name="block_pruned_matmul_default_tiles",
+            fn=lambda x, w, k: ops.block_pruned_matmul(x, w, k),
+            args=(sds((512, 1024), f32), sds((1024, 1024), f32),
+                  sds((4,), i32))),
+        reg.TraceCase(
+            step="micro_kernel", name="fused_pruned_ffn_default_tiles",
+            fn=lambda x, wu, wd, k: ops.fused_pruned_ffn(
+                x, wu, wd, k, None, jax.nn.silu),
+            args=(sds((256, 512), f32), sds((512, 1024), f32),
+                  sds((1024, 512), f32), sds((2,), i32))),
+        reg.TraceCase(
+            step="micro_kernel", name="fused_decode_attention",
+            fn=lambda q, k, v, p: ops.fused_decode_attention(
+                q, k, v, cur_pos=p),
+            args=(sds((4, 32, 1, 128), f32), sds((4, 8, 256, 128), f32),
+                  sds((4, 8, 256, 128), f32), sds((4,), i32))),
+        reg.TraceCase(
+            step="micro_kernel", name="unfused_decode_attention",
+            fn=lambda q, k, v, p: ops.unfused_decode_attention(
+                q, k, v, cur_pos=p),
+            args=(sds((4, 32, 1, 128), f32), sds((4, 8, 256, 128), f32),
+                  sds((4, 8, 256, 128), f32), sds((4,), i32))),
+    ]
+    return cases
+
+
+reg.register("micro_collective", _collective_cases)
+reg.register("micro_kernel", _kernel_cases)

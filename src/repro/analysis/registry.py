@@ -1,0 +1,117 @@
+"""Step-builder registry for the static analyzer (DESIGN_ANALYSIS.md).
+
+Every jit boundary the CLIs can reach registers a *case provider* here:
+``launch/steps.py`` (train / prefill / controlled serve-decode steps),
+``launch/serve.py`` (the serve engine's fused stepper) and
+``cluster/replica.py`` (the step a cluster tick drives). The analyzer's
+engine calls each provider with a :class:`CaseEnv` and lints the
+returned :class:`TraceCase` list against the R1–R5 rules — so a new
+driver that forgets to register is caught by the completeness test
+(tests/test_analysis.py), and a registered driver gets the full
+signature-matrix audit for free.
+
+This module is deliberately dependency-free (no jax import): providers
+import it at module scope without dragging the analyzer (or jax) into
+library import time. The provider bodies do the heavy imports lazily.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+#: step names every CLI-reachable driver must register
+#: (tests/test_analysis.py asserts completeness against this)
+REQUIRED_STEPS = ("train_step", "prefill_step", "serve_decode_step",
+                  "serve_engine_step", "cluster_tick")
+
+
+@dataclasses.dataclass
+class CaseEnv:
+    """What the analyzer's host can afford for this run."""
+    max_devices: int = 1          # XLA host device count available
+    compile_hlo: bool = True      # lower+compile cases flagged compile_hlo
+    heavy: bool = True            # allow providers that build live engines
+
+
+@dataclasses.dataclass
+class TraceCase:
+    """One traceable (fn, args) point in the signature/geometry matrix.
+
+    ``args`` are ShapeDtypeStructs (or arrays) — tracing never executes.
+    ``signature`` buckets cases for the R1 cross-case retrace audit:
+    cases sharing a (step, signature) bucket MUST produce identical
+    jaxprs (that is exactly the PlanCompileCache keying contract).
+    ``retrace`` lists alternative builds of the same signature — e.g. a
+    PlanStatic expressed via the legacy ``mig_blocks`` field vs the
+    canonical ``mig_shed`` tuple — that must trace identically.
+    ``state_argnums`` are hot-loop state buffers (KV cache, …) that must
+    be donated (R2); ``expect`` carries rule-specific expectations
+    (R3 collective counts, R4 budget overrides, R5 allowances)."""
+    step: str
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    mesh: Any = None
+    donate_argnums: Tuple[int, ...] = ()
+    state_argnums: Tuple[int, ...] = ()
+    in_shardings: Any = None
+    out_shardings: Any = None
+    expect: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    compile_hlo: bool = False
+    signature: str = ""
+    retrace: Tuple[Tuple[str, Callable, Tuple[Any, ...]], ...] = ()
+
+    @property
+    def label(self) -> str:
+        return f"{self.step}/{self.name}"
+
+
+@dataclasses.dataclass
+class Artifact:
+    """Trace/compile products of one case, as the rules see them."""
+    case: TraceCase
+    jaxpr: Any = None             # ClosedJaxpr
+    jaxpr_text: str = ""
+    jaxpr_hash: str = ""
+    retrace_hashes: Tuple[Tuple[str, str], ...] = ()
+    hlo_text: str = ""
+    error: str = ""
+
+
+Provider = Callable[[CaseEnv], List[TraceCase]]
+
+_PROVIDERS: Dict[str, Provider] = {}
+
+
+def register(step: str, provider: Provider) -> None:
+    """Idempotent: re-import of a driver module re-registers in place."""
+    _PROVIDERS[step] = provider
+
+
+def names() -> List[str]:
+    return sorted(_PROVIDERS)
+
+
+def provider(step: str) -> Provider:
+    return _PROVIDERS[step]
+
+
+def cases_for(env: CaseEnv,
+              steps: Optional[List[str]] = None) -> List[TraceCase]:
+    out: List[TraceCase] = []
+    for step in names():
+        if steps and step not in steps:
+            continue
+        out.extend(_PROVIDERS[step](env))
+    return out
+
+
+def load_providers() -> List[str]:
+    """Import every module known to register providers; returns the
+    resulting registry names. New drivers: register in your module and
+    add the import here (the completeness test will remind you)."""
+    import repro.launch.steps         # noqa: F401  train/prefill/serve-decode
+    import repro.launch.serve         # noqa: F401  serve_engine_step
+    import repro.cluster.replica      # noqa: F401  cluster_tick
+    import repro.analysis.micro       # noqa: F401  collective/kernel micro-steps
+    return names()

@@ -1,0 +1,342 @@
+"""The declarative rule catalog (R1–R5) the analyzer lints against.
+
+Each rule sees the FULL artifact batch (jaxpr + optional compiled HLO
+per :class:`~repro.analysis.registry.TraceCase`) and returns
+:class:`Violation`\\ s. What each invariant protects:
+
+R1 retrace audit      — PlanCompileCache keys executables on the plan's
+                        canonical signature; two builds of the same
+                        signature (or a double-trace of one build) must
+                        produce the SAME jaxpr, or the cache silently
+                        forks executables and the at-most-one-compile
+                        guarantee (and its perf model) is fiction.
+R2 host-sync detector — the hot decode/train loop must not host-sync:
+                        no callback primitives in the jaxpr, no
+                        infeed/outfeed/send/recv or host callbacks in
+                        the HLO, and declared state buffers (KV cache)
+                        must be donated — an undonated cache doubles
+                        HBM and adds a copy per step.
+R3 collective audit   — psum_chunks=k compiles to exactly k chunk-width
+                        all-reduces and ZERO full-width ones (the
+                        latency-hiding scheduler needs the split), and
+                        the multi-source migration broadcast stays ONE
+                        fused grouped (tuple-shaped) masked psum.
+R4 VMEM budget        — every pallas_call's static tile bytes fit the
+                        per-core budget (analysis/vmem.py): Mosaic OOM
+                        becomes a named pre-compile error.
+R5 dtype leak         — no f64/c128 anywhere in hot-path jaxprs or HLO
+                        (an accidental x64 promotion doubles every
+                        buffer and halves throughput silently).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis import hlo as H
+from repro.analysis import vmem as V
+from repro.analysis.registry import Artifact
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    step: str
+    case: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.step}/{self.case}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    description: str
+    check: Callable[[List[Artifact]], List[Violation]]
+
+
+def _v(rule: str, art: Artifact, msg: str) -> Violation:
+    return Violation(rule, art.case.step, art.case.name, msg)
+
+
+# ---------------------------------------------------------------------------
+# R1 — retrace audit
+# ---------------------------------------------------------------------------
+
+
+def _check_retrace(arts: List[Artifact]) -> List[Violation]:
+    out = []
+    for a in arts:
+        if not a.jaxpr_hash:
+            continue
+        for label, h in a.retrace_hashes:
+            if h != a.jaxpr_hash:
+                out.append(_v("R1", a, (
+                    f"retrace '{label}' produced a DIFFERENT jaxpr "
+                    f"({h} != {a.jaxpr_hash}): same plan signature would "
+                    "fork executables in PlanCompileCache")))
+    by_sig: Dict[Tuple[str, str], List[Artifact]] = {}
+    for a in arts:
+        if a.case.signature and a.jaxpr_hash:
+            by_sig.setdefault((a.case.step, a.case.signature), []).append(a)
+    for (step, sig), group in by_sig.items():
+        hashes = {a.jaxpr_hash for a in group}
+        if len(hashes) > 1:
+            out.append(Violation("R1", step, sig, (
+                f"signature bucket '{sig}' traced to {len(hashes)} distinct "
+                f"jaxprs across cases {[a.case.name for a in group]} — "
+                "the compile cache would alias different programs")))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R2 — host-sync / donation
+# ---------------------------------------------------------------------------
+
+#: jaxpr primitives that round-trip through the host mid-step
+BANNED_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "callback", "debug_callback",
+    "outside_call", "infeed", "outfeed", "device_get"})
+
+_HLO_HOST_OPS = frozenset({"infeed", "outfeed", "send", "recv",
+                           "send-done", "recv-done"})
+_HLO_CALLBACK_RE = re.compile(r'custom_call_target="[^"]*[Cc]allback[^"]*"')
+
+
+def _jaxpr_prims(jaxpr) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for eqn in V.iter_eqns(jaxpr):
+        counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+    return counts
+
+
+def _check_host_sync(arts: List[Artifact]) -> List[Violation]:
+    out = []
+    for a in arts:
+        if a.jaxpr is not None:
+            bad = sorted(set(_jaxpr_prims(a.jaxpr)) & BANNED_PRIMITIVES)
+            if bad:
+                out.append(_v("R2", a, (
+                    f"host-sync primitives in the jitted step: {bad} — "
+                    "each one stalls the device on the host every call")))
+        if a.hlo_text:
+            for ins in H.iter_instructions(a.hlo_text):
+                if ins.op in _HLO_HOST_OPS:
+                    out.append(_v("R2", a, (
+                        f"HLO host transfer op '{ins.op}' compiled into "
+                        "the step")))
+                    break
+            if _HLO_CALLBACK_RE.search(a.hlo_text):
+                out.append(_v("R2", a,
+                              "HLO custom-call into a host callback"))
+        if a.case.state_argnums:
+            missing = [i for i in a.case.state_argnums
+                       if i not in a.case.donate_argnums]
+            if missing:
+                out.append(_v("R2", a, (
+                    f"state buffers at argnums {missing} are not donated "
+                    "(donate_argnums) — the hot loop double-buffers them "
+                    "in HBM every step")))
+            elif a.hlo_text and not H.input_output_alias_pairs(a.hlo_text):
+                out.append(_v("R2", a, (
+                    "donation declared but the compiled module has NO "
+                    "input_output_alias — the donated state did not "
+                    "alias (layout/sharding mismatch?)")))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R3 — collective audit
+# ---------------------------------------------------------------------------
+
+
+def all_reduce_dims(hlo_text: str) -> List[str]:
+    """Dims string of the (first element of the) output of every
+    all-reduce / all-reduce-start in the module, in order."""
+    out = []
+    for ins in H.iter_instructions(hlo_text):
+        if ins.op in ("all-reduce", "all-reduce-start"):
+            elems = H.shape_elements(ins.shape)
+            if elems:
+                out.append(",".join(str(d) for d in elems[0][1]))
+    return out
+
+
+def audit_chunked_all_reduce(hlo_text: str, chunks: int, full_dims: str,
+                             chunk_dims: str
+                             ) -> Tuple[List[str], List[str]]:
+    """The chunked-epilogue invariant (one source of truth for
+    tests/test_kernel_hlo.py and the R3 rule): with psum_chunks=k the
+    compiled module holds exactly k chunk-width all-reduces and ZERO
+    full-width ones; with k=1 exactly the single full-width one.
+
+    Returns (violations, observed_dims)."""
+    observed = all_reduce_dims(hlo_text)
+    n_full = sum(1 for d in observed if d == full_dims)
+    n_chunk = sum(1 for d in observed if d == chunk_dims)
+    msgs = []
+    if chunks <= 1:
+        if n_full != 1:
+            msgs.append(f"expected exactly 1 full-width [{full_dims}] "
+                        f"all-reduce, saw {n_full} (all: {observed})")
+    else:
+        if n_chunk != chunks:
+            msgs.append(f"psum_chunks={chunks} but saw {n_chunk} "
+                        f"chunk-width [{chunk_dims}] all-reduces "
+                        f"(all: {observed})")
+        if n_full != 0:
+            msgs.append(f"psum_chunks={chunks} left {n_full} full-width "
+                        f"[{full_dims}] all-reduce(s) — the epilogue "
+                        f"was not split (all: {observed})")
+    return msgs, observed
+
+
+def grouped_psum_count(hlo_text: str, min_elems: int = 2) -> int:
+    """Number of grouped (tuple-shaped, >= min_elems real elements)
+    all-reduces in compiled HLO. Backend collective combiners can split
+    or merge these — prefer :func:`grouped_psum_count_jaxpr` (the rule
+    does); this HLO variant serves fixture-based tests."""
+    n = 0
+    for ins in H.iter_instructions(hlo_text):
+        if ins.op in ("all-reduce", "all-reduce-start") \
+                and ins.shape.startswith("("):
+            elems = [e for e in H.shape_elements(ins.shape)
+                     if e[0] in H._DTYPE_BYTES]
+            if len(elems) >= min_elems:
+                n += 1
+    return n
+
+
+def grouped_psum_count_jaxpr(jaxpr, min_operands: int = 2) -> int:
+    """Number of GROUPED psum eqns (>= min_operands operands bound in
+    ONE collective) in the traced step. The multi-source migration
+    broadcast is exactly one such psum over all export buffers
+    (core/migration.py); a regression to per-buffer psums shows up here
+    as zero groups regardless of what the backend's collective combiner
+    later does to the HLO. Single-operand psums (the TP epilogue) don't
+    count."""
+    n = 0
+    for eqn in V.iter_eqns(jaxpr):
+        if eqn.primitive.name == "psum" \
+                and len(eqn.invars) >= min_operands:
+            n += 1
+    return n
+
+
+def _check_collectives(arts: List[Artifact]) -> List[Violation]:
+    out = []
+    for a in arts:
+        exp = a.case.expect
+        ca = exp.get("chunked_all_reduce")
+        if ca and a.hlo_text:
+            msgs, _ = audit_chunked_all_reduce(
+                a.hlo_text, ca["chunks"], ca["full_dims"], ca["chunk_dims"])
+            out.extend(_v("R3", a, m) for m in msgs)
+        gp = exp.get("grouped_psum")
+        if gp and (a.jaxpr is not None or a.hlo_text):
+            if a.jaxpr is not None:
+                n = grouped_psum_count_jaxpr(a.jaxpr,
+                                             gp.get("min_elems", 2))
+            else:
+                n = grouped_psum_count(a.hlo_text, gp.get("min_elems", 2))
+            if n != gp["count"]:
+                out.append(_v("R3", a, (
+                    f"expected {gp['count']} fused grouped psum(s) "
+                    f"(the one masked migration broadcast), saw {n}")))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R4 — Pallas VMEM budget
+# ---------------------------------------------------------------------------
+
+
+def _check_vmem(arts: List[Artifact]) -> List[Violation]:
+    out = []
+    for a in arts:
+        if a.jaxpr is None:
+            continue
+        budget = a.case.expect.get("vmem_budget", V.DEFAULT_VMEM_BUDGET)
+        out.extend(_v("R4", a, m)
+                   for m in V.check_budget(a.jaxpr, budget))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R5 — dtype / f64 leak
+# ---------------------------------------------------------------------------
+
+_WIDE_DTYPES = ("float64", "complex128")
+_HLO_WIDE = ("f64", "c128")
+
+
+def wide_dtype_eqns(jaxpr) -> List[str]:
+    bad = []
+    for eqn in V.iter_eqns(jaxpr):
+        for v in list(eqn.outvars):
+            dt = str(getattr(v.aval, "dtype", ""))
+            if dt in _WIDE_DTYPES:
+                bad.append(f"{eqn.primitive.name} -> {dt}{list(v.aval.shape)}")
+                break
+    return bad
+
+
+def _check_dtypes(arts: List[Artifact]) -> List[Violation]:
+    out = []
+    for a in arts:
+        if a.case.expect.get("allow_f64"):
+            continue
+        if a.jaxpr is not None:
+            bad = wide_dtype_eqns(a.jaxpr)
+            if bad:
+                out.append(_v("R5", a, (
+                    f"f64/c128 values in the traced step: {bad[:4]}"
+                    f"{' …' if len(bad) > 4 else ''}")))
+        if a.hlo_text:
+            wide = sorted({dt for ins in H.iter_instructions(a.hlo_text)
+                           for dt, _ in H.shape_elements(ins.shape)
+                           if dt in _HLO_WIDE})
+            if wide:
+                out.append(_v("R5", a,
+                              f"wide dtypes {wide} in compiled HLO"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# catalog
+# ---------------------------------------------------------------------------
+
+RULES: Tuple[Rule, ...] = (
+    Rule("R1", "retrace audit",
+         "one plan signature == one jaxpr (PlanCompileCache can't fork)",
+         _check_retrace),
+    Rule("R2", "host-sync detector",
+         "no host callbacks/transfers; hot-loop state is donated",
+         _check_host_sync),
+    Rule("R3", "collective audit",
+         "psum_chunks=k => k chunk-width all-reduces, 0 full-width; "
+         "migration broadcast is one fused grouped psum",
+         _check_collectives),
+    Rule("R4", "Pallas VMEM budget",
+         "static tile bytes per pallas_call fit the per-core budget",
+         _check_vmem),
+    Rule("R5", "dtype/f64-leak check",
+         "no f64/c128 in hot-path jaxprs or HLO",
+         _check_dtypes),
+)
+
+RULE_IDS = tuple(r.id for r in RULES)
+
+
+def rules_by_id(ids: Optional[Sequence[str]] = None) -> Tuple[Rule, ...]:
+    if not ids:
+        return RULES
+    wanted = {i.strip().upper() for i in ids}
+    unknown = wanted - set(RULE_IDS)
+    if unknown:
+        raise ValueError(f"unknown rule ids {sorted(unknown)}; "
+                         f"have {RULE_IDS}")
+    return tuple(r for r in RULES if r.id in wanted)

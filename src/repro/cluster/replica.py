@@ -155,3 +155,30 @@ class ReplicaHandle:
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"ReplicaHandle({self.name!r}, state={self.state!r})"
+
+
+# ---------------------------------------------------------------------------
+# static-analysis registration (repro.analysis; see DESIGN_ANALYSIS.md)
+# ---------------------------------------------------------------------------
+
+from repro.analysis import registry as _analysis  # noqa: E402
+
+
+def _an_cluster_tick_cases(env):
+    """The jitted artifact a cluster tick drives IS its replica engine's
+    base serve step — trace it through the ReplicaHandle path so a
+    future replica-specific step wrapper can't dodge the audit. Jaxpr
+    only (the serve_engine_step provider already compiles + alias-checks
+    the same executable; donation here is checked by declaration)."""
+    if not env.heavy:
+        return []
+    handle = ReplicaHandle(
+        "analysis", lambda: ServeEngine("yi-6b", num_slots=2, max_len=8))
+    try:
+        return handle.engine.analysis_cases("cluster_tick",
+                                            compile_hlo=False)
+    finally:
+        handle.close()
+
+
+_analysis.register("cluster_tick", _an_cluster_tick_cases)

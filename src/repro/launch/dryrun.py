@@ -21,7 +21,8 @@ import traceback
 import jax
 
 from repro.config import INPUT_SHAPES, TrainConfig, get_config, list_configs
-from repro.launch import hlo_analysis, steps
+from repro.analysis import hlo as hlo_analysis
+from repro.launch import steps
 from repro.launch.mesh import make_production_mesh
 from repro.sharding import use_mesh
 

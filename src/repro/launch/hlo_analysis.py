@@ -1,312 +1,30 @@
-"""Post-compile HLO analysis: collective-byte accounting + roofline terms.
+"""DEPRECATED shim — the HLO/roofline analysis helpers moved to
+:mod:`repro.analysis.hlo` (the static analyzer's canonical parser,
+with the tuple-shape and ``-done``-line byte-accounting fixes).
 
-The roofline (EXPERIMENTS.md §Roofline) is derived from the compiled
-artifact, not from wall time (no TPU in the container):
-
-  compute    = FLOPs_global  / (chips × peak)
-  memory     = bytes_global  / (chips × HBM_bw)
-  collective = coll_bytes_global / (chips × link_bw)
-
-``cost_analysis()`` reports the per-device module; collective bytes are
-parsed from the per-device HLO text and scaled by the chip count.
+Importing names through this module keeps old callers working but warns;
+new code must import from ``repro.analysis.hlo`` — enforced by the ruff
+TID251 banned-api rule in pyproject.toml (this path is banned outside
+the analysis package).
 """
 from __future__ import annotations
 
-import dataclasses
-import re
-from typing import Dict, Optional
-
-# TPU v5e constants (per chip)
-PEAK_FLOPS = 197e12        # bf16
-HBM_BW = 819e9             # bytes/s
-LINK_BW = 50e9             # bytes/s per ICI link
-
-COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
-                    "all-to-all", "collective-permute")
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_FORWARDED = (
+    "PEAK_FLOPS", "HBM_BW", "LINK_BW", "COLLECTIVE_KINDS",
+    "_DTYPE_BYTES", "_SHAPE_RE", "_shape_bytes", "shape_bytes",
+    "shape_elements", "parse_collectives", "collective_payload_bytes",
+    "collective_overlap_report", "Roofline", "roofline_from_compiled",
+    "model_flops", "analytic_step_flops", "analytic_step_bytes",
+    "analytic_step_collective_bytes")
 
 
-def _shape_bytes(shape_str: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(shape_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-def parse_collectives(hlo_text: str) -> Dict[str, int]:
-    """Sum output-tensor bytes of every collective op in (per-device) HLO.
-
-    Returns {kind: bytes} + {"total": ...}. `-start`/`-done` async pairs are
-    counted once (on `-start`).
-    """
-    out = {k: 0 for k in COLLECTIVE_KINDS}
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s/]*?)\s*"
-                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
-                     r"collective-permute)(-start)?\(", s)
-        if not m:
-            continue
-        shape_str, kind, _ = m.group(1), m.group(2), m.group(3)
-        if re.search(rf"{kind}-done", s.split("=")[1].split("(")[0]):
-            continue
-        out[kind] += _shape_bytes(shape_str)
-    out["total"] = sum(out[k] for k in COLLECTIVE_KINDS)
-    return out
-
-
-_START_RE = re.compile(
-    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\s/]*?)\s*"
-    r"(all-reduce|all-gather|reduce-scatter|collective-permute)-start\(")
-_DONE_RE = re.compile(
-    r"(all-reduce|all-gather|reduce-scatter|collective-permute)-done\("
-    r"\s*%?([\w.\-]+)")
-_SYNC_RE = re.compile(
-    r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s/]*?)\s*"
-    r"(all-reduce|all-gather|reduce-scatter|collective-permute)\(")
-_OPCODE_RE = re.compile(r"=\s*(?:\([^)]*\)|[\w\[\],{}\s/]*?)\s*([\w\-]+)\(")
-
-# instruction kinds that are bookkeeping, not schedulable compute
-_NON_COMPUTE = {"parameter", "constant", "tuple", "get-tuple-element",
-                "bitcast", "after-all", "opt-barrier"}
-
-
-def collective_overlap_report(hlo_text: str) -> dict:
-    """Per-step report of how much collective traffic overlaps compute
-    (ISSUE 7 satellite): walks the scheduled HLO, pairs every
-    ``-start`` with its ``-done``, and counts the compute instructions
-    the scheduler placed BETWEEN them. A pair with no intervening
-    compute is async in name only — its bytes are fully exposed.
-    Synchronous collectives (no -start form) are exposed by definition.
-
-    Returns {"pairs": [...], "total_bytes", "overlapped_bytes",
-    "fraction_overlapped", "async_pairs", "sync_collectives"}."""
-    open_pairs: Dict[str, dict] = {}
-    pairs = []
-    sync_count = 0
-    total = overlapped = 0
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        if " = " not in s and "=" not in s:
-            continue
-        m = _START_RE.match(s)
-        if m:
-            name, shape_str, kind = m.groups()
-            open_pairs[name] = {"kind": kind,
-                                "bytes": _shape_bytes(shape_str),
-                                "intervening_compute_ops": 0}
-            continue
-        md = _DONE_RE.search(s)
-        if md:
-            kind, operand = md.groups()
-            p = open_pairs.pop(operand, None)
-            if p is None:       # -done on a name we never saw start
-                continue
-            p["overlapped"] = p["intervening_compute_ops"] > 0
-            pairs.append(p)
-            total += p["bytes"]
-            if p["overlapped"]:
-                overlapped += p["bytes"]
-            continue
-        ms = _SYNC_RE.match(s)
-        if ms:
-            b = _shape_bytes(ms.group(1))
-            pairs.append({"kind": ms.group(2), "bytes": b,
-                          "intervening_compute_ops": 0,
-                          "overlapped": False})
-            sync_count += 1
-            total += b
-            continue
-        if open_pairs:
-            mo = _OPCODE_RE.search(s)
-            if mo and mo.group(1) not in _NON_COMPUTE:
-                for p in open_pairs.values():
-                    p["intervening_compute_ops"] += 1
-    return {
-        "pairs": pairs,
-        "total_bytes": total,
-        "overlapped_bytes": overlapped,
-        "fraction_overlapped": overlapped / total if total else 0.0,
-        "async_pairs": len(pairs) - sync_count,
-        "sync_collectives": sync_count,
-    }
-
-
-@dataclasses.dataclass
-class Roofline:
-    flops_per_device: float
-    bytes_per_device: float
-    coll_bytes_per_device: float
-    chips: int
-    coll_breakdown: Dict[str, int] = dataclasses.field(default_factory=dict)
-
-    @property
-    def compute_s(self) -> float:
-        return self.flops_per_device / PEAK_FLOPS
-
-    @property
-    def memory_s(self) -> float:
-        return self.bytes_per_device / HBM_BW
-
-    @property
-    def collective_s(self) -> float:
-        return self.coll_bytes_per_device / LINK_BW
-
-    @property
-    def dominant(self) -> str:
-        terms = {"compute": self.compute_s, "memory": self.memory_s,
-                 "collective": self.collective_s}
-        return max(terms, key=terms.get)
-
-    @property
-    def bound_time_s(self) -> float:
-        return max(self.compute_s, self.memory_s, self.collective_s)
-
-    def as_dict(self) -> dict:
-        return {
-            "flops_per_device": self.flops_per_device,
-            "bytes_per_device": self.bytes_per_device,
-            "coll_bytes_per_device": self.coll_bytes_per_device,
-            "chips": self.chips,
-            "compute_s": self.compute_s,
-            "memory_s": self.memory_s,
-            "collective_s": self.collective_s,
-            "dominant": self.dominant,
-            "coll_breakdown": self.coll_breakdown,
-        }
-
-
-def roofline_from_compiled(compiled, chips: int) -> Roofline:
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):      # older API returns [dict]
-        cost = cost[0]
-    flops = float(cost.get("flops", 0.0))
-    nbytes = float(cost.get("bytes accessed", 0.0))
-    coll = parse_collectives(compiled.as_text())
-    return Roofline(flops_per_device=flops, bytes_per_device=nbytes,
-                    coll_bytes_per_device=float(coll["total"]), chips=chips,
-                    coll_breakdown=coll)
-
-
-def model_flops(cfg, shape) -> float:
-    """MODEL_FLOPS: 6·N·D train, 2·N·D prefill, 2·N_active·B decode."""
-    n = cfg.active_param_count() if cfg.moe is not None else cfg.param_count()
-    if shape.kind == "train":
-        return 6.0 * n * shape.global_batch * shape.seq_len
-    if shape.kind == "prefill":
-        return 2.0 * n * shape.global_batch * shape.seq_len
-    return 2.0 * n * shape.global_batch          # one token per sequence
-
-
-def analytic_step_flops(cfg, shape) -> float:
-    """Analytic FLOOR for the step's global FLOPs: parameter matmuls
-    (MODEL_FLOPS) + attention score/value matmuls (which 6·N·D omits).
-
-    Needed because XLA's ``cost_analysis()`` counts a ``while`` body ONCE,
-    not × trip-count — scan-over-layers models under-report by ~L×. The
-    roofline's compute term uses max(HLO, analytic)."""
-    base = model_flops(cfg, shape)
-    if cfg.is_attention_free:
-        return base
-    B, S = shape.global_batch, shape.seq_len
-    hd = cfg.resolved_head_dim
-    H = cfg.num_heads
-    L = cfg.num_layers
-    window = cfg.sliding_window or 0
-    if shape.kind == "decode":
-        ctx = min(window, S) if window else S
-        attn = 4.0 * B * ctx * H * hd * L          # one query vs the cache
-    else:
-        eff = (min(window, S) if window else S / 2.0)   # causal halves it
-        attn = 4.0 * B * S * eff * H * hd * L
-        if shape.kind == "train":
-            attn *= 3.0                            # fwd + 2x bwd
-    return base + attn
-
-
-def analytic_step_bytes(cfg, shape, *, decode_occupancy: float = 1.0) -> float:
-    """Analytic FLOOR for global HBM traffic of one step (same rationale
-    as :func:`analytic_step_flops` — scan bodies are under-counted).
-
-    train:   params f32 × (grad + AdamW moments rw ≈ 10 accesses)
-             + activations (fwd write + bwd read) + logits traffic.
-    prefill: params bf16 + activations + KV-cache write.
-    decode:  params bf16 + KV-cache read (the classic decode bound).
-
-    ``decode_occupancy`` is mean((cur_pos+1)/max_len) over the slots:
-    the fused decode kernel reads only the OCCUPIED cache rows, so the
-    decode memory term scales with actual occupancy, not max_len
-    (ISSUE 7 — the old full-rows assumption overstated the roofline
-    bound for mostly-empty slots). Default 1.0 = every row, which is
-    both the unfused path's real traffic and the old behavior."""
-    P = float(cfg.param_count())
-    B, S = shape.global_batch, shape.seq_len
-    d, L, V = cfg.d_model, cfg.num_layers, max(cfg.vocab_size, 1)
-    tokens = B * (S if shape.kind != "decode" else 1)
-    kv = max(cfg.num_kv_heads, 1) * cfg.resolved_head_dim
-    if cfg.mla is not None:
-        kv = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
-    if cfg.is_attention_free:
-        kv = 2 * (cfg.ssm.expand * d * cfg.ssm.d_state) // max(L, 1) if cfg.ssm else 0
-    if shape.kind == "train":
-        act = tokens * d * L * 16.0          # fwd write + bwd read, f32-ish
-        logits = tokens * V * 4.0 * 3.0
-        return P * 4.0 * 10.0 + act + logits
-    if shape.kind == "prefill":
-        act = tokens * d * L * 8.0
-        cache_w = 2.0 * B * S * kv * 2.0
-        return P * 2.0 + act + cache_w
-    # decode: read the occupied cache rows (or the window for SWA archs)
-    ctx = min(cfg.sliding_window, S) if cfg.sliding_window else S
-    occ = min(max(float(decode_occupancy), 0.0), 1.0)
-    cache_r = 2.0 * B * ctx * occ * kv * 2.0 * L
-    return P * 2.0 + cache_r
-
-
-def analytic_step_collective_bytes(cfg, shape, mesh_shape) -> float:
-    """Analytic FLOOR for GLOBAL collective traffic of one step under the
-    Megatron-1D sharding (same while-body-undercount rationale).
-
-    Per transformer layer: 2 activation all-reduces over TP in fwd
-    (attention out + FFN out) and 2 in bwd; ring all-reduce moves
-    2·(e−1)/e · size through each device. Training adds the DP gradient
-    all-reduce of the TP-sharded params. MoE (expert-parallel) adds the
-    dispatch/return all-to-alls."""
-    e = mesh_shape.get("model", 1)
-    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
-    chips = e * dp
-    if e <= 1:
-        return 0.0
-    B, S = shape.global_batch, shape.seq_len
-    tokens = B * (S if shape.kind != "decode" else 1)
-    d, L = cfg.d_model, cfg.num_layers
-    bytes_el = 4.0 if shape.kind == "train" else 2.0
-    ar_factor = 2.0 * (e - 1) / e
-    n_ar = (4.0 if shape.kind == "train" else 2.0)
-    if cfg.is_attention_free:
-        n_ar /= 2.0                       # single mixer psum per layer
-    # activation all-reduces run per TP group on data-local tokens;
-    # global volume = per-device volume × chips
-    act_coll_global = n_ar * L * ar_factor * (tokens / dp) * d * bytes_el * chips
-    total = act_coll_global
-    if shape.kind == "train":
-        p_local = cfg.param_count() / e
-        total += ar_factor * p_local * 4.0 * chips     # DP grad all-reduce
-    if cfg.moe is not None and cfg.moe.expert_sharding == "expert":
-        # dispatch + combine all-to-alls of the grouped token buffers
-        k = cfg.moe.top_k * cfg.moe.capacity_factor
-        total += 2.0 * k * tokens * d * bytes_el * (3.0 if shape.kind == "train" else 1.0)
-    return total
+def __getattr__(name: str):
+    if name in _FORWARDED:
+        import warnings
+        warnings.warn(
+            f"repro.launch.hlo_analysis.{name} is deprecated; import it "
+            "from repro.analysis.hlo", DeprecationWarning, stacklevel=2)
+        from repro.analysis import hlo
+        return getattr(hlo, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -1,92 +1,24 @@
-"""HLO inspection helpers for the §Perf loop: with no wall-clock profiler
-(no TPU), the "profile" is the compiled HLO — these helpers surface the
-patterns the methodology hunts for:
-
-* redundant collectives (same kind+shape collected repeatedly outside the
-  layer scan — a tensor gathered twice),
-* reshape/transpose churn between sharded ops (layout mismatch),
-* remat-inserted recompute (duplicate fusion bodies).
-
-    PYTHONPATH=src python -m repro.launch.hlo_inspect --arch yi-6b \
-        --shape train_4k
+"""DEPRECATED shim — the HLO inspection helpers moved to
+:mod:`repro.analysis.hlo`; importing through this module warns. The
+``python -m repro.launch.hlo_inspect`` CLI keeps working (it reports on
+a production-mesh compile of a chosen step).
 """
 from __future__ import annotations
 
-import collections
-import re
-from typing import Dict, List, Tuple
-
-from repro.launch.hlo_analysis import COLLECTIVE_KINDS, _shape_bytes
-
-_OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s/]*?)\s*"
-    r"([\w\-]+)\(")
+_FORWARDED = ("collective_histogram", "find_redundant_collectives",
+              "op_histogram", "reshape_churn", "report")
 
 
-def collective_histogram(hlo_text: str) -> List[Tuple[str, str, int, int]]:
-    """[(kind, shape, count, total_bytes)] sorted by total bytes desc."""
-    hist: Dict[Tuple[str, str], List[int]] = collections.defaultdict(
-        lambda: [0, 0])
-    for line in hlo_text.splitlines():
-        m = _OP_RE.match(line.strip())
-        if not m:
-            continue
-        shape_str, op = m.group(1), m.group(2)
-        base = op.replace("-start", "")
-        if base not in COLLECTIVE_KINDS or op.endswith("-done"):
-            continue
-        key = (base, shape_str.strip())
-        hist[key][0] += 1
-        hist[key][1] += _shape_bytes(shape_str)
-    rows = [(k, s, c, b) for (k, s), (c, b) in hist.items()]
-    return sorted(rows, key=lambda r: -r[3])
-
-
-def find_redundant_collectives(hlo_text: str, min_count: int = 2
-                               ) -> List[Tuple[str, str, int, int]]:
-    """Same-kind same-shape collectives appearing >= min_count times in the
-    TOP-LEVEL computation (outside while bodies) — candidates for CSE or
-    hoisting."""
-    # isolate the entry computation (ENTRY ... { ... })
-    m = re.search(r"ENTRY[^{]*\{(.*)", hlo_text, re.S)
-    body = m.group(1) if m else hlo_text
-    return [r for r in collective_histogram(body) if r[2] >= min_count]
-
-
-def op_histogram(hlo_text: str) -> Dict[str, int]:
-    """Opcode → count over the whole module (entry + nested computations).
-
-    The kernel-backward acceptance check reads this: the pruned-matmul
-    gradient path must stay free of ``gather``/``scatter`` (the XLA
-    zero-imputation path materializes both)."""
-    counts = collections.Counter()
-    for line in hlo_text.splitlines():
-        m = _OP_RE.match(line.strip())
-        if m:
-            counts[m.group(2)] += 1
-    return dict(counts)
-
-
-def reshape_churn(hlo_text: str) -> Dict[str, int]:
-    counts = collections.Counter()
-    for line in hlo_text.splitlines():
-        m = _OP_RE.match(line.strip())
-        if m and m.group(2) in ("reshape", "transpose", "copy",
-                                "all-to-all"):
-            counts[m.group(2)] += 1
-    return dict(counts)
-
-
-def report(hlo_text: str, top: int = 10) -> str:
-    lines = ["== collective histogram (top by bytes) =="]
-    for kind, shape, count, nbytes in collective_histogram(hlo_text)[:top]:
-        lines.append(f"  {kind:20s} ×{count:<4d} {nbytes/2**20:8.1f} MiB  {shape[:60]}")
-    red = find_redundant_collectives(hlo_text)
-    lines.append(f"== redundant top-level collectives: {len(red)} ==")
-    for kind, shape, count, nbytes in red[:top]:
-        lines.append(f"  {kind:20s} ×{count:<4d} {nbytes/2**20:8.1f} MiB  {shape[:60]}")
-    lines.append(f"== layout churn: {reshape_churn(hlo_text)} ==")
-    return "\n".join(lines)
+def __getattr__(name: str):
+    if name in _FORWARDED:
+        import warnings
+        warnings.warn(
+            f"repro.launch.hlo_inspect.{name} is deprecated; import it "
+            "from repro.analysis.hlo", DeprecationWarning, stacklevel=2)
+        from repro.analysis import hlo
+        return getattr(hlo, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
 
 
 def main() -> None:
@@ -97,6 +29,7 @@ def main() -> None:
 
     import jax
 
+    from repro.analysis.hlo import report
     from repro.config import INPUT_SHAPES, TrainConfig, get_config
     from repro.launch import steps
     from repro.launch.mesh import make_production_mesh

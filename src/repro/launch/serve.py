@@ -861,6 +861,35 @@ class ServeEngine:
                                    else -1)
         return out
 
+    def analysis_cases(self, step: str = "serve_engine_step", *,
+                       compile_hlo: bool = True):
+        """Static-analysis TraceCases for THIS engine's fused base step
+        (repro.analysis): the exact jitted executable ``step()`` drives,
+        with the KV cache declared hot state (argnum 1, donated) so R2
+        proves the donation actually aliased in the compiled module."""
+        from repro.analysis.registry import TraceCase
+        sds = jax.ShapeDtypeStruct
+
+        def shape_of(tree):
+            return jax.tree.map(lambda a: sds(a.shape, a.dtype), tree)
+
+        B, C = self.num_slots, self.prefill_chunk
+        args = (shape_of(self.params), shape_of(self.cache),
+                sds((C, B), jnp.int32), sds((C, B), jnp.int32),
+                sds((C, B), jnp.float32), sds((B,), jnp.float32))
+        if self.paging is not None:
+            args += (sds((B, self.paging.pages_per_slot), jnp.int32),)
+        if self._base_plan_slots:
+            raise NotImplementedError(
+                "analysis_cases covers the base (dense) serve step; "
+                "controlled plan-slot steps are traced via the "
+                "serve_decode_step provider")
+        return [TraceCase(
+            step=step, name=f"base_tp{self.tp}", fn=self._base_step,
+            args=args, mesh=self.mesh, donate_argnums=(1,),
+            state_argnums=(1,), compile_hlo=compile_hlo,
+            signature=f"serve_base_tp{self.tp}")]
+
 
 #: The well-defined zero-traffic stats record: what a drained or
 #: never-routed replica reports. Every key the non-empty record carries,
@@ -1053,6 +1082,27 @@ def main():
           f"{stats['p50_ms']:.2f}/{stats['p95_ms']:.2f}/"
           f"{stats['p99_ms']:.2f} ms, {stats['tok_per_s']:.1f} tok/s")
     print(f"trace counts: {eng.trace_counts()}")
+
+
+# ---------------------------------------------------------------------------
+# static-analysis registration (repro.analysis; see DESIGN_ANALYSIS.md)
+# ---------------------------------------------------------------------------
+
+from repro.analysis import registry as _analysis  # noqa: E402
+
+
+def _an_serve_engine_cases(env):
+    if not env.heavy:
+        return []
+    tp = 2 if env.max_devices >= 2 else 1
+    eng = ServeEngine("yi-6b", num_slots=2, max_len=8, tp=tp)
+    try:
+        return eng.analysis_cases(compile_hlo=env.compile_hlo)
+    finally:
+        eng.close()
+
+
+_analysis.register("serve_engine_step", _an_serve_engine_cases)
 
 
 if __name__ == "__main__":

@@ -352,3 +352,106 @@ def build_step_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                             use_kernel=use_kernel,
                             fused_attention=fused_attention,
                             psum_chunks=psum_chunks)
+
+
+# ---------------------------------------------------------------------------
+# static-analysis registration (repro.analysis; see DESIGN_ANALYSIS.md)
+# ---------------------------------------------------------------------------
+
+from repro.analysis import registry as _analysis  # noqa: E402
+
+
+def _an_smoke():
+    import numpy as np
+    from repro.config import get_config, smoke_variant
+    return np, smoke_variant(get_config("yi-6b"))
+
+
+def _an_mesh(e: int):
+    import numpy as np
+    return Mesh(np.array(jax.devices()[:e]).reshape(1, e),
+                ("data", "model"))
+
+
+def _an_control_static(e: int, spelling: str) -> PlanStatic:
+    """Two spellings of the SAME canonical plan (mig_shed vs the legacy
+    mig_blocks scalar) — R1 proves they trace identically, which is what
+    makes PlanCompileCache's canonical-signature keying sound."""
+    kw = dict(buckets=(0.0, 0.25, 0.5), block_size=8, tp_size=e)
+    if spelling == "mig_shed":
+        return PlanStatic(mig_shed=(2,), **kw)
+    return PlanStatic(mig_blocks=2, **kw)
+
+
+def _an_train_cases(env):
+    np, cfg = _an_smoke()
+    shape = ShapeConfig("an_train", 16, 4, "train")
+    mesh1 = _an_mesh(1)
+    fn, args, in_sh, out_sh = build_train_step(cfg, shape, mesh1,
+                                               TrainConfig())
+    cases = [_analysis.TraceCase(
+        step="train_step", name="dense_tp1", fn=fn, args=args, mesh=mesh1,
+        in_shardings=in_sh, out_shardings=out_sh,
+        compile_hlo=env.compile_hlo, signature="dense_tp1")]
+    e = min(4, env.max_devices)
+    if e >= 2:
+        mesh = _an_mesh(e)
+
+        def build(spelling):
+            st = _an_control_static(e, spelling)
+            f, a, _, _ = build_train_step(cfg, shape, mesh, TrainConfig(),
+                                          control_static=st)
+            return st, f, a
+
+        st_a, fn_a, args_a = build("mig_shed")
+        _, fn_b, args_b = build("mig_blocks")
+        cases.append(_analysis.TraceCase(
+            step="train_step", name=f"controlled_tp{e}", fn=fn_a,
+            args=args_a, mesh=mesh,
+            signature=st_a.canonical().signature_str(),
+            retrace=(("mig_blocks-spelling", fn_b, args_b),)))
+    return cases
+
+
+def _an_prefill_cases(env):
+    np, cfg = _an_smoke()
+    mesh1 = _an_mesh(1)
+    fn, args, in_sh, out_sh = build_prefill_step(
+        cfg, ShapeConfig("an_prefill", 32, 4, "prefill"), mesh1)
+    return [_analysis.TraceCase(
+        step="prefill_step", name="dense_tp1", fn=fn, args=args,
+        mesh=mesh1, signature="prefill_tp1")]
+
+
+def _an_decode_cases(env):
+    np, cfg = _an_smoke()
+    shape = ShapeConfig("an_decode", 16, 2, "decode")
+    mesh1 = _an_mesh(1)
+    fn, args, in_sh, out_sh = build_serve_step(cfg, shape, mesh1)
+    cases = [_analysis.TraceCase(
+        step="serve_decode_step", name="dense_tp1", fn=fn, args=args,
+        mesh=mesh1, in_shardings=in_sh, compile_hlo=env.compile_hlo,
+        signature="decode_dense_tp1")]
+    e = min(4, env.max_devices)
+    if e >= 2:
+        mesh = _an_mesh(e)
+
+        def build(spelling):
+            st = _an_control_static(e, spelling)
+            f, a, _, _ = build_serve_step(cfg, shape, mesh,
+                                          control_static=st)
+            return st, f, a
+
+        st_a, fn_a, args_a = build("mig_shed")
+        _, fn_b, args_b = build("mig_blocks")
+        cases.append(_analysis.TraceCase(
+            step="serve_decode_step", name=f"controlled_tp{e}", fn=fn_a,
+            args=args_a, mesh=mesh,
+            signature=st_a.canonical().signature_str(),
+            retrace=(("mig_blocks-spelling", fn_b, args_b),)))
+    return cases
+
+
+_analysis.register("train_step", _an_train_cases)
+_analysis.register("prefill_step", _an_prefill_cases)
+_analysis.register("serve_decode_step", _an_decode_cases)

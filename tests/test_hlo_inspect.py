@@ -1,7 +1,9 @@
-"""HLO inspector unit tests (string-level, no compile)."""
-from repro.launch.hlo_inspect import (collective_histogram,
-                                      find_redundant_collectives,
-                                      reshape_churn)
+"""HLO inspector unit tests (string-level, no compile), now against the
+canonical parser in repro.analysis.hlo (the launch/hlo_inspect and
+launch/hlo_analysis modules are deprecation shims)."""
+from repro.analysis.hlo import (collective_histogram, collective_payload_bytes,
+                                find_redundant_collectives, parse_collectives,
+                                reshape_churn)
 
 FAKE_HLO = """
 HloModule jit_step
@@ -38,6 +40,61 @@ def test_reshape_churn():
     assert churn["copy"] == 1
 
 
+# ---- ISSUE 10 satellite: tuple-shaped collective outputs & -done lines ----
+
+# async all-reduce in the canonical tuple form: (operand alias, result).
+# The payload crosses the wire ONCE — byte accounting must not double it.
+TUPLE_ASYNC_HLO = """
+HloModule jit_step
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ars = (f32[128,256]{1,0}, f32[128,256]{1,0}) all-reduce-start(%p0), to_apply=%add
+  %ard = f32[128,256]{1,0} all-reduce-done(%ars)
+  ROOT %out = f32[128,256]{1,0} copy(%ard)
+}
+"""
+
+# grouped (fused multi-operand) SYNC all-reduce: every element is a
+# distinct payload and every one counts.
+GROUPED_SYNC_HLO = """
+HloModule jit_step
+ENTRY main {
+  %a = f32[8,8]{1,0} parameter(0)
+  %b = f32[4,4]{1,0} parameter(1)
+  %g = (f32[8,8]{1,0}, f32[4,4]{1,0}) all-reduce(%a, %b), to_apply=%add
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%g), index=0
+}
+"""
+
+
+def test_async_tuple_start_counted_once():
+    got = parse_collectives(TUPLE_ASYNC_HLO)
+    assert got["all-reduce"] == 128 * 256 * 4          # NOT 2x
+    assert got["total"] == 128 * 256 * 4
+
+
+def test_done_lines_contribute_zero_even_with_result_tuples():
+    assert collective_payload_bytes(
+        "f32[128,256]{1,0}", "all-reduce-done") == 0
+    # a -done whose result is itself a tuple (grouped async) still
+    # contributes nothing — the pair was priced at -start
+    assert collective_payload_bytes(
+        "(f32[64,56]{1,0}, f32[56,64]{1,0})", "all-reduce-done") == 0
+
+
+def test_grouped_sync_tuple_sums_all_elements():
+    got = parse_collectives(GROUPED_SYNC_HLO)
+    assert got["all-reduce"] == (8 * 8 + 4 * 4) * 4
+
+
+def test_asymmetric_start_tuple_counts_every_element():
+    # halves don't mirror -> not the canonical (operand, result) aliasing
+    # form; count everything rather than guess
+    assert collective_payload_bytes(
+        "(f32[8,8]{1,0}, f32[4,4]{1,0})", "all-reduce-start") \
+        == (8 * 8 + 4 * 4) * 4
+
+
 # ---- ISSUE 7: collective-overlap report & occupancy-aware decode bytes ----
 
 ASYNC_HLO = """
@@ -57,7 +114,7 @@ ENTRY main {
 
 
 def test_collective_overlap_report():
-    from repro.launch.hlo_analysis import collective_overlap_report
+    from repro.analysis.hlo import collective_overlap_report
     rep = collective_overlap_report(ASYNC_HLO)
     assert rep["async_pairs"] == 2
     assert rep["sync_collectives"] == 1
@@ -71,8 +128,8 @@ def test_collective_overlap_report():
 
 
 def test_decode_bytes_scale_with_occupancy():
+    from repro.analysis.hlo import analytic_step_bytes
     from repro.config import INPUT_SHAPES, get_config
-    from repro.launch.hlo_analysis import analytic_step_bytes
     from repro.launch.specs import effective_model_cfg
     shape = next(s for s in INPUT_SHAPES.values() if s.kind == "decode")
     cfg = effective_model_cfg(get_config("yi-6b"), shape)

@@ -6,12 +6,13 @@ gather/scatter ops (the pruning rides the Pallas BlockSpec index maps).
 The XLA zero-imputation path is compiled alongside as a positive control:
 it MUST show gathers, proving the detector sees them when present.
 
-ISSUE 7 adds the chunked-epilogue check: with ``psum_chunks=k`` the
-controlled projection must compile to k independent chunk-width
-all-reduces — async-overlappable by the latency-hiding scheduler —
-and NO single fat full-width all-reduce (the positive control with
-``psum_chunks=1`` shows exactly that fat one).  Multi-device HLO is
-compiled in a subprocess (the main pytest process keeps 1 device).
+ISSUE 7 adds the chunked-epilogue check; since ISSUE 10 both it and the
+op histograms run through the shared static-analysis engine
+(repro.analysis): the chunked invariant is the R3 rule's own
+``audit_chunked_all_reduce`` over the analyzer's ``micro_collective``
+cases — one source of truth with ``python -m repro.analysis --check``.
+Multi-device HLO is compiled in a subprocess (the main pytest process
+keeps 1 device).
 """
 import os
 import subprocess
@@ -22,9 +23,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.hlo import op_histogram
 from repro.core import resizing
 from repro.kernels import ops
-from repro.launch.hlo_inspect import op_histogram
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -97,44 +98,38 @@ def test_fused_ffn_forward_is_one_fusion_no_hidden_roundtrip():
 
 
 def test_chunked_psum_hlo_splits_the_epilogue_all_reduce():
-    """ISSUE 7: with psum_chunks=4 the controlled row-projection epilogue
-    compiles to 4 independent chunk-width all-reduces and NO full-width
+    """ISSUE 7 via the ISSUE 10 engine: the analyzer's micro_collective
+    cases ARE the chunked-projection harness — with psum_chunks=4 the
+    compiled epilogue holds 4 chunk-width all-reduces and NO full-width
     one; the psum_chunks=1 positive control shows exactly the single fat
-    all-reduce the chunking is meant to break up."""
+    all-reduce. Numerics are checked alongside (y == x @ w)."""
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent("""
-        import json, re
+        import json
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import Mesh
-        from repro.core.workload import PlanStatic
-        from repro.layers.tp_linear import ControlContext, controlled_proj
+        from repro.analysis import engine, micro, rules
+        from repro.analysis.registry import CaseEnv
 
-        e, B, S, d, N, block = 8, 2, 8, 128, 256, 8
-        nb_loc = (d // e) // block
-        mesh = Mesh(np.array(jax.devices()).reshape(1, e), ("data", "model"))
+        env = CaseEnv(max_devices=jax.device_count())
+        cases = {c.name: c for c in micro._collective_cases(env)}
         rng = np.random.default_rng(0)
-        x = jnp.array(rng.standard_normal((B, S, d)), jnp.float32)
-        w = jnp.array(rng.standard_normal((d, N)) * .1, jnp.float32)
-        st = PlanStatic(buckets=(0.0, 0.25, 0.5), block_size=block,
-                        mig_blocks=0, tp_size=e)
-        pri = jnp.tile(jnp.arange(nb_loc, dtype=jnp.int32)[None], (e, 1))
+        x = jnp.array(rng.standard_normal((2, 8, 128)), jnp.float32)
+        w = jnp.array(rng.standard_normal((128, 256)) * .1, jnp.float32)
 
-        def run(k):
-            ctx = ControlContext(mesh=mesh, axis="model", static=st,
-                                 bucket_by_rank=jnp.zeros((e,), jnp.int32),
-                                 mig_src=jnp.array(-1, jnp.int32),
-                                 pri={"proj": pri}, psum_chunks=k)
-            fn = jax.jit(lambda x_, w_: controlled_proj(
-                x_, w_, ctx, "proj", split="row"))
-            y = fn(x, w)
-            assert np.allclose(np.asarray(y), np.asarray(x @ w), atol=1e-3)
-            hlo = fn.lower(x, w).compile().as_text()
-            # shapes of every all-reduce / all-reduce-start (NOT -done)
-            return [m.group(1) for line in hlo.splitlines()
-                    for m in [re.search(r"f32\\[([0-9,]*)\\]", line)]
-                    if m and re.search(r"all-reduce(?:-start)?\\(", line)]
-
-        print(json.dumps({"k1": run(1), "k4": run(4)}))
+        res = {}
+        for name in ("proj_psum_chunks1", "proj_psum_chunks4"):
+            c = cases[name]
+            a = engine.trace_artifact(c, env)
+            assert not a.error, a.error
+            exp = c.expect["chunked_all_reduce"]
+            msgs, observed = rules.audit_chunked_all_reduce(
+                a.hlo_text, exp["chunks"], exp["full_dims"],
+                exp["chunk_dims"])
+            y = jax.jit(c.fn)(x, w)
+            assert np.allclose(np.asarray(y), np.asarray(x @ w),
+                               atol=1e-3)
+            res[name] = {"violations": msgs, "observed": observed}
+        print(json.dumps(res))
         """)],
         capture_output=True, text=True, timeout=420,
         env={**os.environ,
@@ -143,9 +138,12 @@ def test_chunked_psum_hlo_splits_the_epilogue_all_reduce():
     assert out.returncode == 0, \
         f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
     import json
-    shapes = json.loads(out.stdout.strip().splitlines()[-1])
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    # the rule itself is clean on both cases
+    assert res["proj_psum_chunks1"]["violations"] == [], res
+    assert res["proj_psum_chunks4"]["violations"] == [], res
     # positive control: one fat full-width [B, S, N] all-reduce
-    assert shapes["k1"] == ["2,8,256"], shapes
+    assert res["proj_psum_chunks1"]["observed"] == ["2,8,256"], res
     # chunked: 4 chunk-width all-reduces, and the fat one is GONE
-    assert len(shapes["k4"]) == 4, shapes
-    assert all(s == "2,8,64" for s in shapes["k4"]), shapes
+    assert len(res["proj_psum_chunks4"]["observed"]) == 4, res
+    assert all(s == "2,8,64" for s in res["proj_psum_chunks4"]["observed"]), res
